@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing and CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def time_us(fn: Callable, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows and prints them."""
+
+    def __init__(self, table: str):
+        self.table = table
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str) -> None:
+        self.rows.append(f"{self.table}/{name},{us_per_call:.2f},{derived}")
+
+    def emit(self) -> None:
+        for r in self.rows:
+            print(r)

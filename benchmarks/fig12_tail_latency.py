@@ -1,0 +1,31 @@
+"""Paper Fig. 12: mean and p99 access latency per config (memcached)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv
+from repro.core import simulator
+from repro.core.manager import make_manager
+
+THRESHOLDS = {"C": 50.0, "M": 200.0, "A": 800.0}
+CONFIGS = ["2T-C", "2T-M", "2T-A", "6T-WF-C", "6T-WF-M", "6T-WF-A",
+           "6T-AM-0.9", "6T-AM-0.5", "6T-AM-0.1"]
+
+
+def run(csv: Csv, windows: int = 20) -> None:
+    wl = simulator.gaussian_kv(n_regions=2048, accesses_per_window=500_000,
+                               name="memcached")
+    for cfg in CONFIGS:
+        mgr = make_manager(cfg, wl.n_regions, thresholds=THRESHOLDS)
+        r = simulator.simulate(wl, mgr, windows=windows, seed=1)
+        csv.add(cfg, r.mean_access_us,
+                f"p99_us={r.p99_access_us:.2f};mean_us={r.mean_access_us:.3f}")
+
+
+def main() -> None:
+    csv = Csv("fig12")
+    run(csv)
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig. 13: TS-Daemon CPU tax (telemetry + model + migration) per
+workload and model, as % of runtime."""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv
+from repro.core import simulator
+from repro.core.manager import make_manager
+from benchmarks.fig8_frontier import THRESHOLDS, workloads
+
+
+def run(csv: Csv, windows: int = 16) -> None:
+    for wl in workloads():
+        for cfg in ("2T-M", "6T-WF-M", "6T-AM-0.5"):
+            mgr = make_manager(cfg, wl.n_regions, thresholds=THRESHOLDS)
+            r = simulator.simulate(wl, mgr, windows=windows, seed=1)
+            csv.add(f"{wl.name}-{cfg}", mgr.total_daemon_s / windows * 1e6,
+                    f"tax_pct={r.daemon_tax_pct:.2f}")
+
+
+def main() -> None:
+    csv = Csv("fig13")
+    run(csv)
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

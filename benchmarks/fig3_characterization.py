@@ -1,0 +1,62 @@
+"""Paper Fig. 3 + Table 1: characterize the 12 software-defined compressed
+tiers on two data distributions (the nci-vs-dickens analogue):
+
+  * ``smooth``  — low-entropy KV-like data (decaying spectrum, highly
+    quantization-friendly; nci analogue),
+  * ``heavy``   — heavy-tailed activations (hard to compress; dickens).
+
+Per tier: modeled access latency (2MB region), effective compression ratio,
+unit cost, measured reconstruction error, and measured CPU codec wall time
+(directional only — the target is TPU).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, time_us
+from repro.core import codecs, tiers
+
+
+def _datasets(n=1 << 16, seed=0):
+    rng = np.random.default_rng(seed)
+    # smooth: sum of a few slow sinusoids + small noise (high compressibility)
+    t = np.linspace(0, 30, n)
+    smooth = sum(np.sin(f * t + p) / f for f, p in [(1, 0), (2.3, 1), (4.1, 2)])
+    smooth = smooth + 0.01 * rng.normal(size=n)
+    # heavy: student-t heavy-tailed (outliers hurt absmax codecs)
+    heavy = rng.standard_t(df=3, size=n)
+    return {"smooth": jnp.asarray(smooth, jnp.float32),
+            "heavy": jnp.asarray(heavy, jnp.float32)}
+
+
+def run(csv: Csv) -> None:
+    data = _datasets()
+    region = 1 << 20  # 2MB source / 2B per elem
+    for t in tiers.characterized():
+        lat_us = t.access_latency_s(region) * 1e6
+        ratio = t.effective_ratio(region)
+        usd = t.usd_per_source_byte(region) * (1 << 30)
+        for name, x in data.items():
+            err = float(codecs.roundtrip_error(t.codec_name, x))
+            codec = codecs.CODECS[t.codec_name]
+            enc = jax.jit(lambda v: codec.encode(v).payload)
+            wall = time_us(lambda: jax.block_until_ready(enc(x)), iters=3)
+            csv.add(
+                f"{t.tid}-{t.name}-{name}",
+                wall,
+                f"lat_us={lat_us:.1f};ratio={ratio:.2f};usd_gb={usd:.2f};err={err:.4f}",
+            )
+
+
+def main() -> None:
+    csv = Csv("fig3")
+    run(csv)
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 1 + Fig. 8: the perf-vs-TCO frontier — 2T-C/M/A vs 6T-WF-C/M/A
+vs 6T-AM-{0.9,0.5,0.1} on the five paper-analogue workloads."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv
+from repro.core import simulator
+from repro.core.manager import make_manager
+
+CONFIGS = [
+    "2T-C", "2T-M", "2T-A",
+    "6T-WF-C", "6T-WF-M", "6T-WF-A",
+    "6T-AM-0.9", "6T-AM-0.5", "6T-AM-0.1",
+]
+THRESHOLDS = {"C": 50.0, "M": 200.0, "A": 800.0}
+
+
+def workloads():
+    return [
+        simulator.gaussian_kv(n_regions=2048, accesses_per_window=500_000,
+                              name="memcached", sigma_frac=0.08),
+        simulator.gaussian_kv(n_regions=2048, accesses_per_window=500_000,
+                              name="redis", sigma_frac=0.12, drift_frac=0.02),
+        simulator.rotating_frontier(n_regions=2048, accesses_per_window=500_000,
+                                    name="bfs", advance_frac=0.08),
+        simulator.rotating_frontier(n_regions=2048, accesses_per_window=500_000,
+                                    name="pagerank", advance_frac=0.02,
+                                    frontier_frac=0.25),
+        simulator.uniform_scan(n_regions=4096, accesses_per_window=500_000,
+                               name="xsbench"),
+    ]
+
+
+def run(csv: Csv, windows: int = 24) -> None:
+    for wl in workloads():
+        for cfg in CONFIGS:
+            mgr = make_manager(cfg, wl.n_regions, thresholds=THRESHOLDS)
+            t0 = time.perf_counter()
+            r = simulator.simulate(wl, mgr, windows=windows, seed=1)
+            wall = (time.perf_counter() - t0) * 1e6 / windows
+            csv.add(
+                f"{wl.name}-{cfg}",
+                wall,
+                f"slowdown_pct={r.slowdown_pct:.2f};tco_savings_pct={r.tco_savings_pct:.2f}",
+            )
+
+
+def main() -> None:
+    csv = Csv("fig8")
+    run(csv)
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

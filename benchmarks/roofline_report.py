@@ -1,0 +1,38 @@
+"""Roofline summary over the dry-run artifacts (EXPERIMENTS.md §Roofline
+reads from the same JSONs; this prints the CSV form)."""
+
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks.common import Csv
+
+
+def run(csv: Csv, pattern: str = "experiments/dryrun/*.json") -> None:
+    files = sorted(glob.glob(pattern))
+    if not files:
+        csv.add("no-dryrun-artifacts", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        d = json.load(open(f))
+        step_s = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        frac = 0.0
+        if step_s > 0:
+            frac = d["model_flops"] / d["chips"] / step_s / 197e12
+        csv.add(
+            f"{d['arch']}-{d['shape']}-{d['mesh']}",
+            step_s * 1e6,
+            f"bottleneck={d['bottleneck']};useful={d['useful_ratio']:.3f};"
+            f"roofline_frac={frac:.4f};fits={d['fits_hbm']}",
+        )
+
+
+def main() -> None:
+    csv = Csv("roofline")
+    run(csv)
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one table per paper figure. Prints
+``name,us_per_call,derived`` CSV rows.
+
+  fig3       tier characterization (latency/ratio/cost/error x 2 datasets)
+  fig8       2T vs 6T-WF vs 6T-AM perf/TCO frontier (5 workloads)
+  fig9_10_11 placement distributions + TCO timeline
+  fig12      tail latency (mean + p99)
+  fig13      daemon tax
+  serving    tiered-KV engine vs dense decode on a real model
+  roofline   per-(arch x shape x mesh) dry-run roofline summary
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import Csv
+from benchmarks import (
+    fig3_characterization,
+    fig8_frontier,
+    fig9_placement,
+    fig12_tail_latency,
+    fig13_daemon_tax,
+    roofline_report,
+    serving_tiered,
+)
+
+TABLES = {
+    "fig3": fig3_characterization.run,
+    "fig8": fig8_frontier.run,
+    "fig9_10_11": fig9_placement.run,
+    "fig12": fig12_tail_latency.run,
+    "fig13": fig13_daemon_tax.run,
+    "serving": serving_tiered.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated table names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(TABLES)
+    print("name,us_per_call,derived")
+    for name in names:
+        csv = Csv(name)
+        TABLES[name](csv)
+        csv.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end serving driver: batched requests through the tiered-KV engine.
+
+The engine decodes against software-defined compressed KV tiers (warm int8 /
+cold int4 device pools + host tiers), with per-page attention-mass telemetry
+feeding the TierScape analytical placement model every window. Prints the
+paper's metrics: TCO savings, placement distribution, migrations, daemon tax.
+
+    PYTHONPATH=src python examples/serve_tiered_kv.py --requests 4
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.configs.base import TierScapeRunConfig
+from repro.models import Model
+from repro.serving import TieredEngine
+from repro.serving.kv_cache import COLD, HOST4, HOST8, WARM
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2_1_2b",
+                    help="any smoke arch with attention")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--alpha", type=float, default=0.3,
+                    help="TierScape knob: 1=perf, 0=max TCO savings")
+    ap.add_argument("--policy", default="analytical",
+                    choices=["analytical", "waterfall"])
+    ap.add_argument("--slots", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = TieredEngine(
+        model, params,
+        batch_slots=args.slots, page_tokens=8,
+        max_seq_len=args.prompt_len + args.new_tokens + 32,
+        recent_window=16,
+        ts=TierScapeRunConfig(enabled=True, policy=args.policy,
+                              alpha=args.alpha, window_steps=8),
+    )
+
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab_size, args.prompt_len),
+                       max_new_tokens=args.new_tokens)
+            for _ in range(args.requests)]
+
+    t0 = time.time()
+    stats = eng.run(max_steps=args.requests * args.new_tokens * 2)
+    wall = time.time() - t0
+
+    print(f"arch={args.arch} policy={args.policy} alpha={args.alpha}")
+    print(f"completed {stats.completed}/{args.requests} requests in "
+          f"{stats.steps} engine steps ({wall:.1f}s wall)")
+    print(f"windows={stats.windows} migrations={stats.migrations} "
+          f"daemon_s={stats.daemon_s:.2f}")
+    pl = eng.cache.manager.placement[eng.cache._page_exists]
+    hist = np.bincount(pl, minlength=5)
+    names = {0: "dram", WARM: "warm-int8-hbm", COLD: "cold-int4-hbm",
+             HOST8: "host-int8", HOST4: "host-int4"}
+    live = ", ".join(f"{names[i]}={hist[i]}" for i in range(5) if hist[i])
+    print("live page placement:", live or "(all requests done; pages freed)")
+    print(f"peak KV memory TCO savings vs uncompressed HBM: "
+          f"{stats.tco_savings_pct:.1f}%")
+    for r in reqs[:2]:
+        print(f"req{r.rid}: {r.out_tokens[:12]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""End-to-end training driver: a small dense LM trained for a few hundred
+steps with the full production stack —
+
+  * synthetic packed corpus via the sharded HostLoader (prefetch +
+    straggler mitigation),
+  * TierScape tiered optimizer state: embedding/lm_head Adam moments live
+    in an int8 compressed tier (µ-law dynamic code) — the paper's
+    warm-data-compression idea applied to training state,
+  * cosine schedule + global-norm clipping,
+  * atomic async checkpointing with resume,
+  * (optional) int8 error-feedback gradient compression, exercising the
+    cross-pod wire format.
+
+Defaults are CPU-friendly (~25M params, 200 steps). Scale up with flags on
+real hardware (e.g. --d-model 768 --layers 12 for ~100M).
+
+    PYTHONPATH=src python examples/train_tiered_lm.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, HostLoader
+from repro.models import Model
+from repro.optim import adamw, grad_compress, tiered_adam
+from repro.optim.adamw import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 error-feedback roundtrip on gradients")
+    ap.add_argument("--moment-codec", default="int8",
+                    choices=["none", "bf16", "int8", "int4"])
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="tiered_lm", family="dense",
+        n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 2),
+        n_kv_heads=max(args.d_model // 128, 1),
+        d_ff=args.d_model * 4, vocab_size=args.vocab, act="swiglu",
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params "
+          f"({cfg.n_layers}L x {cfg.d_model}d, vocab {cfg.vocab_size})")
+
+    policy = tiered_adam.default_policy(params, cold_codec=args.moment_codec)
+    opt_state = tiered_adam.init(params, policy)
+    f32_bytes = sum(x.size * 8 for x in jax.tree.leaves(params))  # m+v f32
+    print(f"optimizer moments: {tiered_adam.moment_bytes(opt_state)/1e6:.1f}MB "
+          f"(f32 baseline {f32_bytes/1e6:.1f}MB) — embeddings in the "
+          f"{args.moment_codec} tier")
+
+    opt_cfg = AdamWConfig(lr=args.lr, schedule=adamw.cosine_schedule(20, args.steps))
+    residual = grad_compress.init_residual(params) if args.grad_compress else None
+
+    @jax.jit
+    def train_step(params, opt_state, resid, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        if resid is not None:
+            flat_g, treedef = jax.tree.flatten(grads)
+            flat_r = treedef.flatten_up_to(resid)
+            out = [grad_compress.compress_roundtrip(g.astype(jnp.float32) + r)
+                   for g, r in zip(flat_g, flat_r)]
+            grads = jax.tree.unflatten(treedef, [o[0] for o in out])
+            resid = jax.tree.unflatten(treedef, [o[1] for o in out])
+        params, opt_state, om = tiered_adam.update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, resid, loss, om["grad_norm"]
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        start, restored = ckpt.restore({"params": params})
+        params = restored["params"]
+        print(f"resumed from step {start}")
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    loader = HostLoader(data_cfg, start_step=start)
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch_np = next(loader)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, residual, loss, gnorm = train_step(
+            params, opt_state, residual, batch)
+        losses.append(float(loss))
+        if (step + 1) % 20 == 0:
+            rate = (step + 1 - start) / (time.time() - t0)
+            print(f"step {step+1:4d} loss {np.mean(losses[-20:]):.4f} "
+                  f"gnorm {float(gnorm):.2f} ({rate:.2f} steps/s, "
+                  f"stragglers {loader.straggler_events})")
+        if (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params}, blocking=False)
+    ckpt.wait()
+    loader.close()
+    print(f"final loss {np.mean(losses[-20:]):.4f} "
+          f"(from {np.mean(losses[:20]):.4f}); checkpoints in {args.ckpt_dir}")
+    assert np.mean(losses[-20:]) < np.mean(losses[:20]), "training must descend"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Perf-iteration driver: rebuild one cell with overrides, lower, analyze,
+and log the three roofline terms (experiments/perf/<cell>__<tag>.json).
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch qwen3_moe_235b \
+        --shape train_4k --tag baseline [--accum 4] [--no-fsdp] [--kvseq] \
+        [--tiered-kv] [--top-collectives]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--fsdp", dest="fsdp", action="store_true", default=None)
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--kvseq", dest="kvseq", action="store_true", default=None)
+    ap.add_argument("--no-kvseq", dest="kvseq", action="store_false")
+    ap.add_argument("--tiered-kv", action="store_true", default=None)
+    ap.add_argument("--top-collectives", action="store_true")
+    args = ap.parse_args()
+
+    import repro.configs as configs
+    from repro.configs.base import SHAPES, ParallelConfig
+    from repro.launch import cells as cm
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis as ra
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    chips = 512 if args.multi_pod else 256
+    parallel = cm.default_parallel(configs.get(args.arch), args.shape, mesh)
+    if args.accum is not None or args.fsdp is not None or args.kvseq is not None:
+        import dataclasses as dc
+
+        kw = {}
+        if args.accum is not None:
+            kw["grad_accum"] = args.accum
+        if args.fsdp is not None:
+            kw["fsdp"] = args.fsdp
+        if args.kvseq is not None:
+            kw["shard_kv_seq"] = args.kvseq
+        parallel = dc.replace(parallel, **kw)
+
+    t0 = time.time()
+    cell = cm.build_cell(args.arch, args.shape, mesh, parallel=parallel,
+                         tiered_kv=args.tiered_kv)
+    compiled = cell.lower().compile()
+    wall = time.time() - t0
+    txt = compiled.as_text()
+
+    cfg = configs.get(args.arch)
+    mf = ra.model_flops_for(cfg, SHAPES[args.shape])
+    rep = ra.analyze_compiled(compiled, args.arch, args.shape,
+                              "pod2x16x16" if args.multi_pod else "pod16x16",
+                              chips, mf, hlo_text=txt, notes=cell.notes)
+    step = rep.step_time_s
+    print(f"[{args.tag}] {cell.notes}")
+    print(f"  compute={rep.compute_s:.3e}s memory={rep.memory_s:.3e}s "
+          f"collective={rep.collective_s:.3e}s -> {rep.bottleneck}")
+    print(f"  useful={rep.useful_ratio:.3f} roofline_frac={rep.roofline_fraction:.4f} "
+          f"fits={rep.fits_hbm} (args={rep.args_bytes_pd/2**30:.1f}GB "
+          f"temps={rep.temps_bytes_pd/2**30:.1f}GB) compile={wall:.0f}s")
+    print("  coll by kind:", {k: f"{v:.2e}" for k, v in rep.coll_by_kind.items()})
+
+    if args.top_collectives:
+        from repro.roofline.hlo_stats import _split_computations, _COLL_RE, _dims, _prod
+        comps, entry = _split_computations(txt)
+        rows = []
+        for name, lines in comps.items():
+            for line in lines:
+                m = _COLL_RE.search(line)
+                if m:
+                    n = _prod(_dims(m.group(2)))
+                    meta = re.search(r'op_name="([^"]*)"', line)
+                    rows.append((n * 2, m.group(3), m.group(1), m.group(2),
+                                 (meta.group(1)[-80:] if meta else ""), name))
+        rows.sort(key=lambda r: -r[0])
+        for b, kind, dt, dims, meta, comp in rows[:12]:
+            print(f"    {b/2**20:9.1f}MB {kind:18s} {dt}[{dims}]  {meta}")
+
+    os.makedirs("experiments/perf", exist_ok=True)
+    out = rep.to_json()
+    out["tag"] = args.tag
+    with open(f"experiments/perf/{args.arch}__{args.shape}__{args.tag}.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

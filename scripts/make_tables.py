@@ -1,0 +1,62 @@
+"""Regenerate the EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/make_tables.py [--mesh pod16x16]
+"""
+
+import argparse
+import glob
+import json
+
+
+def rows(mesh_filter=None):
+    out = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        d = json.load(open(f))
+        if mesh_filter and d["mesh"] != mesh_filter:
+            continue
+        out.append(d)
+    return out
+
+
+def roofline_table(mesh="pod16x16"):
+    print(f"\n### Roofline — {mesh} ({256 if mesh=='pod16x16' else 512} chips)\n")
+    print("| arch | shape | kind | compute s | memory s | collective s | bottleneck | "
+          "MODEL_FLOPS | useful | roofline frac | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows(mesh):
+        step = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        frac = d["model_flops"] / d["chips"] / step / 197e12 if step else 0
+        print(f"| {d['arch']} | {d['shape']} | {d['kind']} | {d['compute_s']:.2e} "
+              f"| {d['memory_s']:.2e} | {d['collective_s']:.2e} | {d['bottleneck']} "
+              f"| {d['model_flops']:.2e} | {d['useful_ratio']:.3f} | {frac:.4f} "
+              f"| {'Y' if d['fits_hbm'] else 'N'} |")
+
+
+def dryrun_table():
+    print("\n### Dry-run memory/collective summary\n")
+    print("| arch | shape | mesh | args GB | temps GB | cpu-upcast GB | "
+          "coll bytes/dev | AR/AG/RS/A2A/CP GB | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows():
+        k = d["coll_by_kind"]
+        kinds = "/".join(
+            f"{k.get(n, 0)/2**30:.2f}"
+            for n in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                      "collective-permute")
+        )
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+              f"| {d['args_bytes_pd']/2**30:.2f} | {d['temps_bytes_pd']/2**30:.2f} "
+              f"| {d.get('cpu_upcast_bytes_pd', 0)/2**30:.2f} "
+              f"| {d['coll_bytes_pd']:.2e} | {kinds} | {d.get('compile_s','-')} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    if args.mesh:
+        roofline_table(args.mesh)
+    else:
+        roofline_table("pod16x16")
+        roofline_table("pod2x16x16")
+        dryrun_table()

@@ -1,0 +1,85 @@
+"""Architecture registry: the 10 assigned archs (full scale) + reduced smoke
+variants + the paper's TierScape tier presets.
+
+Every entry is ``src/repro/configs/<id>.py`` exposing ``CONFIG`` (full) and
+``SMOKE`` (reduced, CPU-runnable). ``get(name)`` / ``get_smoke(name)`` look
+them up; ``--arch <id>`` in the launchers resolves through here.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ParallelConfig,
+    ShapeConfig,
+    SSMConfig,
+    TierScapeRunConfig,
+)
+
+ARCH_IDS = [
+    "hubert_xlarge",
+    "command_r_35b",
+    "qwen3_32b",
+    "internlm2_20b",
+    "qwen1_5_4b",
+    "qwen3_moe_235b",
+    "dbrx_132b",
+    "mamba2_780m",
+    "zamba2_1_2b",
+    "qwen2_vl_72b",
+]
+
+
+def _module(name: str):
+    name = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def arch_ids() -> List[str]:
+    return list(ARCH_IDS)
+
+
+# Which shape cells run per arch (None entries are recorded skips — see
+# DESIGN.md §Arch-applicability).
+def cells_for(name: str):
+    cfg = get(name)
+    cells = ["train_4k", "prefill_32k"]
+    if cfg.is_decoder:
+        cells.append("decode_32k")
+    if cfg.family in ("ssm", "hybrid"):
+        cells.append("long_500k")
+    return cells
+
+
+def skipped_cells_for(name: str):
+    return [s for s in SHAPES if s not in cells_for(name)]
+
+
+__all__ = [
+    "ARCH_IDS",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "ParallelConfig",
+    "TierScapeRunConfig",
+    "SHAPES",
+    "get",
+    "get_smoke",
+    "arch_ids",
+    "cells_for",
+    "skipped_cells_for",
+]

@@ -1,0 +1,189 @@
+"""Model/arch configuration schema.
+
+One ``ModelConfig`` fully describes an architecture; ``src/repro/configs/<id>.py``
+files instantiate the 10 assigned architectures (full scale) plus reduced
+smoke variants. ``RunConfig`` adds the execution shape (mesh, batch, seq,
+parallelism and TierScape settings) on top.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    experts_per_token: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # dbrx-style fine-grained: experts formed by splitting wider FFNs. We
+    # model the published (n_experts, top_k, d_ff) directly.
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 128  # SSD chunk length
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # Attention flavor.
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    rope_theta: float = 10000.0
+    mrope: bool = False  # qwen2-vl multimodal 3-axis RoPE
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    causal: bool = True
+    # FFN flavor.
+    act: str = "swiglu"  # swiglu | gelu
+    # Mixture of experts (family == "moe"): dense d_ff unused if 0.
+    moe: Optional[MoEConfig] = None
+    # State space (family in {"ssm","hybrid"}).
+    ssm: Optional[SSMConfig] = None
+    # Hybrid (zamba2): one shared attention+MLP block applied every k layers.
+    hybrid_attn_every: int = 0
+    # Modality frontend stub: inputs are precomputed frame/patch embeddings
+    # instead of token ids ("audio" | "vision" | None).
+    frontend: Optional[str] = None
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # Norm style: "rmsnorm" | "layernorm" (hubert uses LN).
+    norm: str = "rmsnorm"
+
+    def head_dim_(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.family != "encoder"
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.head_dim_()
+        n_q = self.n_heads * hd
+        n_kv = self.n_kv_heads * hd
+        attn = d * n_q + 2 * d * n_kv + n_q * d
+        if self.qkv_bias:
+            attn += n_q + 2 * n_kv
+        if self.act == "swiglu":
+            ffn = 3 * d * self.d_ff
+        else:
+            ffn = 2 * d * self.d_ff
+        per_layer = 0
+        if self.family in ("dense", "encoder", "vlm"):
+            per_layer = attn + ffn
+            total = self.n_layers * per_layer
+        elif self.family == "moe":
+            m = self.moe
+            ffn_e = 3 * d * m.d_ff_expert if self.act == "swiglu" else 2 * d * m.d_ff_expert
+            router = d * m.n_experts
+            total = self.n_layers * (attn + m.n_experts * ffn_e + router)
+        elif self.family == "ssm":
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            # in_proj (z,x,B,C,dt) + out_proj + conv
+            in_proj = d * (2 * di + 2 * s.n_groups * s.d_state + nh)
+            total = self.n_layers * (in_proj + di * d + s.conv_kernel * (di + 2 * s.n_groups * s.d_state))
+        elif self.family == "hybrid":
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            in_proj = d * (2 * di + 2 * s.n_groups * s.d_state + nh)
+            mamba = self.n_layers * (in_proj + di * d + s.conv_kernel * (di + 2 * s.n_groups * s.d_state))
+            shared = attn + ffn  # one shared transformer block
+            total = mamba + shared
+        else:
+            raise ValueError(self.family)
+        total += self.vocab_size * d  # embedding
+        if not self.tie_embeddings and self.is_decoder:
+            total += self.vocab_size * d
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        m = self.moe
+        d = self.d_model
+        ffn_e = 3 * d * m.d_ff_expert if self.act == "swiglu" else 2 * d * m.d_ff_expert
+        inactive = self.n_layers * (m.n_experts - m.experts_per_token) * ffn_e
+        return int(self.param_count() - inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How the model maps onto the (pod, data, model) mesh."""
+
+    fsdp: bool = False  # shard params/opt-state over the data axis too
+    remat: str = "block"  # "none" | "block" (checkpoint each layer)
+    scan_layers: bool = True
+    # Sequence-parallel KV sharding for decode (long context).
+    shard_kv_seq: bool = False
+    # Gradient compression for the cross-pod reduce (int8 + error feedback).
+    grad_compress_pods: bool = False
+    # Microbatching (gradient accumulation steps).
+    grad_accum: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TierScapeRunConfig:
+    """TierScape engagement for a run."""
+
+    enabled: bool = False
+    policy: str = "analytical"  # waterfall | analytical | 2t
+    alpha: float = 0.5
+    hotness_threshold: float = 8.0
+    window_steps: int = 64
+    kv_page_tokens: int = 64  # tokens per managed KV page
+    # Device-resident tier pair used inside the jitted serve step.
+    warm_tier: str = "C1"
+    cold_tier: str = "C9"

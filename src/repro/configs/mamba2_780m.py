@@ -1,0 +1,34 @@
+"""Mamba2-780M [arXiv:2405.21060] — attention-free SSD decoder.
+
+O(1) decode state => long_500k runs natively. The paper's KV tiering is
+inapplicable to the SSM state (nothing grows with context); TierScape still
+manages its embedding/optimizer state. See DESIGN.md §Arch-applicability.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2_780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_kernel=4, chunk=128),
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2_780m_smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=256,
+    ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_kernel=4, chunk=32),
+    tie_embeddings=True,
+)

@@ -1,0 +1,37 @@
+"""TierScape core: multiple software-defined compressed memory tiers for
+TPU model state, with waterfall / analytical placement (paper §4-§6)."""
+
+from repro.core import analytical, codecs, hw, pools, simulator, tco, telemetry, tiers, waterfall
+from repro.core.manager import ManagerConfig, MigrationPlan, TierScapeManager, make_manager
+from repro.core.tiers import (
+    BASELINE_2T,
+    TierSet,
+    TierSpec,
+    baseline_2t_tierset,
+    characterized,
+    default_tierset,
+    selected,
+)
+
+__all__ = [
+    "analytical",
+    "codecs",
+    "hw",
+    "pools",
+    "simulator",
+    "tco",
+    "telemetry",
+    "tiers",
+    "waterfall",
+    "ManagerConfig",
+    "MigrationPlan",
+    "TierScapeManager",
+    "make_manager",
+    "BASELINE_2T",
+    "TierSet",
+    "TierSpec",
+    "baseline_2t_tierset",
+    "characterized",
+    "default_tierset",
+    "selected",
+]

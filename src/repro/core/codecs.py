@@ -1,0 +1,199 @@
+"""Block-quantization codecs — the TPU-native analogue of zswap compressors.
+
+The paper composes tiers from byte-oriented compressors (lz4 / lzo / deflate)
+with monotonically increasing compression ratio *and* decompression cost.
+Byte-wise LZ coding is bit-serial and has no efficient MXU/VPU mapping, so the
+TPU-native compression spectrum is **scaled integer quantization**:
+
+    codec   ratio (w/ scales)   decode cost     paper analogue
+    none    1.00x               0               uncompressed DRAM
+    fp8     ~2.00x              cast            lz4      (fast, modest ratio)
+    int8    ~1.94x              scale-mul       lzo      (balanced)
+    int4    ~3.56x              unpack+scale    zstd-ish (dense)
+    int2    ~5.33x              unpack+scale    deflate  (max ratio, slow)
+
+Every codec is a pure-jnp, jit-compatible transform with static output shapes
+(required so compressed pools can live inside jitted steps). The perf-critical
+encode/decode paths also exist as Pallas kernels (``repro.kernels``); the
+functions here are the reference semantics those kernels are tested against.
+
+Ratios are fixed-point rather than data-dependent; data-dependence reappears
+as *reconstruction error*, which the fig3 characterization benchmark measures
+on two input distributions (the nci-vs-dickens analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+
+Array = jax.Array
+
+# Group sizes for per-group absmax scaling (elements sharing one f32 scale).
+GROUP = {"int8": 128, "int4": 64, "int2": 32}
+QMAX = {"int8": 127, "int4": 7, "int2": 1}
+SCALE_BYTES = 4  # f32 scales
+
+
+@dataclasses.dataclass(frozen=True)
+class Encoded:
+    """A compressed block: uint8 payload + f32 per-group scales."""
+
+    payload: Array  # uint8, flat
+    scales: Array  # f32, flat (empty for fp8/none)
+    codec: str
+
+
+def _group_reshape(x: Array, group: int) -> Array:
+    flat = x.reshape(-1)
+    assert flat.shape[0] % group == 0, (
+        f"block elems {flat.shape[0]} not divisible by group {group}"
+    )
+    return flat.reshape(-1, group)
+
+
+# ---------------------------------------------------------------------------
+# int-k family: per-group absmax scale, packed little-endian into uint8.
+# ---------------------------------------------------------------------------
+
+
+def _int_encode(x: Array, bits: int, group: int) -> Encoded:
+    qmax = (1 << (bits - 1)) - 1 if bits > 2 else 1  # int2 uses {-1,0,1}
+    g = _group_reshape(x.astype(jnp.float32), group)
+    scale = jnp.max(jnp.abs(g), axis=1, keepdims=True) / qmax
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    per_byte = 8 // bits
+    qf = q.reshape(-1, per_byte)  # values packed into one byte
+    packed = jnp.zeros(qf.shape[0], dtype=jnp.uint8)
+    mask = (1 << bits) - 1
+    for i in range(per_byte):
+        nib = (qf[:, i].astype(jnp.int32) & mask).astype(jnp.uint8)
+        packed = packed | (nib << (bits * i)).astype(jnp.uint8)
+    name = f"int{bits}"
+    return Encoded(payload=packed, scales=scale.reshape(-1), codec=name)
+
+
+def _int_decode(enc: Encoded, bits: int, group: int, n_elem: int) -> Array:
+    per_byte = 8 // bits
+    mask = (1 << bits) - 1
+    sign_bit = 1 << (bits - 1)
+    vals = []
+    for i in range(per_byte):
+        nib = (enc.payload.astype(jnp.int32) >> (bits * i)) & mask
+        nib = jnp.where(nib >= sign_bit, nib - (1 << bits), nib)
+        vals.append(nib)
+    q = jnp.stack(vals, axis=1).reshape(-1)[:n_elem].astype(jnp.float32)
+    scale = jnp.repeat(enc.scales, group)[:n_elem]
+    return q * scale
+
+
+# ---------------------------------------------------------------------------
+# fp8: one f32 normalizer per block, payload is float8_e4m3fn bytes.
+# ---------------------------------------------------------------------------
+
+_FP8_MAX = 448.0  # e4m3fn max finite
+
+
+def _fp8_encode(x: Array) -> Encoded:
+    flat = x.astype(jnp.float32).reshape(-1)
+    norm = jnp.max(jnp.abs(flat)) / _FP8_MAX
+    norm = jnp.where(norm == 0.0, 1.0, jnp.maximum(norm, 1e-30))
+    f8 = (flat / norm).astype(jnp.float8_e4m3fn)
+    payload = jax.lax.bitcast_convert_type(f8, jnp.uint8)
+    return Encoded(payload=payload, scales=norm.reshape(1), codec="fp8")
+
+
+def _fp8_decode(enc: Encoded, n_elem: int) -> Array:
+    f8 = jax.lax.bitcast_convert_type(enc.payload, jnp.float8_e4m3fn)
+    return f8.astype(jnp.float32)[:n_elem] * enc.scales[0]
+
+
+# ---------------------------------------------------------------------------
+# Codec objects
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """A compression algorithm: fixed ratio, fixed decode cost/elem."""
+
+    name: str
+    bits_per_elem: float  # payload bits per source element (excl. scales)
+    group: int  # elements per f32 scale (0 = one scale per block)
+
+    # -- size accounting ----------------------------------------------------
+    def payload_bytes(self, n_elem: int) -> int:
+        return int(n_elem * self.bits_per_elem) // 8
+
+    def scale_bytes(self, n_elem: int) -> int:
+        if self.name == "none":
+            return 0
+        n_groups = 1 if self.group == 0 else (n_elem + self.group - 1) // self.group
+        return n_groups * SCALE_BYTES
+
+    def compressed_bytes(self, n_elem: int) -> int:
+        return self.payload_bytes(n_elem) + self.scale_bytes(n_elem)
+
+    def ratio(self, n_elem: int, src_bytes_per_elem: int = 2) -> float:
+        if self.name == "none":
+            return 1.0
+        return (n_elem * src_bytes_per_elem) / self.compressed_bytes(n_elem)
+
+    # -- transform ----------------------------------------------------------
+    def encode(self, x: Array) -> Encoded:
+        if self.name == "none":
+            flat = x.astype(jnp.bfloat16).reshape(-1)
+            payload = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+            return Encoded(payload=payload, scales=jnp.zeros((0,), jnp.float32), codec="none")
+        if self.name == "fp8":
+            return _fp8_encode(x)
+        bits = int(self.name[3:])
+        return _int_encode(x, bits, self.group)
+
+    def decode(self, enc: Encoded, shape, dtype=jnp.bfloat16) -> Array:
+        n_elem = 1
+        for s in shape:
+            n_elem *= int(s)
+        if self.name == "none":
+            flat = jax.lax.bitcast_convert_type(
+                enc.payload.reshape(-1, 2), jnp.bfloat16
+            ).reshape(-1)
+            return flat[:n_elem].reshape(shape).astype(dtype)
+        if self.name == "fp8":
+            return _fp8_decode(enc, n_elem).reshape(shape).astype(dtype)
+        bits = int(self.name[3:])
+        return _int_decode(enc, bits, self.group, n_elem).reshape(shape).astype(dtype)
+
+    # -- modeled costs ------------------------------------------------------
+    @property
+    def decode_ops_per_elem(self) -> float:
+        return hw.CODEC_DECODE_OPS[self.name]
+
+    @property
+    def encode_ops_per_elem(self) -> float:
+        return hw.CODEC_ENCODE_OPS[self.name]
+
+
+CODECS: Dict[str, Codec] = {
+    "none": Codec("none", 16.0, 0),
+    "fp8": Codec("fp8", 8.0, 0),
+    "int8": Codec("int8", 8.0, GROUP["int8"]),
+    "int4": Codec("int4", 4.0, GROUP["int4"]),
+    "int2": Codec("int2", 2.0, GROUP["int2"]),
+}
+
+
+def roundtrip_error(codec_name: str, x: Array) -> Array:
+    """Relative L2 reconstruction error of one encode/decode roundtrip."""
+    codec = CODECS[codec_name]
+    enc = codec.encode(x)
+    xh = codec.decode(enc, x.shape, jnp.float32)
+    num = jnp.linalg.norm(x.astype(jnp.float32) - xh)
+    den = jnp.maximum(jnp.linalg.norm(x.astype(jnp.float32)), 1e-12)
+    return num / den

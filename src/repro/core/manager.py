@@ -1,0 +1,283 @@
+"""TierScapeManager — the TS-Daemon analogue (paper §6.2-6.3).
+
+Host-side controller owning:
+  * the TierSet (DRAM/HBM + N software-defined compressed tiers),
+  * per-region telemetry (exact or PEBS-emulated),
+  * the placement vector,
+  * the placement policy (2T threshold / waterfall / analytical),
+  * live-measured per-tier compressibility,
+  * stats: TCO, faults, migrations, daemon tax.
+
+The engine (window simulator, serving KV cache, or tiered optimizer) calls
+``record_*`` during a window, ``fault_back`` whenever it decompresses a region
+on access, and ``end_window`` at window boundaries; ``end_window`` runs the
+model and returns a MigrationPlan the engine executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import analytical, tco
+from repro.core.telemetry import PEBSNoise, RegionTelemetry
+from repro.core.tiers import TierSet, baseline_2t_tierset, default_tierset
+from repro.core.waterfall import WaterfallConfig, waterfall_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ManagerConfig:
+    policy: str  # "waterfall" | "analytical" | "2t"
+    hotness_threshold: float = 0.0  # H_th for waterfall/2t (absolute counts)
+    alpha: float = 0.5  # knob for analytical (1=max perf, 0=max TCO savings)
+    window_steps: int = 64  # engine steps per profile window
+    history_windows: int = 4  # averaging depth for the analytical model
+    refault_fraction: float = 0.25
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    """end_window output: region moves the engine must execute."""
+
+    regions: np.ndarray  # (M,) region ids to migrate
+    src: np.ndarray  # (M,) old placement index
+    dst: np.ndarray  # (M,) new placement index
+    bytes_moved: int
+    modeled_migration_s: float
+
+
+@dataclasses.dataclass
+class WindowStats:
+    window: int
+    placement_hist: np.ndarray  # (N+1,) region counts per placement index
+    tco_usd: float
+    savings_pct: float
+    faults: int
+    fault_overhead_s: float  # Eq. 6 realized
+    migrations: int
+    migration_bytes: int
+    daemon_s: float  # model eval + plan construction wall time
+    modeled_migration_s: float
+
+
+class TierScapeManager:
+    def __init__(
+        self,
+        tierset: TierSet,
+        n_regions: int,
+        region_bytes: int,
+        cfg: ManagerConfig,
+        pebs: Optional[PEBSNoise] = None,
+        seed: int = 0,
+    ):
+        if region_bytes % tierset.block_bytes != 0:
+            raise ValueError("region_bytes must be a multiple of block_bytes")
+        self.tierset = tierset
+        self.n_regions = n_regions
+        self.region_bytes = region_bytes
+        self.blocks_per_region = region_bytes // tierset.block_bytes
+        self.cfg = cfg
+        self.telemetry = RegionTelemetry(
+            n_regions, history_len=cfg.history_windows, pebs=pebs, seed=seed
+        )
+        self.placement = np.zeros(n_regions, dtype=np.int64)
+        # Live-measured compressibility per tier (paper feeds measured ratios
+        # to the model; start at nominal).
+        self.measured_ratios = np.array(tierset.ratios()[1:], dtype=np.float64)
+        # Fault latency at *block* (4KB-page analogue) granularity: faults
+        # decompress individual blocks on demand, each paying the fixed
+        # bookkeeping + pool + media-setup costs — exactly the paper's page
+        # fault path. Region-granular latency (bulk decompress, fixed costs
+        # paid once) is used for pricing migrations, not faults.
+        self._lat_block = np.array(tierset.latencies_s(), dtype=np.float64)
+        region_elems = region_bytes // tierset.src_bytes_per_elem
+        self._lat_region = np.array(
+            [0.0]
+            + [t.access_latency_s(region_elems, tierset.src_bytes_per_elem) for t in tierset.tiers],
+            dtype=np.float64,
+        )
+        self._window = 0
+        self._fault_counts = np.zeros(n_regions, dtype=np.int64)
+        self._fault_overhead_s = 0.0
+        self.history: List[WindowStats] = []
+        self.total_daemon_s = 0.0
+
+    # ------------------------------------------------------------------ API
+    def record_access_counts(self, counts: np.ndarray) -> None:
+        self.telemetry.record(counts)
+
+    def record_access_indices(self, idx: np.ndarray, weights=None) -> None:
+        self.telemetry.record_indices(idx, weights)
+
+    def fault_back(self, region_ids: np.ndarray, n_blocks=1) -> np.ndarray:
+        """Engine faulted ``n_blocks`` blocks of each region on access.
+
+        Charges Eq. 5 overhead (n_blocks * Lat_T at block granularity) and
+        returns the per-region overhead. Regions whose faulted fraction
+        reaches ``refault_fraction`` restart from DRAM (paper §6.3: a region
+        restarts its journey when a major portion faulted back); partially
+        faulted regions stay placed, their faulted blocks now living
+        uncompressed (we conservatively keep charging them as compressed on
+        later accesses only via fresh fault calls from the engine).
+        """
+        region_ids = np.atleast_1d(region_ids)
+        n_blocks = np.broadcast_to(np.asarray(n_blocks, dtype=np.float64), region_ids.shape)
+        src = self.placement[region_ids]
+        lat = self._lat_block[src] * n_blocks
+        faulted = src > 0
+        self._fault_counts[region_ids[faulted]] += n_blocks[faulted].astype(np.int64)
+        self._fault_overhead_s += float(lat[faulted].sum())
+        move = faulted & (n_blocks >= self.cfg.refault_fraction * self.blocks_per_region)
+        self.placement[region_ids[move]] = 0
+        return np.where(faulted, lat, 0.0)
+
+    def access_latency_s(self, region_ids: np.ndarray) -> np.ndarray:
+        """Latency to access each region under the current placement."""
+        src = self.placement[np.atleast_1d(region_ids)]
+        return self._lat_region[src]
+
+    @property
+    def region_latencies_s(self) -> np.ndarray:
+        """Per-placement-index fault latency at region granularity."""
+        return self._lat_region
+
+    def update_measured_ratio(self, tier_index: int, ratio: float, ema: float = 0.25) -> None:
+        """Feed back actually-achieved compressibility for tier (1-based)."""
+        i = tier_index - 1
+        self.measured_ratios[i] = (1 - ema) * self.measured_ratios[i] + ema * ratio
+
+    # -------------------------------------------------------------- window
+    def end_window(self) -> MigrationPlan:
+        t0 = time.perf_counter()
+        hotness = self.telemetry.close_window()
+        old = self.placement.copy()
+
+        if self.cfg.policy in ("waterfall", "2t"):
+            fault_frac = (self._fault_counts > 0).astype(np.float64)
+            new = waterfall_step(
+                old,
+                hotness,
+                fault_frac,
+                self.tierset.n_tiers,
+                WaterfallConfig(self.cfg.hotness_threshold, self.cfg.refault_fraction),
+            )
+        elif self.cfg.policy == "analytical":
+            avg_hot = self.telemetry.averaged_hotness(self.cfg.history_windows)
+            option_costs = tco.usd_per_region(
+                self.tierset, self.region_bytes, self.measured_ratios
+            )
+            budget = tco.budget(
+                self.tierset,
+                self.n_regions,
+                self.region_bytes,
+                self.cfg.alpha,
+                self.measured_ratios,
+            )
+            sol = analytical.solve_greedy(avg_hot, option_costs, self._lat_region, budget)
+            new = sol.placement
+        else:
+            raise ValueError(f"unknown policy {self.cfg.policy!r}")
+
+        moved = np.where(new != old)[0]
+        plan = self._plan(moved, old[moved], new[moved])
+        self.placement = new
+        daemon_s = time.perf_counter() - t0
+        self.total_daemon_s += daemon_s + plan.modeled_migration_s
+
+        self.history.append(
+            WindowStats(
+                window=self._window,
+                placement_hist=np.bincount(new, minlength=self.tierset.n_tiers + 1),
+                tco_usd=tco.tco_nt(self.tierset, new, self.region_bytes, self.measured_ratios),
+                savings_pct=tco.savings_pct(
+                    self.tierset, new, self.region_bytes, self.measured_ratios
+                ),
+                faults=int(self._fault_counts.sum()),
+                fault_overhead_s=self._fault_overhead_s,
+                migrations=len(moved),
+                migration_bytes=plan.bytes_moved,
+                daemon_s=daemon_s,
+                modeled_migration_s=plan.modeled_migration_s,
+            )
+        )
+        self._window += 1
+        self._fault_counts[:] = 0
+        self._fault_overhead_s = 0.0
+        return plan
+
+    def _plan(self, regions: np.ndarray, src: np.ndarray, dst: np.ndarray) -> MigrationPlan:
+        """Price a migration batch. Same-codec moves skip decode/encode
+        (paper §6.1 notes this optimization; we implement it)."""
+        elems = self.tierset.block_elems * self.blocks_per_region
+        sbpe = self.tierset.src_bytes_per_elem
+        total_bytes = 0
+        total_s = 0.0
+        specs = [None] + list(self.tierset.tiers)
+        for s, d in zip(src, dst):
+            s_spec, d_spec = specs[int(s)], specs[int(d)]
+            read_b = self.region_bytes if s_spec is None else s_spec.stored_bytes(elems, sbpe)
+            write_b = self.region_bytes if d_spec is None else d_spec.stored_bytes(elems, sbpe)
+            total_bytes += read_b + write_b
+            if s_spec is not None and d_spec is not None and s_spec.codec_name == d_spec.codec_name:
+                # Fast path: media-to-media copy, no transcode.
+                total_s += read_b / 819e9 + write_b / 819e9
+            else:
+                if s_spec is not None:
+                    total_s += s_spec.access_latency_s(elems, sbpe)
+                if d_spec is not None:
+                    total_s += d_spec.compress_latency_s(elems, sbpe)
+        return MigrationPlan(regions, src, dst, total_bytes, total_s)
+
+    # -------------------------------------------------------------- views
+    @property
+    def current_savings_pct(self) -> float:
+        return tco.savings_pct(
+            self.tierset, self.placement, self.region_bytes, self.measured_ratios
+        )
+
+
+# ---------------------------------------------------------------------------
+# Policy presets (paper §7.1 model configurations)
+# ---------------------------------------------------------------------------
+
+
+def make_manager(
+    config_name: str,
+    n_regions: int,
+    region_bytes: int = 2 * 1024 * 1024,
+    thresholds: dict | None = None,
+    pebs: Optional[PEBSNoise] = None,
+    seed: int = 0,
+    window_steps: int = 64,
+) -> TierScapeManager:
+    """Build a manager from a paper config name.
+
+    Names: ``2T-C|2T-M|2T-A`` (DRAM + Google-production single tier),
+    ``6T-WF-C|M|A`` (waterfall on DRAM+5 tiers), ``6T-AM-0.9|0.5|0.1``
+    (analytical). Thresholds dict maps C/M/A -> absolute H_th (workload
+    specific, like the paper's Memcached 50/100/250).
+    """
+    thresholds = thresholds or {"C": 50.0, "M": 100.0, "A": 250.0}
+    name = config_name.upper()
+    if name.startswith("2T-"):
+        level = name.split("-")[1]
+        ts = baseline_2t_tierset()
+        cfg = ManagerConfig(
+            policy="2t", hotness_threshold=thresholds[level], window_steps=window_steps
+        )
+    elif name.startswith("6T-WF-"):
+        level = name.split("-")[2]
+        ts = default_tierset()
+        cfg = ManagerConfig(
+            policy="waterfall", hotness_threshold=thresholds[level], window_steps=window_steps
+        )
+    elif name.startswith("6T-AM-"):
+        alpha = float(name.split("AM-")[1])
+        ts = default_tierset()
+        cfg = ManagerConfig(policy="analytical", alpha=alpha, window_steps=window_steps)
+    else:
+        raise ValueError(f"unknown config {config_name!r}")
+    return TierScapeManager(ts, n_regions, region_bytes, cfg, pebs=pebs, seed=seed)

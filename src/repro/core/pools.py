@@ -1,0 +1,122 @@
+"""Compressed-pool data plane — the zswap-pool analogue.
+
+Two halves, split the way a production TPU serving engine splits them:
+
+  * **Device side** (``TierPool`` pytree): fixed-capacity uint8 payload +
+    f32 scale arrays living in HBM (or host memory via JAX memory kinds on
+    real hardware). All reads/writes are functional ``.at[]`` updates and are
+    jit-compatible; the tiered-attention Pallas kernel reads these arrays
+    directly.
+  * **Host side** (``SlotAllocator``): slot free-lists and block->slot maps.
+    Allocation policy runs on the daemon core (it is part of the daemon tax),
+    and only integer slot indices cross into jit — exactly how page tables
+    stay on the host in the paper's design.
+
+Physical layout note: both ``slab`` and ``packed`` pools store one block per
+row here; the *byte accounting* (slab padding, packed alignment + index
+overhead) and the *latency model* (gather indirection) come from
+``TierSpec.stored_bytes`` / ``access_latency_s``. On real hardware ``packed``
+would be an offset-indexed flat buffer; the row layout preserves identical
+semantics and identical accounting, which is what the placement models
+consume. Recorded as an adaptation in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codecs import CODECS
+from repro.core.tiers import TierSpec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TierPool:
+    """Device-side storage for one compressed tier."""
+
+    payload: jax.Array  # uint8 [capacity, payload_bytes]
+    scales: jax.Array  # f32 [capacity, n_groups] (n_groups >= 1)
+
+    @property
+    def capacity(self) -> int:
+        return self.payload.shape[0]
+
+
+def make_tier_pool(spec: TierSpec, capacity_blocks: int, block_elems: int) -> TierPool:
+    codec = spec.codec
+    pbytes = codec.payload_bytes(block_elems)
+    ngroups = max(codec.scale_bytes(block_elems) // 4, 1)
+    return TierPool(
+        payload=jnp.zeros((capacity_blocks, pbytes), dtype=jnp.uint8),
+        scales=jnp.ones((capacity_blocks, ngroups), dtype=jnp.float32),
+    )
+
+
+def pool_write(pool: TierPool, slot, payload_row, scales_row) -> TierPool:
+    return TierPool(
+        payload=pool.payload.at[slot].set(payload_row),
+        scales=pool.scales.at[slot].set(scales_row),
+    )
+
+
+def pool_compress_block(spec: TierSpec, pool: TierPool, slot, block) -> TierPool:
+    """Encode ``block`` with the tier's codec and store it at ``slot``."""
+    enc = spec.codec.encode(block)
+    scales = enc.scales
+    if scales.shape[0] == 0:
+        scales = jnp.ones((1,), jnp.float32)
+    return pool_write(pool, slot, enc.payload, scales)
+
+
+def pool_decompress_block(spec: TierSpec, pool: TierPool, slot, shape, dtype=jnp.bfloat16):
+    from repro.core.codecs import Encoded
+
+    enc = Encoded(payload=pool.payload[slot], scales=pool.scales[slot], codec=spec.codec_name)
+    return spec.codec.decode(enc, shape, dtype)
+
+
+class SlotAllocator:
+    """Host-side slot management for one tier pool (daemon side)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._owner: dict[int, int] = {}  # slot -> block_id
+
+    def alloc(self, block_id: int) -> int:
+        if not self._free:
+            raise MemoryError("tier pool exhausted")
+        slot = self._free.pop()
+        self._owner[slot] = block_id
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot in self._owner:
+            del self._owner[slot]
+            self._free.append(slot)
+
+    @property
+    def used(self) -> int:
+        return self.capacity - len(self._free)
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """Host-side block -> (placement, slot) mapping for a managed store."""
+
+    n_blocks: int
+
+    def __post_init__(self):
+        self.placement = np.zeros(self.n_blocks, dtype=np.int64)  # 0 = uncompressed
+        self.slot = np.full(self.n_blocks, -1, dtype=np.int64)
+
+    def move(self, block_id: int, new_placement: int, new_slot: int) -> Tuple[int, int]:
+        old = (int(self.placement[block_id]), int(self.slot[block_id]))
+        self.placement[block_id] = new_placement
+        self.slot[block_id] = new_slot
+        return old

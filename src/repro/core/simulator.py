@@ -1,0 +1,210 @@
+"""Trace-driven window simulator — the evaluation substrate for §7.
+
+Drives a TierScapeManager with synthetic region-access traces that mirror the
+paper's workloads (Table 3):
+
+  * ``gaussian_kv``  — Memcached/Redis analogue: memtier-style Gaussian key
+    popularity with slow center drift,
+  * ``rotating_frontier`` — BFS/PageRank analogue: a hot frontier that sweeps
+    the graph between windows,
+  * ``uniform_scan`` — XSBench analogue: huge footprint, near-uniform random
+    lookups.
+
+Per window the simulator
+  1. draws ground-truth access counts per region,
+  2. charges faults: first access to a compressed region pays the tier's
+     access latency (Eq. 3-5) and returns the region to DRAM,
+  3. feeds (possibly PEBS-noised) counts to the manager,
+  4. runs the placement model and executes the migration plan,
+  5. records performance overhead, TCO, latency distribution and daemon tax.
+
+Performance metric: relative slowdown = fault_overhead / base_runtime per
+window, where base_runtime = accesses * DRAM service time + workload compute
+time — matching the paper's "perf w.r.t. all-DRAM" axis in Fig. 8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core import hw
+from repro.core.manager import TierScapeManager
+
+# Service time for an access that hits uncompressed HBM/DRAM (block-granular
+# engine access, not a single cache line).
+DRAM_ACCESS_US = 0.5
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    n_regions: int
+    accesses_per_window: int
+    # compute seconds per window spent off the memory path (so slowdown
+    # percentages land in a realistic range, like the paper's benchmarks).
+    compute_s_per_window: float
+    sampler: Callable[[int, np.random.Generator], np.ndarray]
+
+    def sample_window(self, w: int, rng: np.random.Generator) -> np.ndarray:
+        counts = self.sampler(w, rng)
+        assert counts.shape == (self.n_regions,)
+        return counts
+
+
+def gaussian_kv(
+    n_regions: int = 4096,
+    accesses_per_window: int = 2_000_000,
+    sigma_frac: float = 0.08,
+    drift_frac: float = 0.01,
+    compute_s_per_window: float = 1.0,
+    name: str = "memcached",
+) -> Workload:
+    def sampler(w: int, rng: np.random.Generator) -> np.ndarray:
+        center = (0.5 + drift_frac * w) % 1.0
+        keys = rng.normal(center, sigma_frac, size=accesses_per_window)
+        idx = (np.mod(keys, 1.0) * n_regions).astype(np.int64)
+        return np.bincount(idx, minlength=n_regions).astype(np.float64)
+
+    return Workload(name, n_regions, accesses_per_window, compute_s_per_window, sampler)
+
+
+def rotating_frontier(
+    n_regions: int = 4096,
+    accesses_per_window: int = 2_000_000,
+    frontier_frac: float = 0.15,
+    advance_frac: float = 0.05,
+    background_frac: float = 0.10,
+    compute_s_per_window: float = 1.0,
+    name: str = "bfs",
+) -> Workload:
+    def sampler(w: int, rng: np.random.Generator) -> np.ndarray:
+        start = int(w * advance_frac * n_regions) % n_regions
+        width = max(int(frontier_frac * n_regions), 1)
+        hot = (start + rng.integers(0, width, size=int(accesses_per_window * (1 - background_frac)))) % n_regions
+        bg = rng.integers(0, n_regions, size=int(accesses_per_window * background_frac))
+        idx = np.concatenate([hot, bg])
+        return np.bincount(idx, minlength=n_regions).astype(np.float64)
+
+    return Workload(name, n_regions, accesses_per_window, compute_s_per_window, sampler)
+
+
+def uniform_scan(
+    n_regions: int = 16384,
+    accesses_per_window: int = 2_000_000,
+    compute_s_per_window: float = 2.0,
+    name: str = "xsbench",
+) -> Workload:
+    def sampler(w: int, rng: np.random.Generator) -> np.ndarray:
+        idx = rng.integers(0, n_regions, size=accesses_per_window)
+        return np.bincount(idx, minlength=n_regions).astype(np.float64)
+
+    return Workload(name, n_regions, accesses_per_window, compute_s_per_window, sampler)
+
+
+PAPER_WORKLOADS: Callable[[], List[Workload]] = lambda: [
+    gaussian_kv(name="memcached", sigma_frac=0.08),
+    gaussian_kv(name="redis", sigma_frac=0.12, drift_frac=0.02),
+    rotating_frontier(name="bfs", advance_frac=0.08),
+    rotating_frontier(name="pagerank", advance_frac=0.02, frontier_frac=0.25),
+    uniform_scan(name="xsbench"),
+]
+
+
+@dataclasses.dataclass
+class SimResult:
+    workload: str
+    config: str
+    windows: int
+    slowdown_pct: float  # mean relative slowdown vs all-DRAM
+    tco_savings_pct: float  # mean memory TCO savings
+    mean_access_us: float
+    p99_access_us: float
+    daemon_tax_pct: float  # daemon time / total runtime
+    per_window_savings: np.ndarray
+    per_window_slowdown: np.ndarray
+    placement_hists: np.ndarray  # (W, N+1)
+    fault_hists: np.ndarray  # (W, N+1) faults per source placement
+
+
+def simulate(
+    workload: Workload,
+    manager: TierScapeManager,
+    windows: int = 40,
+    warmup_windows: int = 2,
+    seed: int = 0,
+) -> SimResult:
+    rng = np.random.default_rng(seed)
+    n = workload.n_regions
+    assert manager.n_regions == n
+
+    slowdowns, savings = [], []
+    placement_hists, fault_hists = [], []
+    # Latency histogram support: DRAM hits + one bucket per placement index
+    # (block-granular fault latency — the paper's per-page fault cost).
+    blk_lat_us = np.array(manager.tierset.latencies_s()) * 1e6
+    lat_support_us = np.concatenate([[DRAM_ACCESS_US], blk_lat_us[1:]])
+    lat_counts = np.zeros_like(lat_support_us)
+    bpr = manager.blocks_per_region
+
+    for w in range(windows):
+        counts = workload.sample_window(w, rng)
+        placement_before = manager.placement.copy()
+
+        # --- ground truth fault accounting (engine side) -------------------
+        # A compressed region accessed k times faults its distinct blocks on
+        # demand: E[distinct blocks among k uniform accesses of B blocks] =
+        # B * (1 - (1 - 1/B)^k)  (4KB-page faults within the 2MB region).
+        compressed = placement_before > 0
+        faulted = (counts > 0) & compressed
+        fault_ids = np.where(faulted)[0]
+        k = counts[fault_ids]
+        n_blocks = bpr * (1.0 - (1.0 - 1.0 / bpr) ** k)
+        fault_src = placement_before[fault_ids]
+        fault_lat_s = manager.fault_back(fault_ids, n_blocks)
+        fault_overhead_s = float(fault_lat_s.sum())
+
+        # Latency distribution: each faulted block pays its tier's fault
+        # latency; every other access is a DRAM hit.
+        lat_counts[0] += counts.sum() - n_blocks.sum()
+        fault_hist = np.zeros(manager.tierset.n_tiers + 1)
+        np.add.at(fault_hist, fault_src, n_blocks)
+        lat_counts[1:] += fault_hist[1:]
+        fault_hists.append(fault_hist)
+
+        # --- telemetry + model ---------------------------------------------
+        manager.record_access_counts(counts)
+        manager.end_window()
+
+        base_s = workload.compute_s_per_window + counts.sum() * DRAM_ACCESS_US * 1e-6
+        if w >= warmup_windows:
+            slowdowns.append(100.0 * fault_overhead_s / base_s)
+            savings.append(manager.history[-1].savings_pct)
+        placement_hists.append(manager.history[-1].placement_hist)
+
+    # Percentiles from the latency histogram.
+    order = np.argsort(lat_support_us)
+    cdf = np.cumsum(lat_counts[order]) / max(lat_counts.sum(), 1)
+    mean_us = float((lat_support_us * lat_counts).sum() / max(lat_counts.sum(), 1))
+    p99_us = float(lat_support_us[order][np.searchsorted(cdf, 0.99)])
+
+    total_base = windows * (
+        workload.compute_s_per_window
+        + workload.accesses_per_window * DRAM_ACCESS_US * 1e-6
+    )
+    return SimResult(
+        workload=workload.name,
+        config=f"{manager.cfg.policy}",
+        windows=windows,
+        slowdown_pct=float(np.mean(slowdowns)) if slowdowns else 0.0,
+        tco_savings_pct=float(np.mean(savings)) if savings else 0.0,
+        mean_access_us=mean_us,
+        p99_access_us=p99_us,
+        daemon_tax_pct=100.0 * manager.total_daemon_s / total_base,
+        per_window_savings=np.array(savings),
+        per_window_slowdown=np.array(slowdowns),
+        placement_hists=np.stack(placement_hists),
+        fault_hists=np.stack(fault_hists),
+    )

@@ -1,0 +1,191 @@
+"""Software-defined compressed tiers: (codec x pool x media) combinations.
+
+Mirrors paper §4/§4.1/Table 1-2. A tier is a point in the
+(access latency, compression ratio, $/byte) space:
+
+  * codec  — block-quantization algorithm (``core/codecs.py``); the
+             lz4/lzo/deflate analogue,
+  * pool   — packing layout for compressed blocks:
+               ``slab``   — zbud analogue: fixed half-block slots, O(1)
+                            addressing, space saving capped at ~2x,
+               ``packed`` — zsmalloc analogue: dense byte packing (rounded to
+                            128B) + index indirection, best density but
+                            higher per-access management cost,
+  * media  — ``hbm`` (on-chip, fast, expensive) or ``host`` (host DRAM behind
+             PCIe, 1/3 the $/GB — the paper's DRAM-vs-Optane cost ratio).
+
+Access latency per block is the sum of media read, pool management, dequant
+compute and a fixed fault overhead; these are the ``Lat_T`` terms of Eq. 8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from repro.core import hw
+from repro.core.codecs import CODECS, Codec
+
+PACKED_ALIGN = 128  # packed pool rounds blocks up to 128B
+PACKED_INDEX_BYTES = 8  # per-block index entry (offset + tier metadata)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One software-defined compressed tier."""
+
+    tid: str  # characterization id, e.g. "C7"
+    name: str  # e.g. "PK-I4-HB"
+    pool: str  # "slab" | "packed"
+    codec_name: str  # key into CODECS
+    media: str  # "hbm" | "host"
+
+    @property
+    def codec(self) -> Codec:
+        return CODECS[self.codec_name]
+
+    # -- size accounting ----------------------------------------------------
+    def stored_bytes(self, n_elem: int, src_bytes_per_elem: int = 2) -> int:
+        """Bytes this tier actually occupies for one block of n_elem."""
+        payload = self.codec.payload_bytes(n_elem)
+        scales = self.codec.scale_bytes(n_elem)
+        src = n_elem * src_bytes_per_elem
+        if self.pool == "slab":
+            # zbud analogue: slots of src/2 bytes; payload occupies whole
+            # slots (=> saving capped at 2x), scales live in a side-car, and
+            # pair-fill inefficiency inflates the footprint (hw.SLAB_UTILIZATION).
+            slot = max(src // 2, 1)
+            n_slots = -(-payload // slot)
+            return int(n_slots * slot / hw.SLAB_UTILIZATION) + scales
+        if self.pool == "packed":
+            aligned = -(-(payload + scales) // PACKED_ALIGN) * PACKED_ALIGN
+            return aligned + PACKED_INDEX_BYTES
+        raise ValueError(f"unknown pool {self.pool!r}")
+
+    def effective_ratio(self, n_elem: int, src_bytes_per_elem: int = 2) -> float:
+        return (n_elem * src_bytes_per_elem) / self.stored_bytes(n_elem, src_bytes_per_elem)
+
+    # -- latency model (Eq. 8's Lat_T, in seconds per block access) ---------
+    def access_latency_s(self, n_elem: int, src_bytes_per_elem: int = 2) -> float:
+        """Latency of one access *operation* decompressing n_elem elements.
+
+        The fixed terms (fault bookkeeping, pool lookup, media setup) are paid
+        once per operation regardless of n_elem, so callers should pass the
+        actual access granularity (a 4KB-page block, a KV page, or a whole
+        2MB region) rather than summing per-block latencies.
+        """
+        bytes_read = self.stored_bytes(n_elem, src_bytes_per_elem)
+        t_media = bytes_read / hw.media_bw(self.media) + hw.MEDIA_FIXED_US[self.media] * 1e-6
+        t_pool = hw.POOL_ACCESS_US[self.pool] * 1e-6
+        t_dequant = n_elem * self.codec.decode_ops_per_elem / hw.V5E.peak_vpu_elem_ops
+        t_fixed = hw.FAULT_FIXED_US * 1e-6
+        return t_media + t_pool + t_dequant + t_fixed
+
+    def compress_latency_s(self, n_elem: int, src_bytes_per_elem: int = 2) -> float:
+        """Cost to place one block INTO this tier (encode + media write)."""
+        bytes_written = self.stored_bytes(n_elem, src_bytes_per_elem)
+        t_media = bytes_written / hw.media_bw(self.media) + hw.MEDIA_FIXED_US[self.media] * 1e-6
+        t_encode = n_elem * self.codec.encode_ops_per_elem / hw.V5E.peak_vpu_elem_ops
+        return t_media + t_encode
+
+    # -- cost model (Eq. 12's (1/C_Ty)*USD_Ty term) --------------------------
+    def usd_per_source_byte(self, n_elem: int, src_bytes_per_elem: int = 2) -> float:
+        """USD to store one *source* byte in this tier (compressed)."""
+        per_byte = hw.COSTS.usd_per_byte(self.media)
+        return per_byte / self.effective_ratio(n_elem, src_bytes_per_elem)
+
+
+# ---------------------------------------------------------------------------
+# The 12 characterized tiers (paper §4.1: 12 of the 63 possible combos) and
+# the 5 selected for evaluation (paper §4.2 / Table 2).
+#
+# Naming: pool SL(slab)/PK(packed) - codec F8/I8/I4/I2 - media HB(hbm)/HO(host)
+# Paper mapping: zbud->SL zsmalloc->PK | lz4->F8 lzo->I8 zstd->I4 deflate->I2
+#                DRAM->HB Optane->HO
+# ---------------------------------------------------------------------------
+
+_T = TierSpec
+CHARACTERIZED: List[TierSpec] = [
+    _T("C1", "SL-F8-HB", "slab", "fp8", "hbm"),
+    _T("C2", "SL-F8-HO", "slab", "fp8", "host"),
+    _T("C3", "PK-F8-HB", "packed", "fp8", "hbm"),
+    _T("C4", "PK-F8-HO", "packed", "fp8", "host"),
+    _T("C5", "SL-I8-HB", "slab", "int8", "hbm"),
+    _T("C6", "PK-I8-HB", "packed", "int8", "hbm"),
+    _T("C7", "PK-I8-HO", "packed", "int8", "host"),
+    _T("C8", "SL-I4-HB", "slab", "int4", "hbm"),
+    _T("C9", "PK-I4-HB", "packed", "int4", "hbm"),
+    _T("C10", "PK-I4-HO", "packed", "int4", "host"),
+    _T("C11", "PK-I2-HB", "packed", "int2", "hbm"),
+    _T("C12", "PK-I2-HO", "packed", "int2", "host"),
+]
+_BY_ID = {t.tid: t for t in CHARACTERIZED}
+
+
+def characterized() -> List[TierSpec]:
+    return list(CHARACTERIZED)
+
+
+def get(tid: str) -> TierSpec:
+    return _BY_ID[tid]
+
+
+# Paper Table 2 analogue. Selection rationale (§4.2):
+#   T1 = C1  best-performance config           (paper: ZB-L4-DR)
+#   T2 = C2  lowest-latency cheap-media tier   (paper: ZB-L4-OP)
+#   T3 = C4  fast codec + dense pool + cheap   (paper: ZS-L4-OP)
+#   T4 = C9  latency/TCO gap filler on HBM     (paper: ZS-LO-DR)
+#   T5 = C12 best memory-TCO savings config    (paper: ZS-DE-OP)
+SELECTED_IDS = ("C1", "C2", "C4", "C9", "C12")
+
+
+def selected() -> List[TierSpec]:
+    return [_BY_ID[i] for i in SELECTED_IDS]
+
+
+# The paper's 2-Tier baseline: Google's production config — zsmalloc + lzo
+# backed by DRAM [36] => packed + int8 + hbm.
+BASELINE_2T = _BY_ID["C6"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSet:
+    """DRAM/HBM (uncompressed, index 0) + N ordered compressed tiers.
+
+    Tiers are ordered low-latency -> high-TCO-savings (paper §5). Placement
+    vectors index into this set: 0 = uncompressed, 1..N = tiers[i-1].
+    """
+
+    tiers: Sequence[TierSpec]
+    block_elems: int = 2048  # elements per managed block (4KB bf16 page)
+    src_bytes_per_elem: int = 2
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block_elems * self.src_bytes_per_elem
+
+    def latencies_s(self):
+        """Lat_T per placement index (index 0 = DRAM = 0 overhead)."""
+        return [0.0] + [t.access_latency_s(self.block_elems, self.src_bytes_per_elem) for t in self.tiers]
+
+    def usd_per_source_byte(self):
+        """$/source-byte per placement index (index 0 = uncompressed HBM)."""
+        hbm = hw.COSTS.usd_per_byte("hbm")
+        return [hbm] + [t.usd_per_source_byte(self.block_elems, self.src_bytes_per_elem) for t in self.tiers]
+
+    def ratios(self):
+        return [1.0] + [t.effective_ratio(self.block_elems, self.src_bytes_per_elem) for t in self.tiers]
+
+
+def default_tierset(block_elems: int = 2048) -> TierSet:
+    """DRAM + the 5 selected tiers (the paper's 6T evaluation config)."""
+    return TierSet(tiers=tuple(selected()), block_elems=block_elems)
+
+
+def baseline_2t_tierset(block_elems: int = 2048) -> TierSet:
+    """DRAM + single compressed tier (Google production config [36])."""
+    return TierSet(tiers=(BASELINE_2T,), block_elems=block_elems)

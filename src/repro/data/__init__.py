@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, HostLoader, synthetic_corpus
+
+__all__ = ["DataConfig", "HostLoader", "synthetic_corpus"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots:
+
+  * ``quant_page``      — tier compression (bf16 KV page -> int8/int4+scales)
+  * ``dequant_page``    — tier decompression (the fault path)
+  * ``paged_attention`` — fused decode attention over a quantized tier pool
+                          (warm-data access without fault-and-decompress)
+
+``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles every kernel
+is tested against (shape/dtype sweeps in tests/test_kernels.py).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,104 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``tiered_decode_attention`` is the serving hot path: one paged-attention
+kernel launch per tier pool (each pool has its own codec width), one dense
+pass over the recent uncompressed window, and an exact logsumexp merge of
+the flash partials. ``page_hotness`` turns the kernels' per-page mass
+telemetry into the normalized hotness the TierScape manager consumes.
+
+``use_pallas`` toggles kernel vs pure-jnp oracle (ref.py); kernels run in
+interpret mode on CPU (the TPU lowering is exercised by the dry-run).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.dequant_page import dequant_pages as dequant_pages_kernel
+from repro.kernels.paged_attention import paged_quant_attention as paged_attn_kernel
+from repro.kernels.quant_page import quant_pages as quant_pages_kernel
+
+Array = jax.Array
+
+_USE_PALLAS = True
+
+
+def use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+def quant_pages(pages: Array, bits: int) -> Tuple[Array, Array]:
+    if _USE_PALLAS:
+        out = quant_pages_kernel(pages, bits)
+        return out[0], out[1]
+    return _ref.quant_kv_page(pages, bits)
+
+
+def dequant_pages(payload: Array, scales: Array, bits: int, out_dtype=jnp.bfloat16) -> Array:
+    if _USE_PALLAS:
+        return dequant_pages_kernel(payload, scales, bits, out_dtype)
+    return _ref.dequant_kv_page(payload, scales, bits).astype(out_dtype)
+
+
+def _pool_partials(q: Array, pool: Dict[str, Array]):
+    fn = paged_attn_kernel if _USE_PALLAS else _ref.paged_quant_attention
+    return fn(
+        q,
+        pool["k_pages"],
+        pool["k_scales"],
+        pool["v_pages"],
+        pool["v_scales"],
+        pool["page_table"],
+        pool["n_pages"],
+        pool["bits"],
+    )
+
+
+def tiered_decode_attention(
+    q: Array,  # [B, H, hd]
+    pools: Dict[str, Dict[str, Array]],
+    recent_k: Array,  # [B, R, KV, hd]
+    recent_v: Array,
+    recent_len,
+    cfg=None,
+    with_telemetry: bool = False,
+):
+    """Attention over tiered compressed KV pools + dense recent window.
+
+    Returns out [B, H, hd] f32; with_telemetry=True also returns
+    {tier: normalized page hotness [B, MP]} (softmax mass per page).
+    """
+    parts = [_ref.dense_recent_attention(q, recent_k, recent_v, recent_len)]
+    masses = {}
+    for name in sorted(pools):
+        out_u, m, l, mass, base = _pool_partials(q, pools[name])
+        parts.append((out_u, m, l))
+        masses[name] = (mass, base)
+    out = _ref.merge_partials(parts)
+    if not with_telemetry:
+        return out
+    # Global (m_tot, l_tot) for exact normalization of page masses.
+    m_tot = jnp.max(jnp.stack([p[1] for p in parts]), axis=0)  # [B,H]
+    l_tot = sum(p[2] * jnp.exp(p[1] - m_tot) for p in parts)  # [B,H]
+    # Heads were collapsed in the mass telemetry; normalize by the summed
+    # head partition function at the global max base.
+    z = jnp.sum(l_tot * jnp.exp(m_tot - jnp.max(m_tot, -1, keepdims=True)), -1)
+    mref = jnp.max(m_tot, -1)  # [B]
+    hot = {
+        name: mass * jnp.exp(base - mref[:, None]) / jnp.maximum(z[:, None], 1e-30)
+        for name, (mass, base) in masses.items()
+    }
+    return out, hot
+
+
+def page_hotness(mass: Array, base: Array, m_tot: Array, l_tot: Array) -> Array:
+    """Rebase per-page local-max masses to the merged global softmax."""
+    z = jnp.sum(l_tot * jnp.exp(m_tot - jnp.max(m_tot, -1, keepdims=True)), -1)
+    mref = jnp.max(m_tot, -1)
+    return mass * jnp.exp(base - mref[:, None]) / jnp.maximum(z[:, None], 1e-30)

@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: paged decode attention over ONE quantized tier pool.
+
+This is the paper's warm-data access path made cheap: instead of fault-and-
+decompress (the 2-Tier cost model), the decode step *reads the compressed
+pool directly* — pages are DMA'd to VMEM by the pipeline (page table drives
+the BlockSpec index_map via scalar prefetch), dequantized in registers, and
+consumed by an online-softmax accumulation. Per-page softmax mass is emitted
+as exact hotness telemetry for the TierScape manager.
+
+Mixed tiers are handled by running this kernel once per tier pool and
+merging the flash partials (exact logsumexp merge) together with the dense
+recent-window partial — see ``ops.tiered_decode_attention``.
+
+Grid: (batch, max_pages). The page axis is sequential ("arbitrary"): VMEM
+scratch carries (acc, m, l) across pages of one sequence; outputs are
+written at the last page step. Invalid table slots (>= n_pages[b]) are
+skipped with @pl.when, and their index_map clamps to page 0 so the pipeline
+still has a legal block to fetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _unpack_int4(p):
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    q = jnp.stack([lo, hi], axis=-1)
+    return q.reshape(*p.shape[:-1], p.shape[-1] * 2).astype(jnp.float32)
+
+
+def _paged_attn_kernel(
+    # scalar-prefetch operands
+    table_ref,  # [B, MP] int32
+    npages_ref,  # [B] int32
+    # array operands (blocked)
+    q_ref,  # [1, H, hd]
+    kp_ref,  # [1, T, KV, hd(|//2)]
+    ks_ref,  # [1, T, KV]
+    vp_ref,
+    vs_ref,
+    # outputs
+    out_ref,  # [1, H, hd] f32 (unnormalized)
+    m_ref,  # [1, H] f32
+    l_ref,  # [1, H] f32
+    mass_ref,  # [1, 1] f32 per (b, p): page softmax mass at its local base
+    base_ref,  # [1, 1] f32 per (b, p): the local base (page max score)
+    # scratch
+    acc_ref,  # [KV, G, hd] f32
+    run_m_ref,  # [KV, G] f32
+    run_l_ref,  # [KV, G] f32
+    *,
+    bits: int,
+    kv: int,
+    group: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    mp = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        run_m_ref[...] = jnp.full_like(run_m_ref, NEG_INF)
+        run_l_ref[...] = jnp.zeros_like(run_l_ref)
+
+    valid = p < npages_ref[b]
+
+    @pl.when(valid)
+    def _accumulate():
+        hd = acc_ref.shape[-1]
+        q = q_ref[0].astype(jnp.float32).reshape(kv, group, hd) / (hd**0.5)
+        if bits == 8:
+            k = kp_ref[0].astype(jnp.float32)
+            v = vp_ref[0].astype(jnp.float32)
+        else:
+            k = _unpack_int4(kp_ref[0].astype(jnp.int32))
+            v = _unpack_int4(vp_ref[0].astype(jnp.int32))
+        k = k * ks_ref[0][..., None]  # [T, KV, hd]
+        v = v * vs_ref[0][..., None]
+
+        scores = jnp.einsum("kgh,tkh->kgt", q, k)  # [KV, G, T]
+        page_max = jnp.max(scores, axis=-1)  # [KV, G]
+        m_old = run_m_ref[...]
+        m_new = jnp.maximum(m_old, page_max)
+        alpha = jnp.exp(m_old - m_new)  # rescale old accumulators
+        e = jnp.exp(scores - m_new[..., None])  # [KV, G, T]
+        l_new = run_l_ref[...] * alpha + jnp.sum(e, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum("kgt,tkh->kgh", e, v)
+        run_m_ref[...] = m_new
+        run_l_ref[...] = l_new
+        # Exact per-page attention-mass telemetry at the page's local base
+        # (rebased to the merged global max by ops.page_hotness).
+        pbase = jnp.max(page_max)
+        e_loc = jnp.exp(scores - pbase)
+        mass_ref[0, 0] = jnp.sum(e_loc)
+        base_ref[0, 0] = pbase
+
+    @pl.when(jnp.logical_not(valid))
+    def _skip():
+        mass_ref[0, 0] = 0.0
+        base_ref[0, 0] = NEG_INF
+
+    @pl.when(p == mp - 1)
+    def _finalize():
+        hd = acc_ref.shape[-1]
+        out_ref[0] = acc_ref[...].reshape(kv * group, hd)
+        # Empty pools report m=0 (matching the ref's m_safe convention).
+        m_fin = jnp.where(run_l_ref[...] > 0.0, run_m_ref[...], 0.0)
+        m_ref[0] = m_fin.reshape(kv * group)
+        l_ref[0] = run_l_ref[...].reshape(kv * group)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def paged_quant_attention(
+    q: jax.Array,  # [B, H, hd]
+    k_pages: jax.Array,  # [P, T, KV, hd(|//2)]
+    k_scales: jax.Array,  # [P, T, KV]
+    v_pages: jax.Array,
+    v_scales: jax.Array,
+    page_table: jax.Array,  # [B, MP] int32
+    n_pages: jax.Array,  # [B] int32
+    bits: int,
+    interpret: bool = True,
+):
+    """Flash partials over one pool: (out_unnorm, m, l, page_mass)."""
+    b, h, hd = q.shape
+    pp, t, kv, hdp = k_pages.shape
+    mp = page_table.shape[1]
+    group = h // kv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, pi, tab, np_: (bi, 0, 0)),
+            pl.BlockSpec((1, t, kv, hdp), lambda bi, pi, tab, np_: (tab[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, t, kv), lambda bi, pi, tab, np_: (tab[bi, pi], 0, 0)),
+            pl.BlockSpec((1, t, kv, hdp), lambda bi, pi, tab, np_: (tab[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, t, kv), lambda bi, pi, tab, np_: (tab[bi, pi], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, pi, tab, np_: (bi, 0, 0)),
+            pl.BlockSpec((1, h), lambda bi, pi, tab, np_: (bi, 0)),
+            pl.BlockSpec((1, h), lambda bi, pi, tab, np_: (bi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, pi, tab, np_: (bi, pi)),
+            pl.BlockSpec((1, 1), lambda bi, pi, tab, np_: (bi, pi)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kv, group, hd), jnp.float32),
+            pltpu.VMEM((kv, group), jnp.float32),
+            pltpu.VMEM((kv, group), jnp.float32),
+        ],
+    )
+    out, m, l, mass, base = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, bits=bits, kv=kv, group=group),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, mp), jnp.float32),
+            jax.ShapeDtypeStruct((b, mp), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(page_table, n_pages, q, k_pages, k_scales, v_pages, v_scales)
+    return out, m, l, mass, base

@@ -1,0 +1,242 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the exact semantics the kernels must reproduce (tests sweep
+shapes/dtypes and assert_allclose kernel-vs-ref). They are also the portable
+fallback path used when Pallas is unavailable.
+
+KV-page quantization layout (serving hot path):
+  page:    [T, KV, hd]  bf16 source (T tokens per page)
+  int8:    payload [T, KV, hd] int8, scales [T, KV] f32 (absmax over hd)
+  int4:    payload [T, KV, hd//2] uint8 (lo nibble = even idx), scales as int8
+
+Paged attention partials follow flash-decoding: each tier's pool produces
+(out_unnorm, m, l, page_mass); partials merge exactly via logsumexp. The
+per-page attention mass is the paper's telemetry signal (exact hotness).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+QMAX = {8: 127.0, 4: 7.0}
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV-page quant / dequant
+# ---------------------------------------------------------------------------
+
+
+def quant_kv_page(page: Array, bits: int) -> Tuple[Array, Array]:
+    """page [..., T, KV, hd] -> (payload, scales [..., T, KV])."""
+    x = page.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(amax == 0, 1.0, amax / QMAX[bits])
+    q = jnp.clip(jnp.round(x / scale[..., None]), -QMAX[bits], QMAX[bits])
+    if bits == 8:
+        return q.astype(jnp.int8), scale
+    # int4: pack adjacent pairs along hd into one uint8.
+    qi = q.astype(jnp.int32)
+    lo = qi[..., 0::2] & 0xF
+    hi = qi[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8), scale
+
+
+def dequant_kv_page(payload: Array, scales: Array, bits: int) -> Array:
+    """Inverse of quant_kv_page (returns f32)."""
+    if bits == 8:
+        q = payload.astype(jnp.float32)
+    else:
+        p = payload.astype(jnp.int32)
+        lo = p & 0xF
+        hi = (p >> 4) & 0xF
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+        q = q.astype(jnp.float32)
+    return q * scales[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention over one quantized pool
+# ---------------------------------------------------------------------------
+
+
+def paged_quant_attention(
+    q: Array,  # [B, H, hd]
+    k_pages: Array,  # [P, T, KV, hd(|//2)] int8/uint8
+    k_scales: Array,  # [P, T, KV] f32
+    v_pages: Array,
+    v_scales: Array,
+    page_table: Array,  # [B, MP] int32 (pool page id; entries >= n_pages ignored)
+    n_pages: Array,  # [B] int32 valid page-table prefix length
+    bits: int,
+    slot_pos: Array = None,  # [B, MP] logical slot positions (default iota);
+    # sequence-parallel shards pass their global positions so validity
+    # against n_pages stays correct on a table slice.
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """Flash-decoding partials over the pool's pages.
+
+    Returns (out_unnorm [B,H,hd] f32, m [B,H], l [B,H],
+             page_mass [B,MP], page_base [B,MP]).
+    page_mass is the softmax mass of each page at its *local* base
+    (page_base = that page's max score over heads and tokens); the true
+    normalized hotness is  mass * exp(base - m_tot) / l_tot  once the global
+    (m_tot, l_tot) is known after merging (see ops.page_hotness).
+    softmax uses 1/sqrt(hd) scaling; GQA broadcast by kv head grouping.
+    """
+    b, h, hd = q.shape
+    mp = page_table.shape[1]
+    kv = k_pages.shape[2]
+    t = k_pages.shape[1]
+    g = h // kv
+
+    qf = q.astype(jnp.float32).reshape(b, kv, g, hd) / (hd**0.5)
+
+    # Scan over page-table chunks with online softmax — mirrors the kernel's
+    # page-at-a-time pipeline: the working set stays O(chunk) instead of
+    # materializing the whole dequantized pool (impossible at 500k context).
+    chunk = min(mp, 128)
+    pad = (-mp) % chunk
+    if slot_pos is None:
+        slot_pos = jnp.broadcast_to(jnp.arange(mp, dtype=jnp.int32)[None], (b, mp))
+    if pad:
+        page_table = jnp.pad(page_table, ((0, 0), (0, pad)))
+        slot_pos = jnp.pad(slot_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    n_chunks = (mp + pad) // chunk
+    table_c = page_table.reshape(b, n_chunks, chunk)
+    pos_c = jnp.moveaxis(slot_pos.reshape(b, n_chunks, chunk), 1, 0)
+
+    def body(carry, xs):
+        acc, m_run, l_run = carry
+        tbl, pos = xs  # [B, C], [B, C]
+        k = dequant_kv_page(k_pages[tbl], k_scales[tbl], bits)  # [B,C,T,KV,hd]
+        v = dequant_kv_page(v_pages[tbl], v_scales[tbl], bits)
+        scores = jnp.einsum("bkgh,bptkh->bkgpt", qf, k)  # [B,KV,G,C,T]
+        valid = (pos < n_pages[:, None])[:, None, None, :, None]
+        scores = jnp.where(valid, scores, -jnp.inf)
+
+        c_max = jnp.max(scores, axis=(3, 4))  # [B,KV,G]
+        c_max = jnp.where(jnp.isfinite(c_max), c_max, NEG_INF)
+        m_new = jnp.maximum(m_run, c_max)
+        shift = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+        e = jnp.where(valid, jnp.exp(scores - shift[..., None, None]), 0.0)
+        alpha = jnp.where(m_run > NEG_INF / 2, jnp.exp(m_run - shift), 0.0)
+        l_new = l_run * alpha + jnp.sum(e, axis=(3, 4))
+        acc_new = acc * alpha[..., None] + jnp.einsum("bkgpt,bptkh->bkgh", e, v)
+
+        # Telemetry at each page's local max.
+        p_base = jnp.max(scores, axis=(1, 2, 4))  # [B,C]
+        b_safe = jnp.where(jnp.isfinite(p_base), p_base, 0.0)
+        e_loc = jnp.where(valid, jnp.exp(scores - b_safe[:, None, None, :, None]), 0.0)
+        p_mass = jnp.sum(e_loc, axis=(1, 2, 4))  # [B,C]
+        p_base = jnp.where(jnp.isfinite(p_base), p_base, NEG_INF)
+        return (acc_new, m_new, l_new), (p_mass, p_base)
+
+    acc0 = jnp.zeros((b, kv, g, hd), jnp.float32)
+    m0 = jnp.full((b, kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g), jnp.float32)
+    (out, m, l), (masses, bases) = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.moveaxis(table_c, 1, 0), pos_c)
+    )
+    page_mass = jnp.moveaxis(masses, 0, 1).reshape(b, mp + pad)[:, :mp]
+    page_base = jnp.moveaxis(bases, 0, 1).reshape(b, mp + pad)[:, :mp]
+    m_safe = jnp.where(m > NEG_INF / 2, m, 0.0)
+    return (
+        out.reshape(b, h, hd),
+        m_safe.reshape(b, h),
+        l.reshape(b, h),
+        page_mass,
+        page_base,
+    )
+
+
+def dense_recent_attention(
+    q: Array,  # [B, H, hd]
+    recent_k: Array,  # [B, R, KV, hd]
+    recent_v: Array,
+    recent_len: Array,  # scalar or [B]
+) -> Tuple[Array, Array, Array]:
+    """Partials over the dense (uncompressed) recent window."""
+    b, h, hd = q.shape
+    kv = recent_k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, g, hd) / (hd**0.5)
+    scores = jnp.einsum("bkgh,brkh->bkgr", qf, recent_k.astype(jnp.float32))
+    r = recent_k.shape[1]
+    rl = jnp.broadcast_to(jnp.asarray(recent_len), (b,))
+    valid = (jnp.arange(r)[None] < rl[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(valid, jnp.exp(scores - m_safe[..., None]), 0.0)
+    l = jnp.sum(e, axis=-1)
+    out = jnp.einsum("bkgr,brkh->bkgh", e, recent_v.astype(jnp.float32))
+    return out.reshape(b, h, hd), m_safe.reshape(b, h), l.reshape(b, h)
+
+
+def merge_partials(parts: List[Tuple[Array, Array, Array]]) -> Array:
+    """Exact merge of flash partials [(out_unnorm, m, l), ...] -> out [B,H,hd]."""
+    m_all = jnp.stack([p[1] for p in parts])  # [N,B,H]
+    m_tot = jnp.max(m_all, axis=0)
+    num = 0.0
+    den = 0.0
+    for out_u, m, l in parts:
+        w = jnp.exp(m - m_tot)
+        num = num + out_u * w[..., None]
+        den = den + l * w
+    den = jnp.maximum(den, 1e-30)
+    return num / den[..., None]
+
+
+def tiered_decode_attention(
+    q: Array,
+    pools: dict,
+    recent_k: Array,
+    recent_v: Array,
+    recent_len,
+    cfg=None,
+) -> Array:
+    """Full oracle: attention over N quantized tier pools + dense recent
+    window, merged exactly. ``pools`` maps tier name -> dict with keys
+    (k_pages, k_scales, v_pages, v_scales, page_table, n_pages, bits).
+    Returns out [B, H, hd] (f32)."""
+    parts = [dense_recent_attention(q, recent_k, recent_v, recent_len)]
+    for name in sorted(pools):
+        p = pools[name]
+        out_u, m, l, _, _ = paged_quant_attention(
+            q,
+            p["k_pages"],
+            p["k_scales"],
+            p["v_pages"],
+            p["v_scales"],
+            p["page_table"],
+            p["n_pages"],
+            p["bits"],
+        )
+        parts.append((out_u, m, l))
+    return merge_partials(parts)
+
+
+def tiered_page_masses(q, pools) -> dict:
+    """Per-tier (page_mass, page_base) telemetry; normalize with
+    ops.page_hotness after merging."""
+    out = {}
+    for name, p in pools.items():
+        _, _, _, mass, base = paged_quant_attention(
+            q,
+            p["k_pages"],
+            p["k_scales"],
+            p["v_pages"],
+            p["v_scales"],
+            p["page_table"],
+            p["n_pages"],
+            p["bits"],
+        )
+        out[name] = (mass, base)
+    return out

@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this file — jax locks
+the device count at first init, and the dry-run needs 512 placeholder host
+devices to build the (2, 16, 16) mesh. Nothing else in the repo sets this
+flag (smoke tests and benchmarks see the real single CPU device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single|multi
+
+Each success writes experiments/dryrun/<arch>__<shape>__<mesh>.json with the
+memory analysis, cost analysis, and parsed collective bytes that
+EXPERIMENTS.md §Dry-run / §Roofline report.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, smoke: bool = False,
+             overrides: dict | None = None) -> dict:
+    # Imports deferred so XLA_FLAGS is set before any jax init.
+    import repro.configs as configs
+    from repro.configs.base import SHAPES
+    from repro.launch import cells as cells_mod
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis as ra
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+
+    t0 = time.time()
+    cell = cells_mod.build_cell(arch, shape_name, mesh, smoke=smoke, **(overrides or {}))
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch} x {shape_name} x {mesh_name}] {cell.kind} ({cell.notes})")
+    print("  memory_analysis:", mem)
+    ca = compiled.cost_analysis() or {}
+    print("  cost_analysis: flops=%.3e bytes=%.3e" % (ca.get("flops", 0), ca.get("bytes accessed", 0)))
+
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    mf = ra.model_flops_for(cfg, SHAPES[shape_name])
+    report = ra.analyze_compiled(
+        compiled, arch, shape_name, mesh_name, chips, mf, notes=cell.notes
+    )
+    print(
+        "  roofline: compute=%.3es memory=%.3es collective=%.3es -> %s | useful=%.3f fits=%s"
+        % (report.compute_s, report.memory_s, report.collective_s,
+           report.bottleneck, report.useful_ratio, report.fits_hbm)
+    )
+    data = report.to_json()
+    data.update(
+        kind=cell.kind,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        mem_argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        mem_temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        mem_output_bytes=getattr(mem, "output_size_in_bytes", None),
+        mem_alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json"), "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true", help="reduced configs (CI sanity)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    import repro.configs as configs
+
+    if args.mesh == "both":
+        meshes = [False, True]
+    elif args.mesh == "multi" or args.multi_pod:
+        meshes = [True]
+    else:
+        meshes = [False]
+
+    cells = []
+    if args.all:
+        for arch in configs.arch_ids():
+            for shape in configs.cells_for(arch):
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"skip {arch} x {shape} x {mesh_name} (exists)")
+                continue
+            try:
+                run_cell(arch, shape, multi_pod, args.out, smoke=args.smoke)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                traceback.print_exc()
+                failures.append((arch, shape, multi_pod, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("dry-run OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — ``pod`` is a
+second data-parallel axis crossing the inter-pod (DCN) boundary.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run pins the fake-device count before any init).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.sharding as jsh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jsh.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh helper for tests/examples (1-device CPU friendly)."""
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(jsh.AxisType.Auto,) * len(axes))

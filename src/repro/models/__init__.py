@@ -1,0 +1,4 @@
+from repro.models.transformer import DecodeState, Model, init_decode_state
+from repro.models.attention import ActivationSharding
+
+__all__ = ["Model", "DecodeState", "init_decode_state", "ActivationSharding"]

@@ -1,0 +1,315 @@
+"""Grouped-query attention with the flavors the assigned archs need:
+
+  * GQA with arbitrary kv-head count (incl. MHA when kv == heads),
+  * per-head q/k RMS norm (qwen3), QKV biases (qwen1.5),
+  * RoPE / M-RoPE (qwen2-vl), causal or bidirectional (hubert),
+  * three execution modes: full (train / prefill), cached decode (one new
+    token against a dense KV cache), and tiered decode (KV pages read from
+    software-defined compressed pools — the paper's technique; the jnp path
+    here is the oracle the Pallas kernel in ``repro.kernels`` matches).
+
+Activation sharding: callers pass an ``ActivationSharding`` so the same code
+lowers on a laptop (all None) and on the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationSharding:
+    """Logical -> mesh-axis mapping for activation constraints."""
+
+    batch: Optional[str] = None  # usually ("pod","data") flattened upstream
+    heads: Optional[str] = None  # usually "model"
+    kv_seq: Optional[str] = None  # "model" when sequence-parallel decode
+    constrain: Callable[[Array, P], Array] = lambda x, spec: x
+    tp: int = 1  # size of the model axis (for divisibility decisions)
+
+    def on_heads(self, x: Array) -> Array:
+        # x: [B, S, H, D]
+        return self.constrain(x, P(self.batch, None, self.heads, None))
+
+    def on_kv_seq(self, x: Array) -> Array:
+        # x: [B, S, H, D] with S the KV sequence axis
+        return self.constrain(x, P(self.batch, self.kv_seq, None, None))
+
+    def on_resid(self, x: Array) -> Array:
+        # x: [B, S, D] residual stream. Constrained at every block boundary
+        # so batch sharding survives scan/remat stashes (SSM blocks have no
+        # other constraint and XLA otherwise replicates the stash).
+        return self.constrain(x, P(self.batch, None, None))
+
+
+def init_attn_params(key: Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    hd = cfg.head_dim_()
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(kq, (cfg.d_model, cfg.n_heads, hd), dtype=dtype),
+        "wk": layers.dense_init(kk, (cfg.d_model, cfg.n_kv_heads, hd), dtype=dtype),
+        "wv": layers.dense_init(kv, (cfg.d_model, cfg.n_kv_heads, hd), dtype=dtype),
+        "wo": layers.dense_init(ko, (cfg.n_heads, hd, cfg.d_model), in_axis=1, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(
+    p: dict, cfg: ModelConfig, x: Array, positions, shard: ActivationSharding
+) -> Tuple[Array, Array, Array]:
+    """x: [B, S, D] -> q [B,S,H,hd], k/v [B,S,KV,hd] with rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q, k, v = shard.on_heads(q), shard.on_heads(k), shard.on_heads(v)
+    if cfg.mrope:
+        q = layers.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = layers.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, causal: bool, q_offset=0) -> Array:
+    """Softmax attention. q: [B,Sq,H,hd]; k/v: [B,Sk,KV,hd] (GQA broadcast).
+
+    Exact O(S^2)-memory path — short sequences and the oracle for the
+    chunked path below.
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, sq, kv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / (hd**0.5)
+    if causal:
+        sk = k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = qpos >= kpos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# Above this sequence length, attend_full switches to the blockwise online-
+# softmax path (flash-attention structure expressed in XLA: O(S * blk)
+# memory instead of O(S^2)). 32k prefill at d_model 8192 is impossible
+# without it.
+CHUNKED_ATTN_THRESHOLD = 2048
+Q_BLOCK = 512
+KV_BLOCK = 1024
+
+
+def _maybe_expand_kv(q: Array, k: Array, v: Array, shard: ActivationSharding):
+    """GQA -> MHA expansion when kv_heads cannot shard over the model axis.
+
+    With kv < TP, the (kv, group) reshape inside attention destroys head
+    sharding and GSPMD replicates every score tile across the model axis
+    (observed: ~7TB/device of tile all-gathers on the 235B MoE). Repeating
+    K/V to the full head count keeps tiles sharded on the 64-head dim; the
+    duplicated K/V tiles are ~100x smaller than the score tiles they
+    de-replicate.
+    """
+    h = q.shape[2]
+    kvh = k.shape[2]
+    if kvh == h or shard.heads is None or shard.tp <= 1:
+        return k, v
+    if kvh % shard.tp == 0 or h % shard.tp != 0:
+        return k, v
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    return shard.on_heads(k), shard.on_heads(v)
+
+
+def _sdpa_chunked(q: Array, k: Array, v: Array, causal: bool) -> Array:
+    """Blockwise exact attention: scan over q blocks, inner scan over kv
+    blocks with online-softmax accumulators. f32 accumulation."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    q_blk = min(Q_BLOCK, sq)
+    kv_blk = min(KV_BLOCK, sk)
+    assert sq % q_blk == 0 and sk % kv_blk == 0, (sq, sk)
+    nq, nk = sq // q_blk, sk // kv_blk
+
+    qf = q.astype(jnp.float32).reshape(b, nq, q_blk, kvh, group, hd) / (hd**0.5)
+    kf = k.astype(jnp.float32).reshape(b, nk, kv_blk, kvh, hd)
+    vf = v.astype(jnp.float32).reshape(b, nk, kv_blk, kvh, hd)
+
+    q_pos = jnp.arange(sq).reshape(nq, q_blk)
+    k_pos = jnp.arange(sk).reshape(nk, kv_blk)
+
+    # Remat per q-block: without this the backward stores every
+    # [B,H,q_blk,kv_blk] f32 tile (observed 25GB/device at 4k train) —
+    # recomputing the kv scan in bwd is the flash-attention trade.
+    @jax.checkpoint
+    def q_block_body(_, qi):
+        qb, qp = qi  # [b, q_blk, kv, g, hd], [q_blk]
+
+        def kv_block_body(carry, ki):
+            acc, m, l = carry
+            kb, vb, kp = ki
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb)
+            if causal:
+                mask = qp[:, None] >= kp[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            e = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(e, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bkgqs,bskh->bkgqh", e, vb)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kvh, group, q_blk, hd), jnp.float32)
+        m0 = jnp.full((b, kvh, group, q_blk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, group, q_blk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_block_body, (acc0, m0, l0),
+            (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), k_pos),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [b,kv,g,q_blk,hd]
+        return None, out
+
+    _, outs = jax.lax.scan(q_block_body, None, (jnp.moveaxis(qf, 1, 0), q_pos))
+    # outs: [nq, b, kv, g, q_blk, hd] -> [b, nq, q_blk, kv, g, hd] -> [b,S,H,hd]
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    return out.reshape(b, nq * q_blk, h, hd).astype(q.dtype)
+
+
+def attend_full(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    positions: Array,
+    shard: ActivationSharding,
+) -> Array:
+    """Training / prefill attention over the whole sequence."""
+    q, k, v = _project_qkv(p, cfg, x, positions, shard)
+    k, v = _maybe_expand_kv(q, k, v, shard)
+    if q.shape[1] > CHUNKED_ATTN_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, causal=cfg.causal)
+    else:
+        out = _sdpa(q, k, v, causal=cfg.causal)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y
+
+
+def attend_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    k_cache: Array,
+    v_cache: Array,
+    cache_len,
+    shard: ActivationSharding,
+    positions: Optional[Array] = None,
+) -> Tuple[Array, Array, Array]:
+    """One-token decode against a dense KV cache.
+
+    x: [B, 1, D]; k_cache/v_cache: [B, S_max, KV, hd]; cache_len: current
+    valid length (scalar int array). Returns (y, new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    if positions is None:
+        positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, shard)
+    # Masked additive write instead of dynamic-update-slice: elementwise ops
+    # keep the cache's (batch, seq-sharded) layout and alias the donated
+    # input, where a DUS at a dynamic index across seq shards forces GSPMD
+    # into a full-buffer copy (2.5x cache temp memory at 32k context).
+    slot = (jnp.arange(k_cache.shape[1]) == cache_len)[None, :, None, None]
+    k_cache = jnp.where(slot, k_new.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(slot, v_new.astype(v_cache.dtype), v_cache)
+    k_cache = shard.on_kv_seq(k_cache)
+    v_cache = shard.on_kv_seq(v_cache)
+
+    bq, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, hd)
+    # Keep the cache in bf16 and accumulate in f32 via the MXU — an explicit
+    # astype(f32) materializes a full f32 copy of the 32k-token cache.
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) / (hd**0.5)
+    valid = jnp.arange(k_cache.shape[1])[None, None, None, :] <= cache_len
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskh->bkgh", w.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y, k_cache, v_cache
+
+
+def attend_decode_tiered(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    pools: dict,
+    recent_k: Array,
+    recent_v: Array,
+    recent_len,
+    total_len,
+    shard: ActivationSharding,
+    dequant_attend_fn=None,
+) -> Tuple[Array, Array, Array]:
+    """One-token decode against tiered compressed KV pools + a dense recent
+    window — the paper's technique on the decode path.
+
+    pools: {"warm": {...}, "cold": {...}} as built by
+    ``repro.serving.kv_cache``; each holds quantized K/V pages plus scales
+    and a page table. ``dequant_attend_fn`` (default: jnp oracle in
+    ``repro.kernels.ref``) computes attention over the pools; the recent
+    dense window is attended exactly, and the two are merged with a
+    logsumexp-weighted combine (flash-decoding style).
+    """
+    from repro.kernels import ops as kops
+
+    b = x.shape[0]
+    positions = jnp.full((b, 1), total_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, shard)
+    recent_k = jax.lax.dynamic_update_slice_in_dim(recent_k, k_new, recent_len, axis=1)
+    recent_v = jax.lax.dynamic_update_slice_in_dim(recent_v, v_new, recent_len, axis=1)
+
+    fn = dequant_attend_fn or kops.tiered_decode_attention
+    out = fn(q[:, 0], pools, recent_k, recent_v, recent_len, cfg)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y, recent_k, recent_v

@@ -1,0 +1,62 @@
+"""Input construction: concrete batches (tests/examples) and abstract
+ShapeDtypeStruct specs (dry-run) for every arch family and shape kind.
+
+This is the single source of truth for what a (arch x shape) cell feeds the
+step function — the modality-frontend stubs live here (audio frame / vision
+patch embeddings per the assignment).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+
+def train_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    sd = jax.ShapeDtypeStruct
+    spec: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": sd((batch, seq), jnp.int32),
+        "targets": sd((batch, seq), jnp.int32),
+        "loss_mask": sd((batch, seq), jnp.float32),
+    }
+    if cfg.frontend == "audio":
+        spec["embeds"] = sd((batch, seq, cfg.d_model), jnp.bfloat16)
+        del spec["tokens"]
+    elif cfg.frontend == "vision":
+        spec["embeds"] = sd((batch, seq, cfg.d_model), jnp.bfloat16)
+        spec["embeds_mask"] = sd((batch, seq), jnp.bool_)
+        spec["positions"] = sd((3, batch, seq), jnp.int32)
+    return spec
+
+
+def decode_token_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> Dict[str, Array]:
+    """Concrete random batch matching train_batch_spec (tests/examples)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, Array] = {
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "loss_mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.frontend == "audio":
+        out["embeds"] = jnp.asarray(rng.normal(0, 1, (batch, seq, cfg.d_model)), jnp.bfloat16)
+    else:
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    if cfg.frontend == "vision":
+        n_patch = max(seq // 8, 1)
+        mask = np.zeros((batch, seq), bool)
+        mask[:, :n_patch] = True
+        out["embeds"] = jnp.asarray(rng.normal(0, 1, (batch, seq, cfg.d_model)), jnp.bfloat16)
+        out["embeds_mask"] = jnp.asarray(mask)
+        pos = np.broadcast_to(np.arange(seq)[None, None], (3, batch, seq)).copy()
+        out["positions"] = jnp.asarray(pos, jnp.int32)
+    return out

@@ -1,0 +1,125 @@
+"""Shared model layers: norms, rotary embeddings (incl. M-RoPE), inits.
+
+Pure-JAX (no flax): parameters are plain pytrees of jax.Arrays; every layer
+is a function (params, x) -> y. Initializers return abstract-friendly
+callables so the whole model can be built under jax.eval_shape for the
+dry-run without allocating.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape, in_axis: int = 0, dtype=jnp.bfloat16) -> Array:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, shape, dtype=jnp.bfloat16) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(w: Array, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(dtype)
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def make_norm_params(kind: str, dim: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return jnp.ones((dim,), dtype)
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_norm(kind: str, params, x: Array, eps: float) -> Array:
+    if kind == "rmsnorm":
+        return rmsnorm(params, x, eps)
+    return layernorm(params, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE) and Qwen2-VL M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array, positions3: Array, theta: float, sections: Tuple[int, int, int]
+) -> Array:
+    """Qwen2-VL multimodal RoPE: rotary dims split into (t, h, w) sections.
+
+    x: [batch, seq, heads, head_dim]; positions3: [3, batch, seq] (temporal,
+    height, width position ids — text tokens carry identical t/h/w ids, so
+    M-RoPE degrades to 1-D RoPE on pure text).
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)  # [half]
+    # Which section (and hence which position axis) each rotary dim uses.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # [half]
+    pos = positions3.astype(jnp.float32)  # [3, B, S]
+    pos_per_dim = pos[sec_id]  # [half, B, S]
+    angles = jnp.moveaxis(pos_per_dim, 0, -1) * freqs  # [B, S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)

@@ -1,0 +1,40 @@
+"""Dense FFN blocks (SwiGLU / GELU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def init_mlp_params(key: Array, cfg: ModelConfig, d_ff=None, dtype=jnp.bfloat16) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        kg, ku, kd = jax.random.split(key, 3)
+        return {
+            "w_gate": layers.dense_init(kg, (cfg.d_model, d_ff), dtype=dtype),
+            "w_up": layers.dense_init(ku, (cfg.d_model, d_ff), dtype=dtype),
+            "w_down": layers.dense_init(kd, (d_ff, cfg.d_model), dtype=dtype),
+        }
+    ku, kd = jax.random.split(key, 2)
+    return {
+        "w_up": layers.dense_init(ku, (cfg.d_model, d_ff), dtype=dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": layers.dense_init(kd, (d_ff, cfg.d_model), dtype=dtype),
+        "b_down": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def mlp(p: dict, cfg: ModelConfig, x: Array, constrain=lambda x: x) -> Array:
+    if cfg.act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = constrain(layers.swiglu(gate, up))
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"]
+    h = constrain(layers.gelu(h))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"]) + p["b_down"]

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training path: the chunked SSD algorithm (block-diagonal intra-chunk
+"attention" + inter-chunk state recurrence via an associative scan over
+chunk states). Decode path: the classic recurrent update with an O(1)
+state ``[B, H, P, N]`` plus a depthwise-conv ring buffer.
+
+Shapes follow the paper's minimal SSD listing:
+  x:  [B, L, H, P]   (H heads, P head_dim)
+  dt: [B, L, H]      (softplus-activated step sizes)
+  A:  [H]            (negative scalars)
+  B,C:[B, L, G, N]   (G state groups, N d_state)
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def init_ssm_params(key: Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    g, n = s.n_groups, s.d_state
+    k_in, k_conv, k_dt, k_out = jax.random.split(key, 4)
+    # in_proj emits [z (gate), x, B, C, dt] concatenated.
+    d_in_proj = 2 * di + 2 * g * n + nh
+    return {
+        "in_proj": layers.dense_init(k_in, (d, d_in_proj), dtype=dtype),
+        "conv_w": layers.dense_init(k_conv, (s.conv_kernel, di + 2 * g * n), dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * g * n,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),  # gated RMSNorm pre out_proj
+        "out_proj": layers.dense_init(k_out, (di, d), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    g, n = s.n_groups, s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over [B, L, C] with kernel [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(x: Array) -> Array:
+    """Stable 'segment sum' producing the 1-semiseparable mask (SSD paper).
+
+    x: [..., L] -> [..., L, L] with out[i,j] = sum_{j<k<=i} x[k], -inf for j>i.
+    """
+    l = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    diff = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array, dt: Array, a: Array, b: Array, c: Array, chunk: int
+) -> Tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y [B,L,H,P], final_state [B,H,P,N]).
+
+    a: [H] negative; b/c: [B, L, G, N] broadcast over heads per group.
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    orig_l = l
+    pad = (-l) % chunk
+    if pad:
+        # Zero-pad the tail: dt=0 makes padded steps identity state updates
+        # (exp(0)=1 decay, zero input contribution), so the final state and
+        # the first orig_l outputs are exact.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // chunk
+    rep = h // g
+
+    # Reshape into chunks.
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+    bh = jnp.repeat(bc, rep, axis=3)  # [B,nc,ch,H,N]
+    ch_ = jnp.repeat(cc, rep, axis=3)
+
+    da = dtc * a  # [B,nc,ch,H] (log decay per step)
+    da_cs = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+
+    # 1. Intra-chunk (diagonal block) output. (u = chunk index, i/j = pos in
+    # chunk, h = head, p = head_dim, s = state dim.)
+    seg = _segsum(jnp.swapaxes(da, 2, 3))  # [B,u,H,ch,ch]
+    att = jnp.exp(seg)
+    cb = jnp.einsum("buihs,bujhs->buhij", ch_.astype(jnp.float32), bh.astype(jnp.float32))
+    scores = cb * att
+    y_diag = jnp.einsum("buhij,bujh,bujhp->buihp", scores, dtc, xc.astype(jnp.float32))
+
+    # 2. Chunk-final states: decay-weighted sum of inputs.
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # [B,u,ch,H]
+    states = jnp.einsum(
+        "bujhs,bujh,bujhp->buhps",
+        bh.astype(jnp.float32),
+        dtc * decay_to_end,
+        xc.astype(jnp.float32),
+    )
+
+    # 3. Inter-chunk recurrence over chunk states (associative scan).
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # [B,nc,H]
+
+    def combine(carry, nxt):
+        s_prev, d_prev = carry
+        s_nxt, d_nxt = nxt
+        return s_prev * d_nxt[..., None, None] + s_nxt, d_prev * d_nxt
+
+    states_t = jnp.moveaxis(states, 1, 0)  # [u,B,H,P,N]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # [u,B,H]
+    scanned, _ = jax.lax.associative_scan(
+        lambda x1, x2: combine(x1, x2), (states_t, decay_t), axis=0
+    )
+    # States *entering* each chunk = scan result shifted by one.
+    init = jnp.zeros_like(scanned[:1])
+    entering = jnp.concatenate([init, scanned[:-1]], axis=0)
+    entering = jnp.moveaxis(entering, 0, 1)  # [B,u,H,P,N]
+
+    # 4. Inter-chunk contribution to outputs.
+    decay_from_start = jnp.exp(da_cs)  # [B,u,ch,H]
+    y_off = jnp.einsum(
+        "buihs,buhps,buih->buihp", ch_.astype(jnp.float32), entering, decay_from_start
+    )
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)[:, :orig_l]  # both [B,nc,ch,H,P]
+    final_state = scanned[-1]  # [B,H,P,N]
+    return y, final_state
+
+
+def ssm_block(
+    p: dict, cfg: ModelConfig, x: Array
+) -> Array:
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    g, n = s.n_groups, s.d_state
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+    bsz, l, _ = xs.shape
+    xs = xs.reshape(bsz, l, nh, s.head_dim)
+    b = b.reshape(bsz, l, g, n)
+    c = c.reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    y, _ = ssd_chunked(xs, dt, a, b, c, min(s.chunk, l))
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+
+    # Gated RMSNorm (mamba2 uses norm(y * silu(z))).
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = layers.rmsnorm(p["norm_w"], y, cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"])
+
+
+def ssm_decode_step(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    conv_state: Array,
+    ssm_state: Array,
+) -> Tuple[Array, Array, Array]:
+    """One-token recurrent step.
+
+    x: [B, 1, D]; conv_state: [B, K-1, C_conv]; ssm_state: [B, H, P, N].
+    Returns (y [B,1,D], new_conv_state, new_ssm_state).
+    """
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    g, n = s.n_groups, s.d_state
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = xbc[:, 0]  # [B, C_conv]
+
+    # Conv ring buffer: full window = [conv_state, xbc].
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xs, b, c = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    bsz = xs.shape[0]
+    xs = xs.reshape(bsz, nh, s.head_dim)
+    b = b.reshape(bsz, g, n)
+    c = c.reshape(bsz, g, n)
+    rep = nh // g
+    bh = jnp.repeat(b, rep, axis=1)  # [B,H,N]
+    ch_ = jnp.repeat(c, rep, axis=1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["A_log"])  # [H]
+    da = jnp.exp(dt1 * a)  # [B,H]
+
+    new_state = ssm_state * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt1, xs.astype(jnp.float32), bh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch_.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(bsz, di)
+
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    y = layers.rmsnorm(p["norm_w"], y.astype(x.dtype), cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out[:, None], new_conv_state, new_state

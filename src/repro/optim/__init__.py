@@ -1,0 +1,4 @@
+from repro.optim import adamw, grad_compress, tiered_adam
+from repro.optim.adamw import AdamWConfig, cosine_schedule
+
+__all__ = ["adamw", "tiered_adam", "grad_compress", "AdamWConfig", "cosine_schedule"]

@@ -1,0 +1,90 @@
+"""Int8 error-feedback gradient compression for the cross-pod reduce.
+
+The inter-pod hop (DCN / optical) is the scarcest bandwidth in a multi-pod
+job, and gradients are the dominant traffic on it. This applies the paper's
+idea to the wire: a software-defined compressed tier for gradients —
+per-group absmax int8 (4x fewer bytes than f32) with an error-feedback
+residual so compression noise becomes a delayed, not lost, contribution
+(Karimireddy et al., EF-SGD).
+
+Usage inside a shard_map whose manual axis is "pod":
+
+    g_sum, new_resid = compressed_psum(g_local + resid, "pod")
+
+Plain-jnp encode/decode (group=256) — the wire format, not a kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+GROUP = 256
+QMAX = 127.0
+
+
+def _enc(x: Array) -> Tuple[Array, Array]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % GROUP
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    g = flat.reshape(-1, GROUP)
+    scale = jnp.maximum(jnp.max(jnp.abs(g), axis=1, keepdims=True) / QMAX, 1e-20)
+    q = jnp.clip(jnp.round(g / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def _dec(q: Array, scale: Array, shape) -> Array:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    x = q.astype(jnp.float32) * scale
+    return x.reshape(-1)[:n].reshape(shape)
+
+
+def compress_roundtrip(x: Array) -> Tuple[Array, Array]:
+    """Returns (quantized_value, residual): x = value + residual."""
+    q, s = _enc(x)
+    xq = _dec(q, s, x.shape)
+    return xq, x.astype(jnp.float32) - xq
+
+
+def compressed_psum_tree(
+    grads: PyTree, residual: PyTree, axis_name: str
+) -> Tuple[PyTree, PyTree]:
+    """Error-feedback compressed all-reduce over ``axis_name``.
+
+    Each participant quantizes (grad + residual) to int8, all-reduces the
+    *quantized* values (the wire carries int8 payload + f32 group scales;
+    psum of dequantized values models the reduction result exactly — the
+    bytes-on-wire accounting is what the roofline uses), and keeps the
+    quantization error as next step's residual.
+    """
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (0.0 if r is None else r)
+        xq, new_r = compress_roundtrip(gf)
+        return jax.lax.psum(xq, axis_name), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual) if residual is not None else [None] * len(flat_g)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    summed = jax.tree.unflatten(treedef, [o[0] for o in out])
+    resid = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return summed, resid
+
+
+def init_residual(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes(params: PyTree) -> Tuple[int, int]:
+    """(uncompressed f32 bytes, compressed int8+scales bytes) per reduce."""
+    raw = sum(p.size * 4 for p in jax.tree.leaves(params))
+    comp = sum(p.size + (p.size // GROUP + 1) * 4 for p in jax.tree.leaves(params))
+    return raw, comp

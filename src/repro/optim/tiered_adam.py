@@ -1,0 +1,296 @@
+"""Tiered/compressed Adam moments — TierScape applied to optimizer state.
+
+Adam's m/v for cold parameter regions (embedding rows of 150k-256k vocabs,
+inactive experts) dominate training-state HBM at scale. Following the paper,
+each leaf's moment storage lives in a software-defined compressed tier:
+
+    policy[leaf_path] in {"none" (f32), "bf16", "int8", "int4"}
+
+int8/int4 use per-group absmax scales (group=128 on the trailing axis) with
+the same fixed ratio/latency trade-offs as the KV tiers. The TierScape
+manager chooses the policy per profile window from update-magnitude
+telemetry (hot leaves -> cheap codecs, cold leaves -> dense codecs); the
+update itself decodes -> applies Adam -> re-encodes, entirely inside jit.
+
+This is a faithful transplant of the paper's "warm data in low-latency
+tiers, cold data in high-ratio tiers" to training state; §Arch-applicability
+notes it is the only TierScape surface for attention-free archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+Array = jax.Array
+PyTree = Any
+
+GROUP = 128
+QMAX = {"int8": 127.0, "int4": 7.0}
+# Production data-axis degree: the (ng, group) reshape inside the update must
+# keep ng divisible by it, or GSPMD all-gathers the (data-sharded) payload.
+DP_HINT = 16
+
+
+def group_for(last_dim: int) -> int:
+    """Group size for a leaf whose trailing dim is ``last_dim``: prefer 128,
+    fall back so that last_dim % g == 0 and (last_dim//g) % DP_HINT == 0 —
+    keeps the grouped reshape local under data-axis sharding."""
+    for g in (128, 96, 64, 48, 32):
+        if last_dim % g == 0 and (last_dim // g) % DP_HINT == 0:
+            return g
+    for g in (128, 96, 64, 48, 32):
+        if last_dim % g == 0:
+            return g
+    return GROUP
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % GROUP
+
+
+# µ-law companding constants: dynamic (logarithmic) int codes give small
+# moments relative precision even in groups dominated by a large value —
+# linear absmax codes stall small coordinates (this is why 8-bit Adam
+# implementations use dynamic/blockwise codes, e.g. bitsandbytes).
+MU = {"int8": 255.0, "int4": 15.0}
+
+
+def _mulaw_enc(xn: Array, mu: float, qmax: float) -> Array:
+    return jnp.sign(xn) * jnp.log1p(mu * jnp.abs(xn)) / jnp.log1p(mu) * qmax
+
+
+def _mulaw_dec(q: Array, mu: float, qmax: float) -> Array:
+    y = q / qmax
+    return jnp.sign(y) * (jnp.expm1(jnp.abs(y) * jnp.log1p(mu))) / mu
+
+
+def encode_moment(x: Array, codec: str):
+    """f32 moment leaf -> (payload, scales) under ``codec``.
+
+    Grouping happens along the LAST axis only (padded to GROUP), so every
+    leading dimension — and its sharding — survives the transform. (A
+    whole-tensor flatten forces GSPMD to replicate the reshape: observed
+    39GB/device buffers on the 132B MoE before this.) int4 payloads are
+    nibble-packed; codec-free leaves carry a zero-size scales array so the
+    state pytree stays uniform.
+    """
+    if codec == "none":
+        return x.astype(jnp.float32), jnp.zeros((0, 1), jnp.float32)
+    if codec == "bf16":
+        return x.astype(jnp.bfloat16), jnp.zeros((0, 1), jnp.float32)
+    xf = x.astype(jnp.float32)
+    if xf.ndim == 0:
+        xf = xf.reshape(1)
+    last = xf.shape[-1]
+    grp = group_for(last)
+    pad = (-last) % grp
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)])
+    lead = xf.shape[:-1]
+    ng = xf.shape[-1] // grp
+    g = xf.reshape(*lead, ng, grp)
+    qmax = QMAX[codec]
+    scale = jnp.maximum(jnp.max(jnp.abs(g), axis=-1), 1e-20)  # [*lead, ng]
+    q = jnp.clip(jnp.round(_mulaw_enc(g / scale[..., None], MU[codec], qmax)), -qmax, qmax)
+    q = q.reshape(*lead, ng * grp).astype(jnp.int32)
+    if codec == "int4":
+        lo = q[..., 0::2] & 0xF
+        hi = q[..., 1::2] & 0xF
+        return (lo | (hi << 4)).astype(jnp.uint8), scale.astype(jnp.float32)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def decode_moment(payload: Array, scales, codec: str, shape) -> Array:
+    if codec in ("none", "bf16"):
+        return payload.astype(jnp.float32)
+    if codec == "int4":
+        p = payload.astype(jnp.int32)
+        lo = p & 0xF
+        hi = (p >> 4) & 0xF
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+        q = q.astype(jnp.float32)
+    else:
+        q = payload.astype(jnp.float32)
+    lead = q.shape[:-1]
+    last = shape[-1] if len(shape) else 1
+    grp = group_for(last)
+    ng = q.shape[-1] // grp
+    g = q.reshape(*lead, ng, grp)
+    x = _mulaw_dec(g, MU[codec], QMAX[codec]) * scales[..., None]
+    x = x.reshape(*lead, ng * grp)
+    x = x[..., :last]
+    return x.reshape(shape)
+
+
+@dataclasses.dataclass
+class TieredAdamState:
+    m: PyTree  # payloads
+    m_scales: PyTree
+    v: PyTree
+    v_scales: PyTree
+    step: Array
+    policy: Dict[str, str]  # leaf-path -> codec (static per jit trace)
+
+
+# policy is static metadata (it changes only at window boundaries, forcing a
+# deliberate retrace — that IS the tier-migration event).
+jax.tree_util.register_dataclass(
+    TieredAdamState,
+    data_fields=("m", "m_scales", "v", "v_scales", "step"),
+    meta_fields=("policy",),
+)
+
+
+def _freeze_policy(policy: Dict[str, str]):
+    return tuple(sorted(policy.items()))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def default_policy(params: PyTree, cold_codec: str = "int8") -> Dict[str, str]:
+    """Embedding-like leaves (vocab-scale rows) -> compressed; rest f32."""
+    policy = {}
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        policy[p] = cold_codec if ("embed" in p or "lm_head" in p) else "none"
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return policy
+
+
+def init(params: PyTree, policy: Dict[str, str]) -> TieredAdamState:
+    def enc_zero(path, p, for_v=False):
+        codec = policy[_path_str(path)]
+        if for_v and codec == "int4":
+            codec = "int8"
+        return encode_moment(jnp.zeros(p.shape, jnp.float32), codec)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    enc = [enc_zero(path, p) for path, p in paths_leaves]
+    enc_v = [enc_zero(path, p, for_v=True) for path, p in paths_leaves]
+    mk = lambda es, i: jax.tree.unflatten(treedef, [e[i] for e in es])
+    return TieredAdamState(
+        m=mk(enc, 0),
+        m_scales=mk(enc, 1),
+        v=mk(enc_v, 0),
+        v_scales=mk(enc_v, 1),
+        step=jnp.zeros((), jnp.int32),
+        policy=_freeze_policy(policy),
+    )
+
+
+def update(
+    grads: PyTree,
+    state: TieredAdamState,
+    params: PyTree,
+    cfg: AdamWConfig,
+) -> Tuple[PyTree, TieredAdamState, Dict[str, Array]]:
+    grads, gnorm = adamw.clip_by_global_norm(grads, cfg.grad_clip_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_msc = treedef.flatten_up_to(state.m_scales)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_vsc = treedef.flatten_up_to(state.v_scales)
+
+    pol = dict(state.policy)
+    new_p, new_m, new_msc, new_v, new_vsc = [], [], [], [], []
+    # Scheduling token: chains leaf updates so XLA processes them one at a
+    # time — the decode->update->encode working set of a 235B expert leaf is
+    # ~4GB f32, and without the chain the scheduler overlaps all leaves.
+    token = jnp.zeros((), jnp.float32)
+    for (path, p), g, m_pay, m_sc, v_pay, v_sc in zip(
+        paths_leaves, flat_g, flat_m, flat_msc, flat_v, flat_vsc
+    ):
+        codec = pol[_path_str(path)]
+        # 4-bit Adam keeps the second moment at 8 bits (1/sqrt(v) blows up
+        # under a 15-level code) — standard 4-bit-optimizer practice.
+        codec_v = "int8" if codec == "int4" else codec
+        g, token = jax.lax.optimization_barrier((g, token))
+        m = decode_moment(m_pay, m_sc, codec, p.shape)
+        v = decode_moment(v_pay, v_sc, codec_v, p.shape)
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        v = jnp.maximum(v, 0.0)  # quantization can introduce tiny negatives
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+        mp, msc = encode_moment(m, codec)
+        vp, vsc = encode_moment(v, codec_v)
+        new_m.append(mp)
+        new_msc.append(msc)
+        new_v.append(vp)
+        new_vsc.append(vsc)
+        token = token + new_p[-1].reshape(-1)[0].astype(jnp.float32) * 0.0
+
+    mk = lambda leaves: jax.tree.unflatten(treedef, leaves)
+    new_state = TieredAdamState(
+        m=mk(new_m),
+        m_scales=mk(new_msc),
+        v=mk(new_v),
+        v_scales=mk(new_vsc),
+        step=step,
+        policy=state.policy,
+    )
+    return mk(new_p), new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def moment_bytes(state: TieredAdamState) -> int:
+    tot = 0
+    for tree in (state.m, state.m_scales, state.v, state.v_scales):
+        for leaf in jax.tree.leaves(tree):
+            if leaf is not None:
+                tot += leaf.size * leaf.dtype.itemsize
+    return tot
+
+
+def repack(state: TieredAdamState, params: PyTree, new_policy: Dict[str, str]) -> TieredAdamState:
+    """Tier migration for optimizer state: decode under the old policy,
+    re-encode under the new one (the manager calls this between windows)."""
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_msc = treedef.flatten_up_to(state.m_scales)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_vsc = treedef.flatten_up_to(state.v_scales)
+    pol = dict(state.policy)
+    new_m, new_msc, new_v, new_vsc = [], [], [], []
+    for (path, p), m_pay, m_sc, v_pay, v_sc in zip(paths_leaves, flat_m, flat_msc, flat_v, flat_vsc):
+        key = _path_str(path)
+        old_vc = "int8" if pol[key] == "int4" else pol[key]
+        new_vc = "int8" if new_policy[key] == "int4" else new_policy[key]
+        m = decode_moment(m_pay, m_sc, pol[key], p.shape)
+        v = decode_moment(v_pay, v_sc, old_vc, p.shape)
+        mp, msc = encode_moment(m, new_policy[key])
+        vp, vsc = encode_moment(v, new_vc)
+        new_m.append(mp)
+        new_msc.append(msc)
+        new_v.append(vp)
+        new_vsc.append(vsc)
+    mk = lambda leaves: jax.tree.unflatten(treedef, leaves)
+    return TieredAdamState(
+        m=mk(new_m), m_scales=mk(new_msc), v=mk(new_v), v_scales=mk(new_vsc),
+        step=state.step, policy=_freeze_policy(new_policy),
+    )

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import RooflineReport, analyze_compiled, collective_bytes
+
+__all__ = ["analyze_compiled", "collective_bytes", "RooflineReport"]

@@ -1,0 +1,240 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` reports *per-device* flops/bytes for an SPMD
+program, so the per-chip terms divide by the single-chip peaks; the global
+numbers in the report multiply back by chip count.
+
+collective_bytes comes from parsing the post-SPMD HLO: every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute instruction's
+result shape (per-device), weighted by the wire factor of the algorithm
+(ring all-reduce moves ~2x its payload; the others ~1x). Instructions are
+attributed to ICI vs the pod axis by replica-group span when available.
+
+Hardware constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(TPU v5e; see core/hw.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.core import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,  # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, from post-SPMD HLO text."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nbytes = n * _DTYPE_BYTES[dtype] * _WIRE_FACTOR[kind]
+        out[kind] = out.get(kind, 0.0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+_UPCAST_RE = re.compile(
+    r"=\s*f32\[([0-9,]+)\][^\n]*?(?:wrapped_convert|\sconvert)\("
+)
+
+
+def cpu_upcast_bytes(hlo_text: str, min_bytes: int = 1 << 28) -> float:
+    """Bytes of bf16->f32 whole-buffer converts the CPU backend hoists.
+
+    XLA:CPU upcasts bf16 dot operands to f32 and hoists loop-invariant
+    converts above the layer scan, materializing f32 copies of e.g. the
+    whole KV cache. TPUs execute bf16 dots natively — these buffers do not
+    exist in the TPU memory plan, so the fits-HBM check subtracts them
+    (both raw and corrected numbers are reported).
+    Only large (>256MB) converts are counted to avoid nibbling at real
+    working-set converts.
+    """
+    total = 0.0
+    seen = set()
+    for m in _UPCAST_RE.finditer(hlo_text):
+        dims = m.group(1)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        nbytes = n * 4
+        if nbytes >= min_bytes:
+            # f32 copy replaces reading the bf16 original: net extra = f32
+            # buffer itself.
+            key = (dims, m.start() // 4096)  # cheap dedupe of near-identical
+            if key not in seen:
+                seen.add(key)
+                total += nbytes
+    return total
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device
+    flops_pd: float
+    bytes_pd: float
+    coll_bytes_pd: float
+    coll_by_kind: Dict[str, float]
+    # seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    # memory feasibility
+    args_bytes_pd: float
+    temps_bytes_pd: float
+    cpu_upcast_bytes_pd: float  # CPU-backend bf16->f32 artifacts (not on TPU)
+    fits_hbm: bool
+    # usefulness
+    model_flops: float  # 6*N*D (train) / 2*N*D (inference) — global
+    hlo_flops_global: float
+    useful_ratio: float
+    notes: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the *useful* compute is to the machine roofline at the
+        modeled step time: (MODEL_FLOPS / chips / step_time) / peak."""
+        if self.step_time_s <= 0:
+            return 0.0
+        ach = self.model_flops / self.chips / self.step_time_s
+        return ach / hw.V5E.peak_bf16_flops
+
+
+def analyze_compiled(
+    compiled,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    model_flops: float,
+    hlo_text: Optional[str] = None,
+    notes: str = "",
+) -> RooflineReport:
+    from repro.roofline import hlo_stats
+
+    ca = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    # Loop-trip-corrected static analysis (XLA cost_analysis counts while
+    # bodies once — useless for scanned programs; see hlo_stats docstring).
+    st = hlo_stats.analyze(text)
+    flops_pd = st.flops
+    bytes_pd = st.traffic_bytes
+    coll = st.coll_by_kind
+    notes = notes + f" | raw_cost_analysis flops={ca.get('flops', 0):.3e}"
+    mem = compiled.memory_analysis()
+    args_b = float(getattr(mem, "argument_size_in_bytes", 0))
+    temp_b = float(getattr(mem, "temp_size_in_bytes", 0))
+    out_b = float(getattr(mem, "output_size_in_bytes", 0))
+    alias_b = float(getattr(mem, "alias_size_in_bytes", 0))
+
+    compute_s = flops_pd / hw.V5E.peak_bf16_flops
+    memory_s = bytes_pd / hw.V5E.hbm_bw
+    collective_s = coll["total"] / hw.V5E.ici_link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    upcast_b = cpu_upcast_bytes(text)
+    hlo_global = flops_pd * chips
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_pd=flops_pd,
+        bytes_pd=bytes_pd,
+        coll_bytes_pd=coll["total"],
+        coll_by_kind=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        args_bytes_pd=args_b,
+        temps_bytes_pd=temp_b,
+        cpu_upcast_bytes_pd=upcast_b,
+        # donated args alias outputs; peak residency ~ args + temps + non-
+        # aliased out, minus the CPU-backend f32-upcast artifacts that have
+        # no TPU counterpart (bf16 dots are native there).
+        fits_hbm=(
+            args_b + max(temp_b - upcast_b, 0.0) + max(out_b - alias_b - args_b, 0.0)
+        ) <= hw.V5E.hbm_bytes,
+        model_flops=model_flops,
+        hlo_flops_global=hlo_global,
+        useful_ratio=(model_flops / hlo_global) if hlo_global else 0.0,
+        notes=notes,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for inference steps.
+
+    N = active params (MoE counts routed experts only). D = tokens processed
+    by one lowered step: global_batch*seq for train/prefill, global_batch
+    for decode (one token each).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch
+    flops = 2.0 * n * d
+    if cfg.has_attention:
+        # Decode attention reads the KV cache: 2*2*kv*hd per cached token per
+        # layer (QK and PV) — dominant at long context, so count it as useful.
+        la = cfg.n_layers if cfg.family != "hybrid" else -(-cfg.n_layers // cfg.hybrid_attn_every)
+        kvdim = cfg.n_kv_heads * cfg.head_dim_()
+        flops += 4.0 * d * shape.seq_len * kvdim * la * (cfg.n_heads // max(cfg.n_kv_heads, 1))
+    return flops
+
+
+def save_report(report: RooflineReport, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=2)

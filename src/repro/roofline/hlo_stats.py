@@ -1,0 +1,270 @@
+"""Static analyzer for post-SPMD HLO text with while-loop trip correction.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scanned programs (layer scans, grad-accum scans, attention block
+scans) by their trip factors. This parser rebuilds the numbers from the HLO
+text itself:
+
+  1. split the module into computations,
+  2. build the call graph: ``while(...) body=%b condition=%c`` edges carry
+     the trip count (the s32 constant in the condition's compare), ``calls=``
+     / fusion edges carry x1,
+  3. propagate execution counts from ENTRY,
+  4. per computation, accumulate:
+       * dot flops: 2 * prod(result dims) * prod(lhs contracting dim sizes),
+       * collective wire bytes (result size x wire factor; ring all-reduce
+         counts 2x),
+       * memory-traffic proxy: 2 x sum of instruction result bytes
+         (write + read-back estimate; bitcast/tuple plumbing excluded),
+  5. totals = sum(count(comp) * per-comp stats).
+
+All sizes are per-device (SPMD module). Exact for matmul flops and
+collective bytes; the traffic proxy is a documented estimate (EXPERIMENTS.md
+§Roofline, "HLO_bytes").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# Computation header: "%name (params...) -> type {"; params may contain
+# nested parens (tuple types), so match greedily to the "->".
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$")
+_SHAPE_RE = re.compile(r"%([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w\.\-]+)")
+_DOT_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\sdot\(%([\w\.\-]+),\s*%([\w\.\-]+)\)"
+    r".*?lhs_contracting_dims=\{([0-9,]*)\}"
+)
+_COLL_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SKIP_RESULT_OPS = (
+    "parameter(", "get-tuple-element(", "tuple(", "constant(", "bitcast(",
+    "after-all(", "partition-id(", "replica-id(",
+)
+
+
+def _dims(s: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in s.split(",")) if s else ()
+
+
+def _prod(dims) -> int:
+    out = 1
+    for d in dims:
+        out *= d
+    return out
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    traffic_bytes: float = 0.0
+    calls: List[Tuple[str, float, str]] = dataclasses.field(default_factory=list)  # (callee, mult, kind)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    traffic_bytes: float
+    n_computations: int
+    n_whiles: int
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur = None
+    for line in text.splitlines():
+        m = _HEADER_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(sym, name: str, f32_as_bf16: bool = False) -> float:
+    ent = sym.get(name)
+    if ent is None:
+        return 0.0
+    dt, dims = ent
+    nb = _DTYPE_BYTES.get(dt, 4)
+    if f32_as_bf16 and dt == "f32":
+        nb = 2
+    return _prod(dims) * nb
+
+
+def _line_traffic(line: str, sym) -> float:
+    """HBM bytes moved by one instruction under the fused-TPU model.
+
+    Dot operands/results count f32 at 2 bytes: on TPU the f32 values exist
+    only in MXU accumulators/VMEM — HBM-resident tensors are bf16 (this is
+    the "bf16-resident" napkin model; see module docstring).
+    """
+    sm = _SHAPE_RE.search(line)
+    if sm is None:
+        return 0.0
+    _, dt, dims = sm.group(1), sm.group(2), sm.group(3)
+    out_bytes = _prod(_dims(dims)) * _DTYPE_BYTES.get(dt, 4)
+    dm = _DOT_RE.search(line)
+    if dm:
+        out_b = _prod(_dims(dims)) * (2 if dt == "f32" else _DTYPE_BYTES.get(dt, 4))
+        return (
+            out_b
+            + _shape_bytes(sym, dm.group(3), f32_as_bf16=True)
+            + _shape_bytes(sym, dm.group(4), f32_as_bf16=True)
+        )
+    if " gather(" in line or " scatter(" in line:
+        return 2.0 * out_bytes
+    if " dynamic-update-slice(" in line:
+        # In-place update: traffic ~= the update operand, not the full buffer.
+        ops = _OPERANDS_RE.findall(line.split("dynamic-update-slice(", 1)[1])
+        upd = _shape_bytes(sym, ops[1]) if len(ops) > 1 else 0.0
+        return 2.0 * upd
+    if " dynamic-slice(" in line:
+        return 2.0 * out_bytes
+    if _COLL_RE.search(line):
+        return 2.0 * out_bytes
+    return 0.0
+
+
+def _trip_count(cond_lines: List[str]) -> float:
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"s32\[\]\s*constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return float(best)
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = _split_computations(text)
+
+    stats: Dict[str, CompStats] = {}
+    n_whiles = 0
+    for name, lines in comps.items():
+        cs = CompStats()
+        # Per-computation symbol table for operand shape lookups.
+        sym: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+        for line in lines:
+            sm = _SHAPE_RE.search(line)
+            if sm:
+                sym[sm.group(1)] = (sm.group(2), _dims(sm.group(3)))
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                n_whiles += 1
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                cs.calls.append((body, trips, "while"))
+                cs.calls.append((cond, trips, "while"))
+                continue
+            dm = _DOT_RE.search(line)
+            if dm:
+                out_dims = _dims(dm.group(2))
+                lhs = sym.get(dm.group(3))
+                cdims = _dims(dm.group(5))
+                if lhs is not None:
+                    k = _prod(lhs[1][i] for i in cdims)
+                else:
+                    k = 1
+                cs.dot_flops += 2.0 * _prod(out_dims) * k
+            cm = _COLL_RE.search(line)
+            if cm:
+                dt, dims, kind = cm.group(1), _dims(cm.group(2)), cm.group(3)
+                # bf16-resident convention: XLA:CPU upcasts bf16 dots to f32,
+                # so f32 activation/grad collectives here are bf16 on TPU.
+                nb = 2 if dt == "f32" else _DTYPE_BYTES.get(dt, 4)
+                nbytes = _prod(dims) * nb * _WIRE_FACTOR[kind]
+                cs.coll_bytes += nbytes
+                cs.coll_by_kind[kind] = cs.coll_by_kind.get(kind, 0.0) + nbytes
+            # HBM traffic model (TPU assumption: elementwise chains fuse into
+            # the matmuls/data movers, so HBM bytes ~= dot operands+results,
+            # gathers/scatters, dynamic slices, and collective results).
+            cs.traffic_bytes += _line_traffic(line, sym)
+            for m in _CALLS_RE.finditer(line):
+                if "while(" not in line:
+                    cs.calls.append((m.group(1), 1.0, "call"))
+        stats[name] = cs
+
+    # Propagate execution counts from ENTRY through the call DAG.
+    # ``counts``   : all edges — scales dot flops and collective bytes.
+    # ``counts_mem``: while edges only (the control skeleton) — scales the
+    #   HBM-traffic proxy. Fusion sub-computations stay out of the traffic
+    #   sum: their internal temporaries live in registers/VMEM, and the
+    #   fusion call site's result bytes are already counted in the parent.
+    def propagate(edge_filter) -> Dict[str, float]:
+        counts = {name: 0.0 for name in comps}
+        if entry:
+            counts[entry] = 1.0
+        for _ in range(64):
+            new_counts = {name: 0.0 for name in comps}
+            if entry:
+                new_counts[entry] = 1.0
+            for name, cs in stats.items():
+                c = counts[name]
+                if c <= 0:
+                    continue
+                for callee, mult, kind in cs.calls:
+                    if callee in new_counts and edge_filter(kind):
+                        new_counts[callee] += c * mult
+            if all(abs(new_counts[k] - counts[k]) <= 0.5 for k in counts):
+                counts = new_counts
+                break
+            counts = new_counts
+        return counts
+
+    counts = propagate(lambda kind: True)
+    counts_mem = propagate(lambda kind: kind == "while")
+
+    flops = sum(counts[n] * s.dot_flops for n, s in stats.items())
+    coll = sum(counts[n] * s.coll_bytes for n, s in stats.items())
+    traffic = sum(counts_mem[n] * s.traffic_bytes for n, s in stats.items())
+    by_kind: Dict[str, float] = {}
+    for n, s in stats.items():
+        for k, v in s.coll_by_kind.items():
+            by_kind[k] = by_kind.get(k, 0.0) + counts[n] * v
+    by_kind["total"] = coll
+    return HloStats(
+        flops=flops,
+        coll_bytes=coll,
+        coll_by_kind=by_kind,
+        traffic_bytes=traffic,
+        n_computations=len(comps),
+        n_whiles=n_whiles,
+    )

@@ -1,0 +1,3 @@
+from repro.runtime import elastic, serve, sharding, train
+
+__all__ = ["sharding", "train", "serve", "elastic"]

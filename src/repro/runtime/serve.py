@@ -1,0 +1,425 @@
+"""Serve-step builders: prefill and decode (dense KV cache or tiered
+compressed KV pools), with the shardings the dry-run lowers against.
+
+``decode`` lowers one engine step: append one token per sequence against a
+seq_len-long KV cache — the ``decode_32k`` / ``long_500k`` cells.
+
+``make_tiered_decode_step`` is the paper's technique on the decode path:
+the KV cache's warm/cold pages live in two device-resident quantized pools
+(host tiers are engine-managed outside the step); attention runs per-pool
+with an exact flash merge plus a dense recent window. The per-page softmax
+mass comes back as telemetry for the TierScape manager.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, TierScapeRunConfig
+from repro.models import layers
+from repro.models.transformer import DecodeState, Model
+from repro.runtime import sharding as shr
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeStep:
+    fn: Callable
+    params_specs: PyTree
+    state_specs: PyTree
+    token_spec: PyTree
+    mesh: Mesh
+
+
+def make_decode_step(
+    model: Model, mesh: Mesh, parallel: ParallelConfig,
+    batch_size: int = 1, max_len: int = 1024,
+) -> ServeStep:
+    cfg = model.cfg
+    act_shard = shr.activation_sharding(mesh, parallel, batch_size)
+
+    def step(params, token, state: DecodeState):
+        logits, state = model.decode_step(params, token, state, shard=act_shard)
+        return logits, state
+
+    params_shape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    p_specs = shr.param_specs(params_shape, cfg, mesh, parallel)
+    s_specs = shr.decode_state_specs(cfg, mesh, parallel, batch_size, max_len)
+    bax = shr.bax_spec(mesh, batch_size)
+    return ServeStep(
+        fn=step,
+        params_specs=p_specs,
+        state_specs=s_specs,
+        token_spec=P(bax, None),
+        mesh=mesh,
+    )
+
+
+def make_prefill_step(model: Model, mesh: Mesh, parallel: ParallelConfig):
+    cfg = model.cfg
+    act_shard = shr.activation_sharding(mesh, parallel)
+
+    def step(params, batch):
+        logits, aux = model.forward(params, batch, shard=act_shard)
+        return logits[:, -1]
+
+    params_shape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    p_specs = shr.param_specs(params_shape, cfg, mesh, parallel)
+    return step, p_specs
+
+
+# ---------------------------------------------------------------------------
+# Tiered decode (the paper's technique on the serving path)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TieredKVState:
+    """Device-resident tiered KV state for the jitted decode step.
+
+    Layer-stacked pools: warm (int8, SL-F8-HB-class tier) and cold (int4,
+    PK-I4-HB-class tier). Host tiers (C2/C4/C12) hold evicted pages outside
+    the step; the engine swaps them through the warm pool.
+    """
+
+    warm_k: jax.Array  # [L, Pw, T, KV, hd] int8
+    warm_k_scales: jax.Array  # [L, Pw, T, KV] f32
+    warm_v: jax.Array
+    warm_v_scales: jax.Array
+    warm_table: jax.Array  # [L, B, MPw] int32
+    warm_n: jax.Array  # [L, B] int32
+    cold_k: jax.Array  # [L, Pc, T, KV, hd//2] uint8
+    cold_k_scales: jax.Array
+    cold_v: jax.Array
+    cold_v_scales: jax.Array
+    cold_table: jax.Array
+    cold_n: jax.Array
+    recent_k: jax.Array  # [L, B, R, KV, hd] bf16
+    recent_v: jax.Array
+    recent_len: jax.Array  # int32 scalar
+    total_len: jax.Array  # int32 scalar
+
+
+def init_tiered_kv_state(
+    cfg: ModelConfig,
+    batch: int,
+    *,
+    page_tokens: int,
+    warm_pages: int,
+    cold_pages: int,
+    max_pages_per_seq: int,
+    recent_window: int,
+    n_attn_layers: int,
+) -> TieredKVState:
+    hd = cfg.head_dim_()
+    kv = cfg.n_kv_heads
+    la = n_attn_layers
+    t = page_tokens
+    return TieredKVState(
+        warm_k=jnp.zeros((la, warm_pages, t, kv, hd), jnp.int8),
+        warm_k_scales=jnp.ones((la, warm_pages, t, kv), jnp.float32),
+        warm_v=jnp.zeros((la, warm_pages, t, kv, hd), jnp.int8),
+        warm_v_scales=jnp.ones((la, warm_pages, t, kv), jnp.float32),
+        warm_table=jnp.zeros((la, batch, max_pages_per_seq), jnp.int32),
+        warm_n=jnp.zeros((la, batch), jnp.int32),
+        cold_k=jnp.zeros((la, cold_pages, t, kv, hd // 2), jnp.uint8),
+        cold_k_scales=jnp.ones((la, cold_pages, t, kv), jnp.float32),
+        cold_v=jnp.zeros((la, cold_pages, t, kv, hd // 2), jnp.uint8),
+        cold_v_scales=jnp.ones((la, cold_pages, t, kv), jnp.float32),
+        cold_table=jnp.zeros((la, batch, max_pages_per_seq), jnp.int32),
+        cold_n=jnp.zeros((la, batch), jnp.int32),
+        recent_k=jnp.zeros((la, batch, recent_window, kv, hd), jnp.bfloat16),
+        recent_v=jnp.zeros((la, batch, recent_window, kv, hd), jnp.bfloat16),
+        recent_len=jnp.zeros((), jnp.int32),
+        total_len=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_sp_pool_attention(mesh: Mesh, batch_axes: Tuple[str, ...]):
+    """Sequence/batch-parallel tiered-pool attention via shard_map.
+
+    Pools shard on the PAGE dim over (batch axes x model): the engine owns
+    allocation, placing a sequence's pages on the (pod, data) shard that owns
+    the sequence, striped over ``model`` by table slot — so every gather is
+    local. Tables shard (batch over data axes, slots over model); each shard
+    computes flash partials over its local pages; partials merge with an
+    exact logsumexp psum over ``model`` only. Compute, pool HBM and gather
+    traffic all divide by the full mesh — the SPMD-auto path instead
+    all-gathers the entire dequantized pool (the baseline bottleneck).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    page_axes: Tuple[str, ...] = tuple(batch_axes) + ("model",)
+    page_spec = page_axes if len(page_axes) > 1 else page_axes[0]
+    bax = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+
+    def partial_fn(q, kp, ks, vp, vs, table, slot_pos, n_pages, bits):
+        from repro.kernels import ref as kref
+
+        # Local page ids: global ids striped over every pool shard.
+        nshards = 1
+        for a in page_axes:
+            nshards *= jax.lax.psum(1, a)
+        local_table = table // nshards
+        out_u, m, l, mass, base = kref.paged_quant_attention(
+            q, kp, ks, vp, vs, local_table, n_pages, bits, slot_pos=slot_pos
+        )
+        # Exact cross-shard logsumexp merge over the slot axis.
+        m_tot = jax.lax.pmax(m, "model")
+        w = jnp.exp(m - m_tot)
+        out_m = jax.lax.psum(out_u * w[..., None], "model")
+        l_m = jax.lax.psum(l * w, "model")
+        return out_m, m_tot, l_m, mass, base
+
+    def run(q, pool, bits):
+        mp = pool["page_table"].shape[1]
+        b = pool["page_table"].shape[0]
+        slot_pos = jnp.broadcast_to(jnp.arange(mp, dtype=jnp.int32)[None], (b, mp))
+        fn = shard_map(
+            lambda *a: partial_fn(*a, bits=bits),
+            mesh=mesh,
+            in_specs=(
+                P(bax, None, None),  # q: one token per sequence
+                P(page_spec, None, None, None),
+                P(page_spec, None, None),
+                P(page_spec, None, None, None),
+                P(page_spec, None, None),
+                P(bax, "model"),  # table: batch rows + slots sharded
+                P(bax, "model"),  # global slot positions
+                P(bax),  # n_pages per batch row
+            ),
+            out_specs=(
+                P(bax, None, None),  # merged out_u
+                P(bax, None),  # merged m
+                P(bax, None),  # merged l
+                P(bax, "model"),  # local masses stay slot-sharded
+                P(bax, "model"),
+            ),
+            check_rep=False,
+        )
+        return fn(q, pool["k_pages"], pool["k_scales"], pool["v_pages"],
+                  pool["v_scales"], pool["page_table"], slot_pos, pool["n_pages"])
+
+    return run
+
+
+def make_tiered_decode_step(
+    model: Model,
+    mesh: Mesh,
+    parallel: ParallelConfig,
+    ts_cfg: TierScapeRunConfig,
+    use_kernels: bool = False,
+):
+    """Decode step over tiered KV pools for attention/hybrid archs.
+
+    Returns (step_fn, specs...). step_fn(params, token, tkv, extra_state)
+    -> (logits, tkv, extra_state, telemetry) where extra_state carries the
+    SSM states for hybrid archs (None-sized otherwise) and telemetry is the
+    per-layer warm/cold page attention mass.
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+    from repro.models import attention as attn_mod
+    from repro.models import mlp as mlp_mod
+    from repro.models import ssm as ssm_mod
+
+    cfg = model.cfg
+    act_shard = shr.activation_sharding(mesh, parallel)
+    tp = shr.axis_size(mesh, "model")
+    # Sequence-parallel pool attention (shard_map): pages, tables, compute
+    # and gathers all divide by TP. Requires the engine's slot-striped page
+    # allocation (table column j holds pages of shard j*TP//MP).
+    use_sp = parallel.shard_kv_seq and tp > 1 and not use_kernels
+    sp_attn = None
+    _batch_axes_holder = []
+
+    def _make_sp(batch_size):
+        return make_sp_pool_attention(mesh, shr.batch_axes_for(mesh, batch_size))
+
+    def attend_tiered(blk, x, layer_tkv, total_len, recent_len):
+        """x [B,1,D]; one attention layer against pools + recent window."""
+        hn = layers.apply_norm(cfg.norm, blk["norm1"], x, cfg.norm_eps)
+        b = x.shape[0]
+        positions = jnp.full((b, 1), total_len, dtype=jnp.int32)
+        q, k_new, v_new = attn_mod._project_qkv(blk["attn"], cfg, hn, positions, act_shard)
+        recent_k = jax.lax.dynamic_update_slice_in_dim(
+            layer_tkv["recent_k"], k_new.astype(layer_tkv["recent_k"].dtype), recent_len, axis=1
+        )
+        recent_v = jax.lax.dynamic_update_slice_in_dim(
+            layer_tkv["recent_v"], v_new.astype(layer_tkv["recent_v"].dtype), recent_len, axis=1
+        )
+        pools = {
+            "warm": {
+                "k_pages": layer_tkv["warm_k"],
+                "k_scales": layer_tkv["warm_k_scales"],
+                "v_pages": layer_tkv["warm_v"],
+                "v_scales": layer_tkv["warm_v_scales"],
+                "page_table": layer_tkv["warm_table"],
+                "n_pages": layer_tkv["warm_n"],
+                "bits": 8,
+            },
+            "cold": {
+                "k_pages": layer_tkv["cold_k"],
+                "k_scales": layer_tkv["cold_k_scales"],
+                "v_pages": layer_tkv["cold_v"],
+                "v_scales": layer_tkv["cold_v_scales"],
+                "page_table": layer_tkv["cold_table"],
+                "n_pages": layer_tkv["cold_n"],
+                "bits": 4,
+            },
+        }
+        if use_kernels:
+            out, hot = kops.tiered_decode_attention(
+                q[:, 0], pools, recent_k, recent_v, recent_len + 1, cfg, with_telemetry=True
+            )
+        elif use_sp:
+            sp = _make_sp(b)
+            parts = [kref.dense_recent_attention(q[:, 0], recent_k, recent_v, recent_len + 1)]
+            hot = {}
+            for name in ("warm", "cold"):
+                out_u, m, l, mass, _base = sp(q[:, 0], pools[name], pools[name]["bits"])
+                parts.append((out_u, m, l))
+                hot[name] = mass  # unnormalized local masses (telemetry)
+            out = kref.merge_partials(parts)
+        else:
+            out = kref.tiered_decode_attention(q[:, 0], pools, recent_k, recent_v, recent_len + 1, cfg)
+            hot = {"warm": jnp.zeros_like(layer_tkv["warm_table"], jnp.float32)[:, :],
+                   "cold": jnp.zeros_like(layer_tkv["cold_table"], jnp.float32)[:, :]}
+        y = jnp.einsum("bhk,hkd->bd", out.astype(x.dtype), blk["attn"]["wo"])[:, None]
+        if cfg.attn_out_bias:
+            y = y + blk["attn"]["bo"]
+        return x + y, recent_k, recent_v, hot
+
+    def step(params, token, tkv: TieredKVState, ssm_state):
+        x = params["embed"][token]
+        recent_len = tkv.recent_len
+        total_len = tkv.total_len
+        telemetry = {"warm": [], "cold": []}
+
+        new_recent_k, new_recent_v = [], []
+        if cfg.family == "hybrid":
+            every = cfg.hybrid_attn_every
+            n_apps = tkv.recent_k.shape[0]
+            conv_states, ssm_states = ssm_state
+            new_conv, new_ssm = [], []
+
+            def ssm_body(h, layer):
+                blk, conv, sst = layer
+                hn = layers.apply_norm(cfg.norm, blk["norm"], h, cfg.norm_eps)
+                y, conv, sst = ssm_mod.ssm_decode_step(blk["mixer"], cfg, hn, conv, sst)
+                return h + y, (conv, sst)
+
+            done = 0
+            for g in range(n_apps):
+                layer_tkv = {
+                    f: getattr(tkv, f)[g]
+                    for f in (
+                        "warm_k", "warm_k_scales", "warm_v", "warm_v_scales",
+                        "warm_table", "warm_n", "cold_k", "cold_k_scales",
+                        "cold_v", "cold_v_scales", "cold_table", "cold_n",
+                        "recent_k", "recent_v",
+                    )
+                }
+                x, rk, rv, hot = attend_tiered(params["shared"], x, layer_tkv, total_len, recent_len)
+                hn = layers.apply_norm(cfg.norm, params["shared"]["norm2"], x, cfg.norm_eps)
+                x = x + mlp_mod.mlp(params["shared"]["ffn"], cfg, hn)
+                new_recent_k.append(rk)
+                new_recent_v.append(rv)
+                telemetry["warm"].append(hot["warm"])
+                telemetry["cold"].append(hot["cold"])
+
+                width = min(every, cfg.n_layers - done)
+                group = jax.tree.map(lambda a: a[done : done + width], params["blocks"])
+                x, (cv, ss) = jax.lax.scan(
+                    ssm_body, x, (group, conv_states[done : done + width], ssm_states[done : done + width])
+                )
+                new_conv.append(cv)
+                new_ssm.append(ss)
+                done += width
+            ssm_state = (jnp.concatenate(new_conv), jnp.concatenate(new_ssm))
+        else:
+            n_layers = tkv.recent_k.shape[0]
+            for li in range(n_layers):
+                blk = jax.tree.map(lambda a: a[li], params["blocks"])
+                layer_tkv = {
+                    f: getattr(tkv, f)[li]
+                    for f in (
+                        "warm_k", "warm_k_scales", "warm_v", "warm_v_scales",
+                        "warm_table", "warm_n", "cold_k", "cold_k_scales",
+                        "cold_v", "cold_v_scales", "cold_table", "cold_n",
+                        "recent_k", "recent_v",
+                    )
+                }
+                x, rk, rv, hot = attend_tiered(blk, x, layer_tkv, total_len, recent_len)
+                hn = layers.apply_norm(cfg.norm, blk["norm2"], x, cfg.norm_eps)
+                if cfg.family == "moe":
+                    y2, _ = moe_ffn_local(blk, x, hn)
+                else:
+                    y2 = mlp_mod.mlp(blk["ffn"], cfg, hn)
+                x = x + y2
+                new_recent_k.append(rk)
+                new_recent_v.append(rv)
+                telemetry["warm"].append(hot["warm"])
+                telemetry["cold"].append(hot["cold"])
+
+        tkv = dataclasses.replace(
+            tkv,
+            recent_k=jnp.stack(new_recent_k),
+            recent_v=jnp.stack(new_recent_v),
+            recent_len=recent_len + 1,
+            total_len=total_len + 1,
+        )
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+        logits = model._head(params, x)
+        telemetry = {k: jnp.stack(v) for k, v in telemetry.items()}
+        return logits, tkv, ssm_state, telemetry
+
+    def moe_ffn_local(blk, x, hn):
+        from repro.models import moe as moe_mod
+
+        return moe_mod.moe_ffn(blk["moe"], cfg, hn)
+
+    return step
+
+
+def tiered_kv_state_specs(
+    mesh: Mesh, parallel: ParallelConfig, batch_size: int = 1, n_pool_pages: int = 0
+) -> TieredKVState:
+    """Pool pages shard over the model axis (sequence-parallel KV: each model
+    shard owns a slice of every sequence's pages); batch dims over data."""
+    bax = shr.bax_spec(mesh, batch_size)
+    tp = shr.axis_size(mesh, "model")
+    axes = shr.batch_axes_for(mesh, batch_size) + ("model",)
+    n_shards = 1
+    for a in axes:
+        n_shards *= shr.axis_size(mesh, a)
+    sp_on = parallel.shard_kv_seq and tp > 1 and n_pool_pages and n_pool_pages % n_shards == 0
+    page_ax = (axes if len(axes) > 1 else axes[0]) if sp_on else None
+    # Table slots shard with the pages (sequence parallelism).
+    table_ax = "model" if sp_on else None
+    return TieredKVState(
+        warm_k=P(None, page_ax, None, None, None),
+        warm_k_scales=P(None, page_ax, None, None),
+        warm_v=P(None, page_ax, None, None, None),
+        warm_v_scales=P(None, page_ax, None, None),
+        warm_table=P(None, bax, table_ax),
+        warm_n=P(None, bax),
+        cold_k=P(None, page_ax, None, None, None),
+        cold_k_scales=P(None, page_ax, None, None),
+        cold_v=P(None, page_ax, None, None, None),
+        cold_v_scales=P(None, page_ax, None, None),
+        cold_table=P(None, bax, table_ax),
+        cold_n=P(None, bax),
+        recent_k=P(None, bax, None, None, None),
+        recent_v=P(None, bax, None, None, None),
+        recent_len=P(),
+        total_len=P(),
+    )

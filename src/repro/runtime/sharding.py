@@ -1,0 +1,267 @@
+"""Parameter/activation sharding rules for the (pod, data, model) mesh.
+
+Tensor-parallel layout (Megatron-style) over the ``model`` axis:
+  * attention: q heads column-sharded, output row-sharded; KV projections
+    shard over kv-heads when divisible, otherwise replicate (GQA kv-heads <
+    TP degree is the common case at TP=16 — replicating the small KV
+    projections is the standard fix),
+  * MLP: gate/up column-, down row-sharded,
+  * MoE: experts sharded over ``model`` (expert parallelism); router
+    replicated,
+  * embeddings / lm_head: vocab-sharded,
+  * SSM blocks: replicated (sub-1B backbones — TP buys nothing; pure DP;
+    recorded in DESIGN.md),
+  * norms/biases/scales: replicated.
+
+``pod`` and ``data`` are both batch axes. With ``fsdp=True`` the d_model
+dimension of the large block weights and both moment trees additionally
+shard over ``data`` (ZeRO-3 style), which is what lets the 235B MoE fit.
+
+Everything is path-pattern driven so new archs inherit rules for free.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple  # noqa: F401
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.attention import ActivationSharding
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_axes_for(mesh: Mesh, batch_size: int) -> Tuple[str, ...]:
+    """Largest prefix of the batch axes whose product divides batch_size —
+    jit input shardings require exact divisibility, so small batches
+    (long_500k has global_batch=1) shard over fewer axes or none."""
+    out = []
+    prod = 1
+    for a in batch_axes(mesh):
+        sz = axis_size(mesh, a)
+        if batch_size % (prod * sz) == 0:
+            out.append(a)
+            prod *= sz
+        else:
+            break
+    return tuple(out)
+
+
+def bax_spec(mesh: Mesh, batch_size: int):
+    axes = batch_axes_for(mesh, batch_size)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_spec(
+    path: str,
+    shape: Tuple[int, ...],
+    cfg: ModelConfig,
+    mesh: Mesh,
+    parallel: ParallelConfig,
+) -> P:
+    """PartitionSpec for one parameter leaf (leading L dim when stacked)."""
+    tp = axis_size(mesh, "model")
+    dp = axis_size(mesh, "data")
+    fsdp = parallel.fsdp
+
+    stacked = path.startswith("blocks/")
+    lead: Tuple[Optional[str], ...] = (None,) if stacked else ()
+
+    def spec(*rest):
+        return P(*(lead + rest))
+
+    def div(dim: int, ax: int) -> bool:
+        return shape[ax + len(lead)] % dim == 0 if dim > 1 else True
+
+    d_shard = "data" if (fsdp and div(dp, 0)) else None  # d_model dim helper
+
+    # ---- embeddings / head -------------------------------------------------
+    if re.search(r"(^|/)embed$", path):
+        return P("model" if shape[0] % tp == 0 else None, "data" if fsdp and shape[1] % dp == 0 else None)
+    if re.search(r"(^|/)lm_head$", path):
+        return P("data" if fsdp and shape[0] % dp == 0 else None, "model" if shape[1] % tp == 0 else None)
+
+    # ---- attention ---------------------------------------------------------
+    # Head-count-divisible -> Megatron head sharding. Otherwise fall back to
+    # sharding the d_model (contraction) dim over "model" — partial-sum
+    # matmuls + an all-reduce, works for any head count (20 MHA heads on
+    # TP=16, GQA kv=8 on TP=16, ...). jit input shardings require exact
+    # divisibility, so uneven head sharding is not an option.
+    if re.search(r"attn/wq$", path):
+        if div(tp, 1):
+            return spec(d_shard, "model", None)
+        return spec("model" if div(tp, 0) else d_shard, None, None)
+    if re.search(r"attn/w[kv]$", path):
+        if div(tp, 1):
+            return spec(d_shard, "model", None)
+        return spec("model" if div(tp, 0) else d_shard, None, None)
+    if re.search(r"attn/wo$", path):
+        if div(tp, 0):
+            return spec("model", None, d_shard)
+        return spec(None, None, "model" if div(tp, 2) else d_shard)
+    if re.search(r"attn/b[qkv]$", path) or re.search(r"attn/bo$", path):
+        return spec(*((None,) * (len(shape) - len(lead))))
+
+    # ---- MoE ---------------------------------------------------------------
+    # Experts over ``model`` (EP) and the FFN dim over ``data`` — expert-TP
+    # instead of FSDP: weights never re-gather per microbatch (the dominant
+    # collective at accum=8 on the 235B), at the cost of one ye all-reduce
+    # over ``data`` per layer. Moments inherit the fully-sharded layout.
+    if re.search(r"moe/router$", path):
+        return spec(None, None)
+    if re.search(r"moe/w_(gate|up)$", path):
+        f_ax = "data" if (fsdp and div(dp, 2)) else None
+        return spec("model" if div(tp, 0) else None, None, f_ax)
+    if re.search(r"moe/w_down$", path):
+        f_ax = "data" if (fsdp and div(dp, 1)) else None
+        return spec("model" if div(tp, 0) else None, f_ax, None)
+
+    # ---- dense MLP ---------------------------------------------------------
+    if re.search(r"ffn/w_(gate|up)$", path):
+        return spec(d_shard, "model" if div(tp, 1) else None)
+    if re.search(r"ffn/w_down$", path):
+        return spec("model" if div(tp, 0) else None, d_shard)
+    if re.search(r"ffn/b_", path):
+        return spec(*((None,) * (len(shape) - len(lead))))
+
+    # ---- SSM (replicated; see module docstring) ----------------------------
+    if "mixer/" in path:
+        return spec(*((None,) * (len(shape) - len(lead))))
+
+    # ---- everything else (norms, scalars) ----------------------------------
+    return spec(*((None,) * (len(shape) - len(lead))))
+
+
+def param_specs(params_shape: PyTree, cfg: ModelConfig, mesh: Mesh, parallel: ParallelConfig) -> PyTree:
+    """Pytree of PartitionSpec matching a params (or eval_shape) pytree."""
+
+    def one(path, leaf):
+        return param_spec(_path_str(path), tuple(leaf.shape), cfg, mesh, parallel)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def shardings_for(params_shape: PyTree, cfg: ModelConfig, mesh: Mesh, parallel: ParallelConfig):
+    specs = param_specs(params_shape, cfg, mesh, parallel)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_specs_tree: PyTree) -> dict:
+    """AdamW moments inherit their parameter's spec; step is replicated."""
+    return {
+        "m": param_specs_tree,
+        "v": param_specs_tree,
+        "step": P(),
+    }
+
+
+def zero1_moment_specs(param_specs_tree: PyTree, params_shape: PyTree, mesh: Mesh) -> PyTree:
+    """ZeRO-1: shard optimizer moments over the ``data`` axis even where the
+    parameter itself is replicated (e.g. SSM blocks, odd-head projections).
+    The Adam update is elementwise, so sharded moments never gather; only
+    the (small, bf16) param delta does. Inserts ``data`` at the first free,
+    divisible dimension of each leaf's spec."""
+    dp = axis_size(mesh, "data")
+    if dp <= 1:
+        return param_specs_tree
+
+    def one(spec, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for s in parts:
+            if s is None:
+                continue
+            for a in (s if isinstance(s, tuple) else (s,)):
+                used.add(a)
+        if "data" in used:
+            return spec
+        for i, (s, dim) in enumerate(zip(parts, leaf.shape)):
+            if s is None and dim % dp == 0 and dim > 0:
+                parts[i] = "data"
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(one, param_specs_tree, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, batch: PyTree) -> PyTree:
+    """Inputs shard over the batch axes (divisibility-checked per leaf).
+    positions [3,B,S] shard dim 1."""
+
+    def one(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        if p == "positions" and nd == 3 and leaf.shape[0] == 3:
+            return P(None, bax_spec(mesh, leaf.shape[1]), *([None] * (nd - 2)))
+        return P(bax_spec(mesh, leaf.shape[0]), *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def activation_sharding(
+    mesh: Mesh, parallel: ParallelConfig, batch_size: Optional[int] = None
+) -> ActivationSharding:
+    if batch_size is None:
+        axes = batch_axes(mesh)
+        bax = axes if len(axes) > 1 else (axes[0] if axes else None)
+    else:
+        bax = bax_spec(mesh, batch_size)
+
+    def constrain(x, spec):
+        try:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        except (ValueError, TypeError):
+            return x
+
+    return ActivationSharding(
+        batch=bax,
+        heads="model" if axis_size(mesh, "model") > 1 else None,
+        kv_seq="model" if parallel.shard_kv_seq else None,
+        constrain=constrain,
+        tp=axis_size(mesh, "model"),
+    )
+
+
+def decode_state_specs(
+    cfg: ModelConfig, mesh: Mesh, parallel: ParallelConfig,
+    batch_size: int, max_len: int,
+):
+    """Shardings for DecodeState: KV caches shard over batch (+ model on the
+    kv-seq axis when sequence-parallel decode is on)."""
+    bax = bax_spec(mesh, batch_size)
+    tp = axis_size(mesh, "model")
+    kv_seq_ax = "model" if (parallel.shard_kv_seq and max_len % tp == 0) else None
+    kvh = cfg.n_kv_heads or 1
+    kv_head_ax = None
+    if kv_seq_ax is None and cfg.has_attention and kvh % tp == 0 and tp > 1:
+        kv_head_ax = "model"
+    from repro.models.transformer import DecodeState
+
+    return DecodeState(
+        k_cache=P(None, bax, kv_seq_ax, kv_head_ax, None),
+        v_cache=P(None, bax, kv_seq_ax, kv_head_ax, None),
+        cache_len=P(),
+        conv_state=P(None, bax, None, None),
+        ssm_state=P(None, bax, None, None, None),
+    )

@@ -1,0 +1,189 @@
+"""Train-step builder: loss -> grad -> (optionally compressed) reduce ->
+AdamW/tiered-AdamW update, with microbatch gradient accumulation, donation,
+and sharding in/out specs for pjit.
+
+The returned ``TrainStep`` bundles the pure function with the exact
+in/out shardings the launcher and the dry-run lower it with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.transformer import Model
+from repro.optim import adamw, tiered_adam
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import sharding as shr
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainStep:
+    fn: Callable  # (params, opt_state, batch) -> (params, opt_state, metrics)
+    params_specs: PyTree
+    opt_specs: PyTree
+    batch_specs: PyTree
+    mesh: Mesh
+
+    def jitted(self, donate: bool = True):
+        in_shardings = (
+            jax.tree.map(lambda s: NamedSharding(self.mesh, s), self.params_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: NamedSharding(self.mesh, s), self.opt_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: NamedSharding(self.mesh, s), self.batch_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+        )
+        return jax.jit(
+            self.fn,
+            in_shardings=in_shardings,
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    mesh: Mesh,
+    parallel: ParallelConfig,
+    batch_example: PyTree,
+    tiered_policy: Optional[dict] = None,
+) -> TrainStep:
+    cfg = model.cfg
+    bs_leaf = next(iter(jax.tree.leaves(batch_example)))
+    act_shard = shr.activation_sharding(mesh, parallel, int(bs_leaf.shape[0]))
+    use_tiered = tiered_policy is not None
+
+    # Gradients must live in the PARAM layout at all times: XLA otherwise
+    # picks a layer-dim sharding for scanned-weight cotangents and the
+    # reshard at the optimizer boundary degenerates to full replication
+    # ("involuntary full rematerialization" — observed 1TB/device on MoE).
+    params_shape0 = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    grad_specs = shr.param_specs(params_shape0, cfg, mesh, parallel)
+
+    def pin_grads(g):
+        def one(leaf, spec):
+            try:
+                return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, spec))
+            except (ValueError, TypeError):
+                return leaf
+
+        return jax.tree.map(one, g, grad_specs)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, shard=act_shard)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        accum = parallel.grad_accum
+        if accum <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, pin_grads(grads)
+        # Microbatch accumulation: scan over leading splits; grads in f32.
+        micro = {}
+        for k, v in batch.items():
+            if k == "positions" and v.ndim == 3 and v.shape[0] == 3:
+                micro[k] = v.reshape(3, accum, v.shape[1] // accum, *v.shape[2:]).swapaxes(0, 1)
+            else:
+                micro[k] = v.reshape(accum, v.shape[0] // accum, *v.shape[1:])
+
+        zero_g = pin_grads(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+        def body(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, _), g = grad_fn(params, mb)
+            g = pin_grads(g)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (pin_grads(g_acc), loss_acc + loss), None
+
+        (g, loss_sum), _ = jax.lax.scan(body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+        g = jax.tree.map(lambda a: a / accum, g)
+        loss = loss_sum / accum
+        return loss, {"loss": loss}, g
+
+    if use_tiered:
+
+        def step(params, opt_state, batch):
+            loss, metrics, grads = compute_grads(params, batch)
+            new_params, new_state, om = tiered_adam.update(grads, opt_state, params, opt_cfg)
+            metrics = dict(metrics, **om)
+            return new_params, new_state, metrics
+
+    else:
+
+        def step(params, opt_state, batch):
+            loss, metrics, grads = compute_grads(params, batch)
+            new_params, new_state, om = adamw.update(grads, opt_state, params, opt_cfg)
+            metrics = dict(metrics, **om)
+            return new_params, new_state, metrics
+
+    # --- shardings ----------------------------------------------------------
+    params_shape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    p_specs = shr.param_specs(params_shape, cfg, mesh, parallel)
+    if use_tiered:
+        opt_shape = jax.eval_shape(
+            lambda p: tiered_adam.init(p, tiered_policy), params_shape
+        )
+        # Compressed payloads keep the param's leading dims (grouping is
+        # last-axis only), so they inherit the param spec wherever it still
+        # divides; scales drop the last-dim sharding.
+        def _fits(spec, shape) -> bool:
+            parts = list(spec) + [None] * (len(shape) - len(spec))
+            for s, d in zip(parts, shape):
+                if s is None:
+                    continue
+                names = s if isinstance(s, tuple) else (s,)
+                size = 1
+                for n in names:
+                    size *= shr.axis_size(mesh, n)
+                if d % size:
+                    return False
+            return True
+
+        def moment_spec(spec, param_leaf, mom_leaf):
+            if _fits(spec, mom_leaf.shape):
+                return spec
+            parts = list(spec)
+            if parts:
+                parts[-1] = None
+            cand = P(*parts)
+            return cand if _fits(cand, mom_leaf.shape) else P()
+
+        def scale_spec(spec, param_leaf, sc_leaf):
+            if sc_leaf.shape[0] == 0:
+                return P()
+            parts = list(spec) + [None] * (len(sc_leaf.shape) - len(spec))
+            parts[-1] = None
+            cand = P(*parts)
+            return cand if _fits(cand, sc_leaf.shape) else P()
+
+        o_specs = tiered_adam.TieredAdamState(
+            m=jax.tree.map(moment_spec, p_specs, params_shape, opt_shape.m,
+                           is_leaf=lambda x: isinstance(x, P)),
+            m_scales=jax.tree.map(scale_spec, p_specs, params_shape, opt_shape.m_scales,
+                                  is_leaf=lambda x: isinstance(x, P)),
+            v=jax.tree.map(moment_spec, p_specs, params_shape, opt_shape.v,
+                           is_leaf=lambda x: isinstance(x, P)),
+            v_scales=jax.tree.map(scale_spec, p_specs, params_shape, opt_shape.v_scales,
+                                  is_leaf=lambda x: isinstance(x, P)),
+            step=P(),
+            policy=opt_shape.policy,
+        )
+    else:
+        # ZeRO-1: moments shard over data even where params are replicated.
+        m_specs = shr.zero1_moment_specs(p_specs, params_shape, mesh)
+        o_specs = {"m": m_specs, "v": m_specs, "step": P()}
+    b_specs = shr.batch_spec(mesh, batch_example)
+    return TrainStep(fn=step, params_specs=p_specs, opt_specs=o_specs,
+                     batch_specs=b_specs, mesh=mesh)

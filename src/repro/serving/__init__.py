@@ -1,0 +1,4 @@
+from repro.serving.engine import Request, TieredEngine
+from repro.serving.kv_cache import TieredKVCache
+
+__all__ = ["TieredEngine", "TieredKVCache", "Request"]

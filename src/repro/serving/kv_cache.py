@@ -1,0 +1,349 @@
+"""Tiered paged KV cache: device pools + host tiers + page tables.
+
+The KV cache is the serving analogue of the paper's application heap:
+
+  placement levels for a KV page (region):
+    1 = warm  device pool, int8-HBM   (C5/C6-class tier: low latency)
+    2 = cold  device pool, int4-HBM   (C9-class: denser, mid latency)
+    3 = host  int8 behind PCIe        (C7-class)
+    4 = host  int4 behind PCIe        (C10/C12-class: best TCO)
+
+  The dense *recent window* plays DRAM's role for the newest tokens and is
+  hotness-exempt (always uncompressed). Pages in device pools are read by
+  every decode step through the paged-attention kernel, which returns exact
+  per-page softmax mass — the hotness telemetry. Host pages are not read
+  in-step (the access-skip is the "fault cost": quality + swap latency);
+  the manager re-promotes them on waterfall/analytical recommendation and
+  the engine swaps payloads through the warm pool.
+
+All placement state is host-side numpy (daemon side); page payloads move
+through small jitted transcode helpers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import tco
+from repro.core.manager import ManagerConfig, TierScapeManager
+from repro.core.tiers import TierSet, get as get_tier
+from repro.kernels import ref as kref
+from repro.runtime.serve import TieredKVState, init_tiered_kv_state
+
+# Placement indices (0 stays "uncompressed DRAM" for cost-model parity with
+# the paper; KV pages never occupy it — the recent window does).
+WARM, COLD, HOST8, HOST4 = 1, 2, 3, 4
+KV_TIER_IDS = ("C5", "C9", "C7", "C10")  # int8-HBM, int4-HBM, int8-host, int4-host
+
+
+def kv_tierset(page_elems: int) -> TierSet:
+    return TierSet(tiers=tuple(get_tier(t) for t in KV_TIER_IDS), block_elems=page_elems)
+
+
+@dataclasses.dataclass
+class PageMeta:
+    layer: int
+    seq_slot: int
+    page_idx: int  # logical page index within the sequence
+    pool_slot: int = -1  # slot within its current pool
+
+
+class TieredKVCache:
+    """Host-side controller for one attention-layer-group x batch of slots."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_attn_layers: int,
+        batch_slots: int,
+        page_tokens: int,
+        max_seq_len: int,
+        recent_window: int,
+        manager_cfg: ManagerConfig,
+        warm_frac: float = 0.5,
+    ):
+        self.cfg = cfg
+        self.la = n_attn_layers
+        self.bs = batch_slots
+        self.pt = page_tokens
+        self.max_pages = max_seq_len // page_tokens
+        self.recent_window = recent_window
+        hd = cfg.head_dim_()
+        kv = cfg.n_kv_heads
+        self.page_elems = page_tokens * kv * hd * 2  # K and V
+        total_pages = self.la * self.bs * self.max_pages
+        warm_cap = max(int(total_pages * warm_frac), 8)
+        cold_cap = max(total_pages, 8)
+
+        self.state = init_tiered_kv_state(
+            cfg,
+            batch_slots,
+            page_tokens=page_tokens,
+            warm_pages=warm_cap,
+            cold_pages=cold_cap,
+            max_pages_per_seq=self.max_pages,
+            recent_window=recent_window,
+            n_attn_layers=n_attn_layers,
+        )
+        # Host tier pools: dict slot -> (k_pay, k_sc, v_pay, v_sc) numpy.
+        self.host_pages: Dict[int, Tuple[np.ndarray, ...]] = {}
+
+        # Region space: (layer, slot, page) flattened.
+        self.n_regions = total_pages
+        self.manager = TierScapeManager(
+            kv_tierset(self.page_elems),
+            self.n_regions,
+            region_bytes=self.page_elems * 2,
+            cfg=manager_cfg,
+        )
+        # KV pages never sit in DRAM; block the option by pricing it out.
+        self._page_exists = np.zeros(self.n_regions, bool)
+        self._free_warm = list(range(warm_cap - 1, -1, -1))
+        self._free_cold = list(range(cold_cap - 1, -1, -1))
+        self._pool_slot = np.full(self.n_regions, -1, np.int64)
+        self.quality_skipped_mass = 0.0  # cumulative mass of host-excluded pages
+
+    # ------------------------------------------------------------- helpers
+    def rid(self, layer: int, slot: int, page: int) -> int:
+        return (layer * self.bs + slot) * self.max_pages + page
+
+    def _quant_page(self, kpage, vpage, bits: int):
+        kp, ks = kref.quant_kv_page(kpage, bits)
+        vp, vs = kref.quant_kv_page(vpage, bits)
+        return kp, ks, vp, vs
+
+    # -------------------------------------------------- page ingestion path
+    def append_page(self, layer: int, slot: int, page: int, kpage, vpage) -> None:
+        """New page exits the recent window -> warm tier (T1-first, like the
+        paper's waterfall: everything starts in the low-latency tier). Falls
+        through to the cold tier under warm-pool pressure with nothing left
+        to demote (all warm slots held by in-flight migrations)."""
+        rid = self.rid(layer, slot, page)
+        if not self._free_warm:
+            self._evict_coldest_warm()
+        if not self._free_warm:
+            self._page_exists[rid] = True
+            self._insert(rid, layer, slot, page, kpage, vpage, COLD)
+            return
+        ps = self._free_warm.pop()
+        kp, ks, vp, vs = self._quant_page(kpage, vpage, 8)
+        st = self.state
+        st = dataclasses.replace(
+            st,
+            warm_k=st.warm_k.at[layer, ps].set(kp),
+            warm_k_scales=st.warm_k_scales.at[layer, ps].set(ks),
+            warm_v=st.warm_v.at[layer, ps].set(vp),
+            warm_v_scales=st.warm_v_scales.at[layer, ps].set(vs),
+        )
+        n = int(st.warm_n[layer, slot])
+        st = dataclasses.replace(
+            st,
+            warm_table=st.warm_table.at[layer, slot, n].set(ps),
+            warm_n=st.warm_n.at[layer, slot].set(n + 1),
+        )
+        self.state = st
+        self.manager.placement[rid] = WARM
+        self._page_exists[rid] = True
+        self._pool_slot[rid] = ps
+        # Live compressibility feedback (paper: measured ratios drive the
+        # analytical model).
+        self.manager.update_measured_ratio(WARM, 2.0 * kp.size / (kp.size + 4 * ks.size) * 1.0)
+
+    def _evict_coldest_warm(self) -> bool:
+        """Warm pool pressure: demote the coldest warm page to cold pool.
+        Returns False when there is nothing demotable."""
+        hot = self.manager.telemetry.averaged_hotness(2)
+        warm_rids = np.where((self.manager.placement == WARM) & self._page_exists)[0]
+        if warm_rids.size == 0:
+            return False
+        victim = warm_rids[np.argmin(hot[warm_rids])]
+        self.migrate(int(victim), COLD)
+        return True
+
+    # ------------------------------------------------------------ migration
+    def migrate(self, rid: int, dst: int) -> None:
+        src = int(self.manager.placement[rid])
+        if src == dst or not self._page_exists[rid]:
+            return
+        layer = rid // (self.bs * self.max_pages)
+        slot = (rid // self.max_pages) % self.bs
+        page = rid % self.max_pages
+        k, v = self._fetch_dense(rid, layer, slot, page)
+        self._remove(rid, layer, slot, page)
+        self._insert(rid, layer, slot, page, k, v, dst)
+
+    def _fetch_dense(self, rid, layer, slot, page):
+        """Decompress a page from wherever it lives (f32)."""
+        src = int(self.manager.placement[rid])
+        ps = int(self._pool_slot[rid])
+        st = self.state
+        if src == WARM:
+            k = kref.dequant_kv_page(st.warm_k[layer, ps], st.warm_k_scales[layer, ps], 8)
+            v = kref.dequant_kv_page(st.warm_v[layer, ps], st.warm_v_scales[layer, ps], 8)
+        elif src == COLD:
+            k = kref.dequant_kv_page(st.cold_k[layer, ps], st.cold_k_scales[layer, ps], 4)
+            v = kref.dequant_kv_page(st.cold_v[layer, ps], st.cold_v_scales[layer, ps], 4)
+        else:
+            kp, ks, vp, vs = self.host_pages[rid]
+            bits = 8 if src == HOST8 else 4
+            k = kref.dequant_kv_page(jnp.asarray(kp), jnp.asarray(ks), bits)
+            v = kref.dequant_kv_page(jnp.asarray(vp), jnp.asarray(vs), bits)
+        return k, v
+
+    def _remove(self, rid, layer, slot, page):
+        src = int(self.manager.placement[rid])
+        ps = int(self._pool_slot[rid])
+        st = self.state
+        if src == WARM:
+            # Drop from table by swapping with the last entry.
+            self._table_remove("warm", layer, slot, ps)
+            self._free_warm.append(ps)
+        elif src == COLD:
+            self._table_remove("cold", layer, slot, ps)
+            self._free_cold.append(ps)
+        else:
+            self.host_pages.pop(rid, None)
+        self._pool_slot[rid] = -1
+
+    def _table_remove(self, pool: str, layer: int, slot: int, pool_slot: int):
+        st = self.state
+        table = getattr(st, f"{pool}_table")
+        n = int(getattr(st, f"{pool}_n")[layer, slot])
+        row = np.array(table[layer, slot][:n])  # writable copy
+        idx = int(np.where(row == pool_slot)[0][0])
+        row[idx] = row[n - 1]
+        row[n - 1] = 0
+        new_table = table.at[layer, slot, :n].set(jnp.asarray(row))
+        kw = {f"{pool}_table": new_table,
+              f"{pool}_n": getattr(st, f"{pool}_n").at[layer, slot].set(n - 1)}
+        self.state = dataclasses.replace(st, **kw)
+
+    def _insert(self, rid, layer, slot, page, k, v, dst):
+        st = self.state
+        if dst == WARM and not self._free_warm:
+            if not self._evict_coldest_warm():
+                dst = COLD  # nothing demotable; spill to the next tier
+            st = self.state
+        if dst == WARM:
+            ps = self._free_warm.pop()
+            kp, ks, vp, vs = self._quant_page(k, v, 8)
+            st = dataclasses.replace(
+                st,
+                warm_k=st.warm_k.at[layer, ps].set(kp),
+                warm_k_scales=st.warm_k_scales.at[layer, ps].set(ks),
+                warm_v=st.warm_v.at[layer, ps].set(vp),
+                warm_v_scales=st.warm_v_scales.at[layer, ps].set(vs),
+            )
+            n = int(st.warm_n[layer, slot])
+            st = dataclasses.replace(
+                st,
+                warm_table=st.warm_table.at[layer, slot, n].set(ps),
+                warm_n=st.warm_n.at[layer, slot].set(n + 1),
+            )
+        elif dst == COLD:
+            ps = self._free_cold.pop()
+            kp, ks, vp, vs = self._quant_page(k, v, 4)
+            st = dataclasses.replace(
+                st,
+                cold_k=st.cold_k.at[layer, ps].set(kp),
+                cold_k_scales=st.cold_k_scales.at[layer, ps].set(ks),
+                cold_v=st.cold_v.at[layer, ps].set(vp),
+                cold_v_scales=st.cold_v_scales.at[layer, ps].set(vs),
+            )
+            n = int(st.cold_n[layer, slot])
+            st = dataclasses.replace(
+                st,
+                cold_table=st.cold_table.at[layer, slot, n].set(ps),
+                cold_n=st.cold_n.at[layer, slot].set(n + 1),
+            )
+        else:
+            bits = 8 if dst == HOST8 else 4
+            kp, ks, vp, vs = self._quant_page(k, v, bits)
+            self.host_pages[rid] = tuple(np.asarray(x) for x in (kp, ks, vp, vs))
+            ps = -2
+        self.state = st
+        self.manager.placement[rid] = dst
+        self._pool_slot[rid] = ps
+
+    # ------------------------------------------------------------ telemetry
+    def record_telemetry(self, telemetry: Dict[str, jax.Array]) -> None:
+        """Fold per-step page masses into region hotness counts.
+
+        telemetry[pool] : [L, B, MP] normalized masses; map each table entry
+        back to its region id via the logical page order of the table.
+        """
+        counts = np.zeros(self.n_regions)
+        st = self.state
+        for pool, placement in (("warm", WARM), ("cold", COLD)):
+            mass = np.asarray(telemetry[pool])  # [L,B,MP]
+            table = np.asarray(getattr(st, f"{pool}_table"))
+            nvec = np.asarray(getattr(st, f"{pool}_n"))
+            slot_to_rid = {}
+            pl = self.manager.placement
+            for rid in np.where((pl == placement) & self._page_exists)[0]:
+                layer = rid // (self.bs * self.max_pages)
+                slot = (rid // self.max_pages) % self.bs
+                slot_to_rid[(layer, slot, int(self._pool_slot[rid]))] = rid
+            for layer in range(self.la):
+                for slot in range(self.bs):
+                    n = int(nvec[layer, slot])
+                    for j in range(n):
+                        rid = slot_to_rid.get((layer, slot, int(table[layer, slot, j])))
+                        if rid is not None:
+                            counts[rid] += mass[layer, slot, j]
+        # Host pages are never read in-step: their skipped mass is the
+        # quality cost of the best-TCO tiers (tracked, reported).
+        self.manager.record_access_counts(counts * 1000.0)  # scale to count-like
+
+    # --------------------------------------------------------- window logic
+    def end_window(self):
+        """Run the placement model over existing pages; execute migrations."""
+        plan = self.manager.end_window()
+        moved = 0
+        for rid, dst in zip(plan.regions, plan.dst):
+            if self._page_exists[rid] and dst != 0:
+                self.migrate(int(rid), int(dst))
+                moved += 1
+        # Manager may recommend DRAM(0) for hot pages; KV pages instead go
+        # warm (the closest legal tier — recent window plays DRAM's role).
+        for rid in plan.regions[plan.dst == 0]:
+            if self._page_exists[rid]:
+                self.migrate(int(rid), WARM)
+                moved += 1
+        return plan, moved
+
+    # ------------------------------------------------------------- metrics
+    def hbm_bytes(self) -> int:
+        st = self.state
+        tot = 0
+        for name in ("warm_k", "warm_k_scales", "warm_v", "warm_v_scales",
+                     "cold_k", "cold_k_scales", "cold_v", "cold_v_scales",
+                     "recent_k", "recent_v"):
+            a = getattr(st, name)
+            tot += a.size * a.dtype.itemsize
+        return tot
+
+    def tco_usd(self) -> float:
+        """Memory TCO of *existing* pages under the current placement."""
+        exists = self._page_exists
+        if not exists.any():
+            return 0.0
+        costs = tco.usd_per_region(
+            self.manager.tierset, self.manager.region_bytes, self.manager.measured_ratios
+        )
+        return float(costs[self.manager.placement[exists]].sum())
+
+    def tco_savings_pct(self) -> float:
+        """Savings vs holding every existing page uncompressed in HBM."""
+        exists = self._page_exists
+        n = int(exists.sum())
+        if n == 0:
+            return 0.0
+        mx = tco.tco_max(n, self.manager.region_bytes)
+        return 100.0 * (mx - self.tco_usd()) / mx

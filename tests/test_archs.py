@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+config of the same family and runs one forward/train step on CPU, asserting
+output shapes and finite values. Decode paths are checked for consistency
+with the parallel forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import Model
+from repro.models.inputs import make_train_batch
+from repro.optim import adamw
+
+ARCHS = configs.arch_ids()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_loss(arch):
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_train_batch(cfg, batch=2, seq=32)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, metrics = model.loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    batch = make_train_batch(cfg, batch=2, seq=32)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params, opt, om = adamw.update(grads, opt, params, adamw.AdamWConfig(lr=1e-3))
+        return params, opt, loss
+
+    p1, o1, loss1 = step(params, opt, batch)
+    p2, o2, loss2 = step(p1, o1, batch)
+    assert bool(jnp.isfinite(loss1)) and bool(jnp.isfinite(loss2))
+    assert float(loss2) < float(loss1), "two steps on the same batch must descend"
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCHS if configs.get_smoke(a).is_decoder]
+)
+def test_smoke_decode_matches_forward(arch):
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = make_train_batch(cfg, batch=B, seq=S)
+    if cfg.frontend == "vision":
+        batch.pop("embeds", None)
+        batch.pop("embeds_mask", None)
+    logits_full, _ = model.forward(params, {k: v for k, v in batch.items()})
+    state = model.init_cache(B, S + 2)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for i in range(S):
+        lg, state = step(params, batch["tokens"][:, i : i + 1], state)
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    err = float(
+        jnp.max(jnp.abs(logits_full.astype(jnp.float32) - logits_dec.astype(jnp.float32)))
+    )
+    tol = 1.6 if cfg.family == "moe" else 0.15  # MoE: capacity drops differ
+    assert err < tol, (arch, err)
+
+
+def test_all_archs_have_full_and_smoke_configs():
+    assert len(ARCHS) == 10
+    for arch in ARCHS:
+        full, smoke = configs.get(arch), configs.get_smoke(arch)
+        assert full.family == smoke.family
+        assert full.param_count() > smoke.param_count()
+
+
+def test_full_config_values_match_assignment():
+    """The exact published configs from the assignment table."""
+    c = configs.get("command_r_35b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        40, 8192, 64, 8, 22528, 256000)
+    c = configs.get("qwen3_32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        64, 5120, 64, 8, 25600, 151936)
+    assert c.qk_norm
+    c = configs.get("internlm2_20b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        48, 6144, 48, 8, 16384, 92544)
+    c = configs.get("qwen1_5_4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        40, 2560, 20, 20, 6912, 151936)
+    assert c.qkv_bias
+    c = configs.get("qwen3_moe_235b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab_size) == (
+        94, 4096, 64, 4, 151936)
+    assert (c.moe.n_experts, c.moe.experts_per_token, c.moe.d_ff_expert) == (128, 8, 1536)
+    c = configs.get("dbrx_132b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab_size) == (
+        40, 6144, 48, 8, 100352)
+    assert (c.moe.n_experts, c.moe.experts_per_token) == (16, 4)
+    c = configs.get("mamba2_780m")
+    assert (c.n_layers, c.d_model, c.vocab_size, c.ssm.d_state) == (48, 1536, 50280, 128)
+    c = configs.get("zamba2_1_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size, c.ssm.d_state) == (
+        38, 2048, 32, 8192, 32000, 64)
+    c = configs.get("qwen2_vl_72b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        80, 8192, 64, 8, 29568, 152064)
+    assert c.mrope
+    c = configs.get("hubert_xlarge")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == (
+        48, 1280, 16, 5120, 504)
+    assert not c.causal
+
+
+def test_cell_skips_match_design():
+    # Encoder-only: no decode shapes. Full attention: no long_500k.
+    assert configs.cells_for("hubert_xlarge") == ["train_4k", "prefill_32k"]
+    assert "long_500k" in configs.cells_for("mamba2_780m")
+    assert "long_500k" in configs.cells_for("zamba2_1_2b")
+    for arch in ("command_r_35b", "qwen3_32b", "qwen3_moe_235b", "qwen2_vl_72b"):
+        assert "long_500k" in configs.skipped_cells_for(arch)
+    total = sum(len(configs.cells_for(a)) for a in ARCHS)
+    assert total == 31  # 10 train + 10 prefill + 9 decode + 2 long
+
+
+def test_param_counts_near_published():
+    """Sanity: computed N is within ~20% of the arch's nameplate size."""
+    expect = {
+        "command_r_35b": 35e9,
+        "qwen3_32b": 32e9,
+        "internlm2_20b": 20e9,
+        "qwen1_5_4b": 4e9,
+        "qwen3_moe_235b": 235e9,
+        "dbrx_132b": 132e9,
+        "mamba2_780m": 0.78e9,
+        "zamba2_1_2b": 1.2e9,
+        "qwen2_vl_72b": 72e9,
+        "hubert_xlarge": 1.0e9,
+    }
+    for arch, n in expect.items():
+        got = configs.get(arch).param_count()
+        assert 0.7 * n < got < 1.4 * n, (arch, got, n)

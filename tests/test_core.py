@@ -1,0 +1,240 @@
+"""TierScape core: codecs, tiers, TCO model, waterfall, analytical solver.
+
+Property-based tests (hypothesis) pin the system's invariants:
+  * codec roundtrip error bounds and monotone ratio/latency orderings,
+  * waterfall aging/refault laws,
+  * the analytical placement always meets its budget when feasible and is
+    near-optimal vs the exact DP.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analytical, codecs, tco, tiers
+from repro.core.manager import make_manager
+from repro.core.waterfall import WaterfallConfig, waterfall_step
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+CODEC_ERR_BOUND = {"none": 0.01, "fp8": 0.05, "int8": 0.02, "int4": 0.2, "int2": 0.9}
+
+
+@pytest.mark.parametrize("name", ["none", "fp8", "int8", "int4", "int2"])
+def test_codec_roundtrip_error(name):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,), jnp.float32)
+    err = float(codecs.roundtrip_error(name, x))
+    assert err <= CODEC_ERR_BOUND[name], (name, err)
+
+
+def test_codec_ratio_ordering():
+    n = 4096
+    r = {k: codecs.CODECS[k].ratio(n) for k in codecs.CODECS}
+    assert r["none"] == 1.0
+    assert r["fp8"] >= 1.9
+    assert r["int2"] > r["int4"] > r["int8"]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_codec_roundtrip_randomized(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (512,), jnp.float32) * (seed % 7 + 1)
+    err = float(codecs.roundtrip_error("int8", x))
+    assert err <= 0.02
+
+
+def test_codec_zero_input():
+    x = jnp.zeros((1024,), jnp.float32)
+    for name in codecs.CODECS:
+        enc = codecs.CODECS[name].encode(x)
+        out = codecs.CODECS[name].decode(enc, x.shape, jnp.float32)
+        assert bool(jnp.all(out == 0)), name
+
+
+# ---------------------------------------------------------------------------
+# tiers / cost model
+# ---------------------------------------------------------------------------
+
+
+def test_tier_registry_structure():
+    cs = tiers.characterized()
+    assert len(cs) == 12
+    sel = tiers.selected()
+    assert len(sel) == 5
+    # best-performance tier and best-TCO tier anchors (paper §4.2).
+    region = 1024 * 1024
+    lats = [t.access_latency_s(region) for t in sel]
+    usd = [t.usd_per_source_byte(region) for t in sel]
+    assert lats[0] == min(lats), "T1 must be the lowest-latency tier"
+    assert usd[-1] == min(usd), "T5 must be the best-TCO tier"
+
+
+def test_packed_denser_than_slab():
+    n = 1024 * 1024
+    assert tiers.get("C6").effective_ratio(n) > tiers.get("C5").effective_ratio(n)
+
+
+def test_host_media_slower_and_cheaper():
+    n = 1024 * 1024
+    hb, ho = tiers.get("C9"), tiers.get("C10")
+    assert ho.access_latency_s(n) > hb.access_latency_s(n)
+    assert ho.usd_per_source_byte(n) < hb.usd_per_source_byte(n)
+
+
+def test_slab_ratio_capped_at_2x():
+    n = 1024 * 1024
+    for tid in ("C1", "C2", "C5", "C8"):
+        assert tiers.get(tid).effective_ratio(n) <= 2.0
+
+
+def test_tco_model_eq9_to_12():
+    ts = tiers.default_tierset()
+    region_bytes = 2 * 1024 * 1024
+    n = 100
+    mx = tco.tco_max(n, region_bytes)
+    mn = tco.tco_min(ts, n, region_bytes)
+    assert 0 < mn < mx
+    placement = np.zeros(n, dtype=np.int64)
+    assert tco.tco_nt(ts, placement, region_bytes) == pytest.approx(mx)
+    placement[:] = ts.n_tiers  # everything in the last tier
+    assert tco.tco_nt(ts, placement, region_bytes) <= mx
+    # budget interpolates: alpha=1 -> max, alpha=0 -> min.
+    assert tco.budget(ts, n, region_bytes, 1.0) == pytest.approx(mx)
+    assert tco.budget(ts, n, region_bytes, 0.0) == pytest.approx(mn)
+
+
+# ---------------------------------------------------------------------------
+# waterfall
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(1, 400),
+    st.integers(1, 5),
+    st.floats(1.0, 100.0),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_waterfall_laws(n_regions, n_tiers, h_th, seed):
+    rng = np.random.default_rng(seed)
+    placement = rng.integers(0, n_tiers + 1, n_regions)
+    hotness = rng.exponential(h_th, n_regions)
+    faults = rng.uniform(0, 1, n_regions) * (placement > 0)
+    cfg = WaterfallConfig(hotness_threshold=h_th)
+    new = waterfall_step(placement, hotness, faults, n_tiers, cfg)
+    # Law 1: placements stay in range.
+    assert new.min() >= 0 and new.max() <= n_tiers
+    # Law 2: refaulted regions restart from DRAM.
+    refaulted = (placement > 0) & (faults >= cfg.refault_fraction)
+    assert (new[refaulted] == 0).all()
+    # Law 3: untouched compressed regions age exactly one tier (clamped).
+    untouched = (placement > 0) & (hotness <= 0) & ~refaulted
+    assert (new[untouched] == np.minimum(placement[untouched] + 1, n_tiers)).all()
+    # Law 4: cold DRAM regions are evicted to tier 1.
+    evict = (placement == 0) & (hotness < h_th)
+    assert (new[evict] == 1).all()
+    # Law 5: hot DRAM regions stay.
+    stay = (placement == 0) & (hotness >= h_th)
+    assert (new[stay] == 0).all()
+
+
+def test_waterfall_converges_cold_pages_to_last_tier():
+    n, n_tiers = 64, 5
+    placement = np.zeros(n, dtype=np.int64)
+    cfg = WaterfallConfig(hotness_threshold=1.0)
+    for _ in range(n_tiers + 1):
+        placement = waterfall_step(
+            placement, np.zeros(n), np.zeros(n), n_tiers, cfg
+        )
+    assert (placement == n_tiers).all()
+
+
+# ---------------------------------------------------------------------------
+# analytical model (MCKP)
+# ---------------------------------------------------------------------------
+
+
+def _options():
+    ts = tiers.default_tierset()
+    region_bytes = 2 * 1024 * 1024
+    costs = tco.usd_per_region(ts, region_bytes)
+    lats = np.array([0.0] + [t.access_latency_s(region_bytes // 2) for t in ts.tiers])
+    return ts, region_bytes, costs, lats
+
+
+@given(st.integers(2, 60), st.floats(0.05, 0.95), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_analytical_respects_budget(n, alpha, seed):
+    ts, region_bytes, costs, lats = _options()
+    rng = np.random.default_rng(seed)
+    hot = rng.exponential(100, n) * (rng.uniform(size=n) > 0.3)
+    budget = tco.budget(ts, n, region_bytes, alpha)
+    sol = analytical.solve_greedy(hot, costs, lats, budget)
+    assert sol.feasible
+    assert sol.cost <= budget * (1 + 1e-9)
+    # Placement indices are valid options.
+    assert sol.placement.min() >= 0 and sol.placement.max() <= ts.n_tiers
+
+
+@given(st.integers(2, 16), st.floats(0.1, 0.9), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_analytical_greedy_near_exact(n, alpha, seed):
+    ts, region_bytes, costs, lats = _options()
+    rng = np.random.default_rng(seed)
+    hot = rng.exponential(100, n)
+    budget = tco.budget(ts, n, region_bytes, alpha)
+    g = analytical.solve_greedy(hot, costs, lats, budget)
+    e = analytical.solve_exact_dp(hot, costs, lats, budget, grid=3000)
+    if e.feasible:
+        # LP-greedy is optimal up to one region's edge; allow that slack.
+        slack = float(hot.max()) * float(lats.max())
+        assert g.penalty <= e.penalty + slack + 1e-12
+
+
+def test_analytical_alpha_monotone():
+    ts, region_bytes, costs, lats = _options()
+    rng = np.random.default_rng(0)
+    hot = rng.exponential(100, 512)
+    pens, costs_out = [], []
+    for alpha in (0.9, 0.5, 0.1):
+        b = tco.budget(ts, 512, region_bytes, alpha)
+        sol = analytical.solve_greedy(hot, costs, lats, b)
+        pens.append(sol.penalty)
+        costs_out.append(sol.cost)
+    assert pens[0] <= pens[1] <= pens[2]  # lower alpha -> more penalty
+    assert costs_out[0] >= costs_out[1] >= costs_out[2]  # and lower cost
+
+
+def test_cold_regions_to_cheapest_tier():
+    ts, region_bytes, costs, lats = _options()
+    hot = np.zeros(32)
+    b = tco.budget(ts, 32, region_bytes, 0.0)
+    sol = analytical.solve_greedy(hot, costs, lats, b)
+    assert (sol.placement == int(np.argmin(costs))).all()
+
+
+# ---------------------------------------------------------------------------
+# manager presets
+# ---------------------------------------------------------------------------
+
+
+def test_manager_presets_build():
+    for name in ("2T-C", "2T-M", "2T-A", "6T-WF-M", "6T-AM-0.5"):
+        m = make_manager(name, 128)
+        assert m.n_regions == 128
+
+
+def test_manager_window_stats_accumulate():
+    m = make_manager("6T-AM-0.5", 64)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        m.record_access_counts(rng.integers(0, 50, 64).astype(np.float64))
+        m.end_window()
+    assert len(m.history) == 3
+    assert m.history[-1].placement_hist.sum() == 64

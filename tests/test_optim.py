@@ -1,0 +1,161 @@
+"""Optimizers: AdamW reference behaviour, tiered/compressed Adam (the
+paper's technique on training state), gradient compression with error
+feedback."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, grad_compress, tiered_adam
+from repro.optim.adamw import AdamWConfig
+
+
+def _quad_problem(seed=0, dim=256):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (dim,))
+    params = {"w": jnp.zeros((dim,)), "embed": jnp.zeros((dim,))}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum((p["embed"] - target) ** 2)
+
+    return params, loss
+
+
+def test_adamw_descends():
+    params, loss = _quad_problem()
+    state = adamw.init(params)
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, m = adamw.update(grads, state, params, cfg)
+    assert float(loss(params)) < 0.2 * l0
+    assert int(state["step"]) == 50
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros((8,))}
+    grads = {"w": jnp.full((8,), 1e6)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(adamw.global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 1e5
+
+
+def test_cosine_schedule_shape():
+    fn = adamw.cosine_schedule(warmup=10, total=100)
+    vals = [float(fn(jnp.asarray(s))) for s in [0, 5, 10, 55, 100]]
+    assert vals[0] == 0.0
+    assert vals[1] == pytest.approx(0.5)
+    assert vals[2] == pytest.approx(1.0)
+    assert vals[2] > vals[3] > vals[4]
+    assert vals[4] == pytest.approx(0.1, abs=1e-6)
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_tiered_adam_tracks_adamw(codec):
+    """Warm-tier moment codecs must land near the f32 optimum under DENSE
+    updates (int8 uses a µ-law dynamic code, like 8-bit Adam)."""
+    params, loss = _quad_problem()
+    policy = {"w": "none", "embed": codec}
+    tstate = tiered_adam.init(params, policy)
+    fstate = adamw.init(params)
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    tp, fp = params, params
+    for _ in range(60):
+        tg = jax.grad(loss)(tp)
+        fg = jax.grad(loss)(fp)
+        tp, tstate, _ = tiered_adam.update(tg, tstate, tp, cfg)
+        fp, fstate, _ = adamw.update(fg, fstate, fp, cfg)
+    lf, lt = float(loss(fp)), float(loss(tp))
+    assert lt < max(4 * lf, 1e-2), (codec, lt, lf)
+
+
+def test_tiered_adam_int4_cold_leaves():
+    """int4 is the cold tier (deflate analogue): leaves whose gradients are
+    mostly zero — the cold-embedding-row regime. It must still descend and
+    end far below the starting loss."""
+    params, loss = _quad_problem()
+    policy = {"w": "none", "embed": "int4"}
+    tstate = tiered_adam.init(params, policy)
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    tp = params
+    l0 = float(loss(tp))
+    for i in range(80):
+        g = jax.grad(loss)(tp)
+        if i % 8 != 0:  # cold leaf: updates arrive rarely
+            g = {"w": g["w"], "embed": jnp.zeros_like(g["embed"])}
+        tp, tstate, _ = tiered_adam.update(g, tstate, tp, cfg)
+    assert float(loss(tp)) < 0.2 * l0
+
+
+def test_tiered_adam_moment_bytes_saved():
+    params = {"embed": jnp.zeros((4096, 64)), "w": jnp.zeros((128,))}
+    s_f32 = tiered_adam.init(params, {"embed": "none", "w": "none"})
+    s_int8 = tiered_adam.init(params, {"embed": "int8", "w": "none"})
+    s_int4 = tiered_adam.init(params, {"embed": "int4", "w": "none"})
+    b_f32 = tiered_adam.moment_bytes(s_f32)
+    b_8 = tiered_adam.moment_bytes(s_int8)
+    b_4 = tiered_adam.moment_bytes(s_int4)
+    assert b_8 < 0.30 * b_f32  # ~4x on the embed-dominated state
+    assert b_4 < b_8
+
+
+def test_tiered_adam_repack_migration():
+    """Tier migration for optimizer state: decode old policy, encode new."""
+    params, loss = _quad_problem()
+    policy = {"w": "none", "embed": "none"}
+    state = tiered_adam.init(params, policy)
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    p = params
+    for _ in range(10):
+        g = jax.grad(loss)(p)
+        p, state, _ = tiered_adam.update(g, state, p, cfg)
+    new_policy = {"w": "none", "embed": "int8"}
+    state2 = tiered_adam.repack(state, p, new_policy)
+    assert dict(state2.policy)["embed"] == "int8"
+    # Moments survive migration within quantization error.
+    m_old = tiered_adam.decode_moment(
+        jax.tree.leaves(state.m)[0], jax.tree.leaves(state.m_scales)[0], "none",
+        params["embed"].shape)
+    # embed is the first leaf alphabetically in this dict pytree
+    m_new = tiered_adam.decode_moment(
+        jax.tree.leaves(state2.m)[0], jax.tree.leaves(state2.m_scales)[0], "int8",
+        params["embed"].shape)
+    rel = float(jnp.linalg.norm(m_old - m_new) / (jnp.linalg.norm(m_old) + 1e-9))
+    assert rel < 0.02
+
+
+def test_grad_compress_roundtrip_error_feedback():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (1000,)), jnp.float32)
+    xq, resid = grad_compress.compress_roundtrip(x)
+    np.testing.assert_allclose(np.asarray(xq + resid), np.asarray(x), rtol=1e-6)
+    # int8 group quantization: small relative error even before feedback.
+    rel = float(jnp.linalg.norm(x - xq) / jnp.linalg.norm(x))
+    assert rel < 0.01
+
+
+def test_grad_compress_sgd_converges():
+    """EF-compressed gradient descent matches uncompressed descent."""
+    key = jax.random.PRNGKey(0)
+    target = jax.random.normal(key, (512,))
+    w_c = jnp.zeros((512,))
+    w_u = jnp.zeros((512,))
+    resid = jnp.zeros((512,))
+    lr = 0.2
+    for _ in range(80):
+        g_c = 2 * (w_c - target)
+        g_u = 2 * (w_u - target)
+        gq, resid = grad_compress.compress_roundtrip(g_c + resid)
+        w_c = w_c - lr * gq
+        w_u = w_u - lr * g_u
+    assert float(jnp.linalg.norm(w_c - target)) < 1e-2
+    assert float(jnp.linalg.norm(w_c - w_u)) < 0.05
+
+
+def test_grad_compress_wire_bytes():
+    params = {"w": jnp.zeros((1024, 1024))}
+    raw, comp = grad_compress.wire_bytes(params)
+    assert comp < 0.3 * raw

@@ -1,0 +1,164 @@
+"""Runtime: sharding rules, train/serve step builders on a 1-device mesh,
+roofline HLO analyzer."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import ParallelConfig
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+from repro.models.inputs import make_train_batch, train_batch_spec
+from repro.optim import adamw
+from repro.roofline import hlo_stats
+from repro.runtime import sharding as shr
+from repro.runtime import train as train_rt
+
+
+def _mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_specs_structure_matches_params():
+    cfg = configs.get_smoke("qwen3_32b")
+    model = Model(cfg)
+    params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    specs = shr.param_specs(params, cfg, _mesh11(), ParallelConfig())
+    assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)) == \
+        jax.tree.structure(params)
+
+
+def test_param_specs_divisibility_respected():
+    """Every spec must divide its dimension on the production mesh shape."""
+    # AbstractMesh: spec logic only needs axis sizes, not real devices.
+    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    for arch in configs.arch_ids():
+        cfg = configs.get(arch)
+        model = Model(cfg)
+        params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        for parallel in (ParallelConfig(fsdp=False), ParallelConfig(fsdp=True)):
+            specs = shr.param_specs(params, cfg, mesh, parallel)
+
+            def check(path, leaf, spec):
+                for dim, names in zip(leaf.shape, spec):
+                    if names is None:
+                        continue
+                    ns = names if isinstance(names, tuple) else (names,)
+                    size = int(np.prod([mesh.shape[n] for n in ns]))
+                    assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+            jax.tree_util.tree_map_with_path(
+                lambda p, l, s: check(p, l, s), params, specs,
+            )
+
+
+def test_batch_axes_divisibility():
+    mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    assert shr.batch_axes_for(mesh, 8) == ("pod", "data")
+    assert shr.batch_axes_for(mesh, 2) == ("pod",)
+    assert shr.batch_axes_for(mesh, 1) == ()
+    assert shr.batch_axes_for(mesh, 3) == ()
+
+
+def test_train_step_runs_on_one_device():
+    cfg = configs.get_smoke("internlm2_20b")
+    mesh = _mesh11()
+    model = Model(cfg, ParallelConfig())
+    batch = make_train_batch(cfg, batch=2, seq=32)
+    step = train_rt.make_train_step(
+        model, adamw.AdamWConfig(lr=1e-3), mesh, ParallelConfig(grad_accum=2),
+        batch_example=batch,
+    )
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    with mesh:
+        fn = step.jitted(donate=False)
+        p1, o1, m1 = fn(params, opt, batch)
+        p2, o2, m2 = fn(p1, o1, batch)
+    assert int(o2["step"]) == 2
+    assert np.isfinite(float(m2["grad_norm"]))
+
+
+def test_grad_accum_matches_full_batch():
+    """accum=2 over a batch == one step on the whole batch (linearity)."""
+    cfg = configs.get_smoke("command_r_35b")
+    mesh = _mesh11()
+    model = Model(cfg, ParallelConfig())
+    batch = make_train_batch(cfg, batch=4, seq=16)
+    params = model.init(jax.random.PRNGKey(0))
+
+    outs = {}
+    for accum in (1, 2):
+        step = train_rt.make_train_step(
+            model, adamw.AdamWConfig(lr=1e-3), mesh, ParallelConfig(grad_accum=accum),
+            batch_example=batch,
+        )
+        opt = adamw.init(params)
+        with mesh:
+            p1, _, _ = step.jitted(donate=False)(params, opt, batch)
+        outs[accum] = p1
+    flat1 = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                             for x in jax.tree.leaves(outs[1])])
+    flat2 = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                             for x in jax.tree.leaves(outs[2])])
+    # Same direction & magnitude (not bitwise: loss-normalization order differs).
+    cos = jnp.dot(flat1, flat2) / (jnp.linalg.norm(flat1) * jnp.linalg.norm(flat2))
+    assert float(cos) > 0.99
+
+
+# ---------------------------------------------------------------------------
+# HLO static analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_stats_counts_loop_trips():
+    """A scanned matmul must report trips x the per-iteration flops."""
+    n, trips = 128, 7
+
+    def f(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=trips)
+        return h
+
+    w = jnp.zeros((n, n), jnp.float32)
+    x = jnp.zeros((4, n), jnp.float32)
+    compiled = jax.jit(f).lower(w, x).compile()
+    st = hlo_stats.analyze(compiled.as_text())
+    expect = 2 * 4 * n * n * trips
+    assert st.flops == pytest.approx(expect, rel=0.01), (st.flops, expect)
+
+
+def test_hlo_stats_nested_loops():
+    n, outer, inner = 64, 3, 5
+
+    def f(w, x):
+        def outer_body(h, _):
+            def inner_body(g, _):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner_body, h, None, length=inner)
+            return g, None
+        h, _ = jax.lax.scan(outer_body, x, None, length=outer)
+        return h
+
+    w = jnp.zeros((n, n), jnp.float32)
+    x = jnp.zeros((2, n), jnp.float32)
+    compiled = jax.jit(f).lower(w, x).compile()
+    st = hlo_stats.analyze(compiled.as_text())
+    expect = 2 * 2 * n * n * outer * inner
+    assert st.flops == pytest.approx(expect, rel=0.01)
+
+
+def test_hlo_stats_unlooped_matmul():
+    def f(a, b):
+        return a @ b
+
+    a = jnp.zeros((32, 64), jnp.float32)
+    b = jnp.zeros((64, 16), jnp.float32)
+    compiled = jax.jit(f).lower(a, b).compile()
+    st = hlo_stats.analyze(compiled.as_text())
+    assert st.flops == pytest.approx(2 * 32 * 64 * 16, rel=0.01)

@@ -1,0 +1,186 @@
+"""Substrate layers: data pipeline, checkpointing, elastic runtime."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, HostLoader, synthetic_corpus
+from repro.runtime import elastic
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=8, num_shards=2, shard_id=0)
+    a = synthetic_corpus(cfg, step=3)
+    b = synthetic_corpus(cfg, step=3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    cfg1 = DataConfig(vocab_size=1000, seq_len=64, global_batch=8, num_shards=2, shard_id=1)
+    c = synthetic_corpus(cfg1, step=3)
+    assert not np.array_equal(a["tokens"], c["tokens"])  # shards differ
+    assert a["tokens"].shape == (4, 64)  # global 8 / 2 shards
+    assert (a["targets"][:, :-1] == a["tokens"][:, 1:]).all()  # shifted targets
+    assert a["tokens"].max() < 1000
+
+
+def test_loader_prefetch_and_close():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, prefetch=2)
+    loader = HostLoader(cfg)
+    b1 = next(loader)
+    b2 = next(loader)
+    assert b1["tokens"].shape == (4, 16)
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+    loader.close()
+
+
+def test_loader_straggler_mitigation():
+    """A stalled producer must not stall the consumer."""
+    calls = {"n": 0}
+
+    def slow_make(cfg, step):
+        calls["n"] += 1
+        if step >= 2:
+            time.sleep(5.0)  # straggler
+        return synthetic_corpus(cfg, step)
+
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2, prefetch=1,
+                     straggler_timeout_s=0.5)
+    loader = HostLoader(cfg, make_batch=slow_make)
+    got = [next(loader) for _ in range(5)]
+    assert len(got) == 5
+    assert loader.straggler_events >= 1  # at least one skip-and-log
+    loader.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,))},
+        "opt": {"m": {"w": jnp.zeros((3, 4)), "b": jnp.zeros((4,))},
+                "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(42, state)
+    step, restored = mgr.restore(state)
+    assert step == 42
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, blocking=False)
+    mgr.wait()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2  # GC keeps 2
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_atomicity_torn_write(tmp_path):
+    """A .tmp directory (crash mid-write) must be invisible to restore."""
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(1, state)
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    (tmp_path / "step_00000002.tmp" / "params.npz").write_bytes(b"garbage")
+    step, _ = mgr.restore(state)
+    assert step == 1
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(1, state)
+    p = tmp_path / "step_00000001" / "params.npz"
+    data = bytearray(p.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    p.write_bytes(bytes(data))
+    with pytest.raises(Exception):
+        mgr.restore(state)
+
+
+# ---------------------------------------------------------------------------
+# elastic runtime
+# ---------------------------------------------------------------------------
+
+
+def test_plan_remesh_keeps_tp_sheds_dp():
+    plan = elastic.plan_remesh(
+        n_devices=256, model_parallel=16, global_batch=256, microbatch_per_replica=16
+    )
+    assert plan.shape == (16, 16)
+    survivors = elastic.plan_remesh(
+        n_devices=192, model_parallel=16, global_batch=256, microbatch_per_replica=16
+    )
+    assert survivors.shape == (12, 16)
+    assert survivors.grad_accum >= plan.grad_accum  # preserve global batch
+
+
+def test_plan_remesh_refuses_below_tp():
+    with pytest.raises(ValueError):
+        elastic.plan_remesh(8, model_parallel=16, global_batch=64, microbatch_per_replica=1)
+
+
+def test_elastic_runner_failure_restore_resume():
+    """Inject a failure; the runner must remesh, restore, and converge."""
+    saved = {}
+
+    def build_step(plan):
+        def step(state, batch):
+            return {"x": state["x"] + batch}
+        return step
+
+    def save_fn(step, state):
+        saved["ckpt"] = (step, {"x": state["x"]})
+
+    restores = []
+
+    def restore_fn():
+        step, st = saved["ckpt"]
+        restores.append(step)
+        return step, dict(st)
+
+    failed = {"done": False}
+
+    def fail_hook(step):
+        if step == 7 and not failed["done"]:
+            failed["done"] = True
+            return 192  # 64 devices lost
+        return None
+
+    runner = elastic.ElasticRunner(
+        build_step, save_fn, restore_fn,
+        initial_plan=elastic.plan_remesh(256, 16, 256, 16),
+        checkpoint_every=2,
+        fail_hook=fail_hook,
+        model_parallel=16,
+        global_batch=256,
+        microbatch_per_replica=16,
+    )
+    batches = iter(range(1, 1000))
+    final_step, state = runner.run({"x": 0}, batches, n_steps=10)
+    assert final_step == 10
+    assert len(runner.remesh_events) == 1
+    old_plan, new_plan = runner.remesh_events[0][1], runner.remesh_events[0][2]
+    assert new_plan.n_devices == 192
+    assert restores and restores[0] <= 7  # resumed from a pre-failure checkpoint

@@ -1,0 +1,140 @@
+"""End-to-end system behaviour: the paper's headline claims reproduced on
+the window simulator, plus the tiered serving engine running a real
+(smoke-scale) model."""
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.configs as configs
+from repro.configs.base import TierScapeRunConfig
+from repro.core import simulator
+from repro.core.manager import make_manager
+from repro.core.telemetry import PEBSNoise
+from repro.models import Model
+from repro.serving import TieredEngine
+
+THRESHOLDS = {"C": 50.0, "M": 200.0, "A": 800.0}
+
+
+def _run(cfg_name, wl, windows=16, seed=1, pebs=None):
+    m = make_manager(cfg_name, wl.n_regions, thresholds=THRESHOLDS, pebs=pebs)
+    return simulator.simulate(wl, m, windows=windows, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def gauss():
+    return simulator.gaussian_kv(n_regions=2048, accesses_per_window=500_000)
+
+
+def test_ntier_dominates_2tier_at_same_threshold(gauss):
+    """Paper §7.3: 6T-WF saves more TCO than 2T at similar or better perf."""
+    for level in ("M", "A"):
+        r2 = _run(f"2T-{level}", gauss)
+        r6 = _run(f"6T-WF-{level}", gauss)
+        assert r6.tco_savings_pct > r2.tco_savings_pct + 5
+        assert r6.slowdown_pct <= r2.slowdown_pct * 1.25
+
+
+def test_analytical_alpha_tradeoff(gauss):
+    """alpha: 1 -> perf, 0 -> TCO (paper §5.2 knob semantics)."""
+    r9 = _run("6T-AM-0.9", gauss)
+    r5 = _run("6T-AM-0.5", gauss)
+    r1 = _run("6T-AM-0.1", gauss)
+    assert r9.tco_savings_pct <= r5.tco_savings_pct <= r1.tco_savings_pct
+    assert r9.slowdown_pct <= r5.slowdown_pct + 1e-6
+    assert r5.slowdown_pct <= r1.slowdown_pct + 1e-6
+
+
+def test_tail_latency_ntier_beats_2tier(gauss):
+    """Paper §7.6: 6T p99 <= 2T p99 at equal aggressiveness."""
+    r2 = _run("2T-A", gauss)
+    r6 = _run("6T-WF-A", gauss)
+    assert r6.p99_access_us <= r2.p99_access_us + 1e-9
+
+
+def test_daemon_tax_single_digit(gauss):
+    """Paper §7.7: TS-Daemon tax 1.2-7%."""
+    for cfg in ("6T-WF-M", "6T-AM-0.5"):
+        r = _run(cfg, gauss)
+        assert r.daemon_tax_pct < 10.0
+
+
+def test_waterfall_tolerates_pebs_noise(gauss):
+    """Paper §5.1: waterfall is robust to profiling inaccuracy."""
+    clean = _run("6T-WF-M", gauss)
+    noisy = _run("6T-WF-M", gauss, pebs=PEBSNoise(sample_rate=0.02, misattribution=0.05))
+    assert abs(noisy.tco_savings_pct - clean.tco_savings_pct) < 10
+    assert noisy.slowdown_pct < clean.slowdown_pct * 2 + 2.0
+
+
+def test_placement_distribution_shifts_with_aggressiveness(gauss):
+    rc = _run("6T-WF-C", gauss)
+    ra = _run("6T-WF-A", gauss)
+    # Aggressive keeps less in DRAM (placement 0).
+    dram_c = rc.placement_hists[-1][0]
+    dram_a = ra.placement_hists[-1][0]
+    assert dram_a < dram_c
+
+
+def test_all_paper_workloads_run():
+    for wl in simulator.PAPER_WORKLOADS():
+        wl_small = simulator.gaussian_kv(n_regions=256, accesses_per_window=20_000,
+                                         name=wl.name)
+        r = _run("6T-AM-0.5", wl_small, windows=6)
+        assert r.windows == 6
+
+
+# ---------------------------------------------------------------------------
+# Tiered serving engine on a real model (smoke scale)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["zamba2_1_2b", "qwen3_32b"])
+def test_engine_end_to_end(arch):
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = TieredEngine(
+        model, params, batch_slots=2, page_tokens=8, max_seq_len=128,
+        recent_window=16,
+        ts=TierScapeRunConfig(enabled=True, policy="analytical", alpha=0.3, window_steps=6),
+    )
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab_size, 24), max_new_tokens=16)
+            for _ in range(2)]
+    stats = eng.run(max_steps=40)
+    assert stats.completed == 2
+    assert all(len(r.out_tokens) >= 16 for r in reqs)
+    assert stats.windows >= 1
+    assert stats.migrations >= 0
+
+
+def test_engine_generates_same_tokens_as_dense_reference():
+    """Tiered KV decoding must track the dense-cache reference closely
+    (warm int8 pages dominate early; divergence only from quantization)."""
+    import jax.numpy as jnp
+
+    cfg = configs.get_smoke("qwen1_5_4b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 24)
+
+    # Dense reference.
+    state = model.init_cache(1, 64)
+    batch = {"tokens": jnp.asarray(prompt[None], jnp.int32)}
+    logits, state = model.prefill(params, batch, state)
+    ref_tokens = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(7):
+        lg, state = model.decode_step(params, jnp.asarray([[ref_tokens[-1]]], jnp.int32), state)
+        ref_tokens.append(int(jnp.argmax(lg[0, 0])))
+
+    eng = TieredEngine(model, params, batch_slots=1, page_tokens=8, max_seq_len=64,
+                       recent_window=16,
+                       ts=TierScapeRunConfig(enabled=True, window_steps=32))
+    req = eng.submit(prompt, max_new_tokens=8)
+    eng.run(max_steps=16)
+    matches = sum(a == b for a, b in zip(req.out_tokens, ref_tokens))
+    assert matches >= 6, (req.out_tokens, ref_tokens)
