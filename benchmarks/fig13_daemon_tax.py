@@ -14,8 +14,12 @@ def run(csv: Csv, windows: int = 16) -> None:
         for cfg in ("2T-M", "6T-WF-M", "6T-AM-0.5"):
             mgr = make_manager(cfg, wl.n_regions, thresholds=THRESHOLDS)
             r = simulator.simulate(wl, mgr, windows=windows, seed=1)
-            csv.add(f"{wl.name}-{cfg}", mgr.total_daemon_s / windows * 1e6,
-                    f"tax_pct={r.daemon_tax_pct:.2f}")
+            csv.add(
+                f"{wl.name}-{cfg}", mgr.total_daemon_s / windows * 1e6,
+                f"tax_pct={r.daemon_tax_pct:.2f} "
+                f"migr_per_win={r.mean_migrations_per_window:.1f} "
+                f"cohorts_per_win={r.mean_cohorts_per_window:.1f}",
+            )
 
 
 def main() -> None:

@@ -7,6 +7,7 @@
   fig12      tail latency (mean + p99)
   fig13      daemon tax
   serving    tiered-KV engine vs dense decode on a real model
+  migration  batched cohort executor vs per-page loop (dispatches + time)
   roofline   per-(arch x shape x mesh) dry-run roofline summary
 """
 
@@ -21,6 +22,7 @@ from benchmarks import (
     fig9_placement,
     fig12_tail_latency,
     fig13_daemon_tax,
+    migration_batch,
     roofline_report,
     serving_tiered,
 )
@@ -32,6 +34,7 @@ TABLES = {
     "fig12": fig12_tail_latency.run,
     "fig13": fig13_daemon_tax.run,
     "serving": serving_tiered.run,
+    "migration": migration_batch.run,
     "roofline": roofline_report.run,
 }
 

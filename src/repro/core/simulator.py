@@ -123,6 +123,8 @@ class SimResult:
     mean_access_us: float
     p99_access_us: float
     daemon_tax_pct: float  # daemon time / total runtime
+    mean_migrations_per_window: float
+    mean_cohorts_per_window: float  # batched executor: dispatches per window
     per_window_savings: np.ndarray
     per_window_slowdown: np.ndarray
     placement_hists: np.ndarray  # (W, N+1)
@@ -203,6 +205,12 @@ def simulate(
         mean_access_us=mean_us,
         p99_access_us=p99_us,
         daemon_tax_pct=100.0 * manager.total_daemon_s / total_base,
+        mean_migrations_per_window=float(
+            np.mean([h.migrations for h in manager.history])
+        ),
+        mean_cohorts_per_window=float(
+            np.mean([h.migration_cohorts for h in manager.history])
+        ),
         per_window_savings=np.array(savings),
         per_window_slowdown=np.array(slowdowns),
         placement_hists=np.stack(placement_hists),

@@ -2,6 +2,8 @@
 
   * ``quant_page``      — tier compression (bf16 KV page -> int8/int4+scales)
   * ``dequant_page``    — tier decompression (the fault path)
+  * ``transcode_page``  — fused tier-to-tier requantization (the migration
+                          path: int8 <-> int4 with no dense HBM round-trip)
   * ``paged_attention`` — fused decode attention over a quantized tier pool
                           (warm-data access without fault-and-decompress)
 

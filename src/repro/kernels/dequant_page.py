@@ -9,19 +9,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.packing import unpack_int4
+
 
 def _dequant_kernel(payload_ref, scale_ref, out_ref, *, bits: int, out_dtype):
     scale = scale_ref[...]  # [1, T, KV]
     if bits == 8:
         q = payload_ref[...].astype(jnp.float32)
     else:
-        p = payload_ref[...].astype(jnp.int32)
-        lo = p & 0xF
-        hi = (p >> 4) & 0xF
-        lo = jnp.where(lo >= 8, lo - 16, lo)
-        hi = jnp.where(hi >= 8, hi - 16, hi)
-        q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
-        q = q.astype(jnp.float32)
+        q = unpack_int4(payload_ref[...])
     out_ref[...] = (q * scale[..., None]).astype(out_dtype)
 
 

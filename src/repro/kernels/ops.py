@@ -22,6 +22,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.dequant_page import dequant_pages as dequant_pages_kernel
 from repro.kernels.paged_attention import paged_quant_attention as paged_attn_kernel
 from repro.kernels.quant_page import quant_pages as quant_pages_kernel
+from repro.kernels.transcode_page import transcode_pages as transcode_pages_kernel
 
 Array = jax.Array
 
@@ -44,6 +45,19 @@ def dequant_pages(payload: Array, scales: Array, bits: int, out_dtype=jnp.bfloat
     if _USE_PALLAS:
         return dequant_pages_kernel(payload, scales, bits, out_dtype)
     return _ref.dequant_kv_page(payload, scales, bits).astype(out_dtype)
+
+
+def transcode_pages(
+    payload: Array, scales: Array, src_bits: int, dst_bits: int
+) -> Tuple[Array, Array]:
+    """Fused tier-to-tier requantization of a [P, ...] page batch — the
+    batched migration executor's single dispatch per transcoding cohort."""
+    if src_bits == dst_bits:
+        return payload, scales
+    if _USE_PALLAS:
+        out = transcode_pages_kernel(payload, scales, src_bits, dst_bits)
+        return out[0], out[1]
+    return _ref.transcode_kv_page(payload, scales, src_bits, dst_bits)
 
 
 def _pool_partials(q: Array, pool: Dict[str, Array]):

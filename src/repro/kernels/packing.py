@@ -1,0 +1,34 @@
+"""Shared int4 nibble-packing layout + quantization ranges.
+
+The layout is a cross-kernel invariant: adjacent head-dim pairs pack into
+one uint8 with the EVEN index in the LOW nibble, nibbles in two's
+complement. quant_page, dequant_page, transcode_page and the ref oracles
+all import these helpers so the convention lives in exactly one place.
+Pure jnp ops — usable inside Pallas kernel bodies and in the oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = {8: 127.0, 4: 7.0}
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """[..., hd] integer values in [-7, 7] -> [..., hd//2] uint8."""
+    qi = q.astype(jnp.int32)
+    lo = qi[..., 0::2] & 0xF
+    hi = qi[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(payload: jax.Array) -> jax.Array:
+    """[..., hd//2] uint8 -> [..., hd] f32 values in [-8, 7]."""
+    p = payload.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+    return q.astype(jnp.float32)

@@ -27,16 +27,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax.sharding-style API drift: CompilerParams was TPUCompilerParams in 0.4.x.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+from repro.kernels.packing import unpack_int4 as _unpack_int4
+
 NEG_INF = -1e30
-
-
-def _unpack_int4(p):
-    lo = p & 0xF
-    hi = (p >> 4) & 0xF
-    lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    q = jnp.stack([lo, hi], axis=-1)
-    return q.reshape(*p.shape[:-1], p.shape[-1] * 2).astype(jnp.float32)
 
 
 def _paged_attn_kernel(
@@ -172,7 +168,7 @@ def paged_quant_attention(
             jax.ShapeDtypeStruct((b, mp), jnp.float32),
             jax.ShapeDtypeStruct((b, mp), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

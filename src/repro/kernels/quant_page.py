@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-QMAX = {8: 127.0, 4: 7.0}
+from repro.kernels.packing import QMAX, pack_int4
 
 
 def _quant_kernel(page_ref, payload_ref, scale_ref, *, bits: int):
@@ -26,10 +26,7 @@ def _quant_kernel(page_ref, payload_ref, scale_ref, *, bits: int):
     if bits == 8:
         payload_ref[...] = q.astype(jnp.int8)
     else:
-        qi = q.astype(jnp.int32)
-        lo = qi[..., 0::2] & 0xF
-        hi = qi[..., 1::2] & 0xF
-        payload_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
+        payload_ref[...] = pack_int4(q)
     scale_ref[...] = scale
 
 

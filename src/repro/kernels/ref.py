@@ -21,9 +21,10 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.packing import QMAX, pack_int4, unpack_int4
+
 Array = jax.Array
 
-QMAX = {8: 127.0, 4: 7.0}
 NEG_INF = -1e30
 
 
@@ -40,11 +41,8 @@ def quant_kv_page(page: Array, bits: int) -> Tuple[Array, Array]:
     q = jnp.clip(jnp.round(x / scale[..., None]), -QMAX[bits], QMAX[bits])
     if bits == 8:
         return q.astype(jnp.int8), scale
-    # int4: pack adjacent pairs along hd into one uint8.
-    qi = q.astype(jnp.int32)
-    lo = qi[..., 0::2] & 0xF
-    hi = qi[..., 1::2] & 0xF
-    return (lo | (hi << 4)).astype(jnp.uint8), scale
+    # int4: pack adjacent pairs along hd into one uint8 (see kernels.packing).
+    return pack_int4(q), scale
 
 
 def dequant_kv_page(payload: Array, scales: Array, bits: int) -> Array:
@@ -52,14 +50,23 @@ def dequant_kv_page(payload: Array, scales: Array, bits: int) -> Array:
     if bits == 8:
         q = payload.astype(jnp.float32)
     else:
-        p = payload.astype(jnp.int32)
-        lo = p & 0xF
-        hi = (p >> 4) & 0xF
-        lo = jnp.where(lo >= 8, lo - 16, lo)
-        hi = jnp.where(hi >= 8, hi - 16, hi)
-        q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
-        q = q.astype(jnp.float32)
+        q = unpack_int4(payload)
     return q * scales[..., None]
+
+
+def transcode_kv_page(
+    payload: Array, scales: Array, src_bits: int, dst_bits: int
+) -> Tuple[Array, Array]:
+    """Requantize pages between codec widths (int8 <-> int4).
+
+    Semantics are exactly the dequant -> quant composition; the Pallas
+    kernel fuses the two so the dense f32 page never round-trips HBM.
+    Same-width transcode is the identity (the same-codec fast path is a
+    media copy and never calls this).
+    """
+    if src_bits == dst_bits:
+        return payload, scales
+    return quant_kv_page(dequant_kv_page(payload, scales, src_bits), dst_bits)
 
 
 # ---------------------------------------------------------------------------

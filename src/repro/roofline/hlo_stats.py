@@ -49,10 +49,12 @@ _WIRE_FACTOR = {
 # nested parens (tuple types), so match greedily to the "->".
 _HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$")
 _SHAPE_RE = re.compile(r"%([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
-_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+# Operand lists may carry explicit types ("dot(f32[4,128]{1,0} %a, ... %b)")
+# and while() wraps a nested tuple type — match lazily up to the markers.
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w\.\-]+)")
 _DOT_RE = re.compile(
-    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\sdot\(%([\w\.\-]+),\s*%([\w\.\-]+)\)"
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\sdot\([^%]*%([\w\.\-]+),[^%]*%([\w\.\-]+)\)"
     r".*?lhs_contracting_dims=\{([0-9,]*)\}"
 )
 _COLL_RE = re.compile(

@@ -87,11 +87,9 @@ class TieredEngine:
             recent_window,
             mgr_cfg,
         )
-        import jax.sharding as jsh
+        from repro.launch.mesh import make_mesh
 
-        default_mesh = mesh or jax.make_mesh(
-            (1, 1), ("data", "model"), axis_types=(jsh.AxisType.Auto,) * 2
-        )
+        default_mesh = mesh or make_mesh((1, 1), ("data", "model"))
         self._step_fn = jax.jit(
             serve_rt.make_tiered_decode_step(
                 model, default_mesh, ParallelConfig(), ts, use_kernels=False
@@ -154,7 +152,8 @@ class TieredEngine:
                 self.slots[i] = req
 
     def _prefill(self, slot: int, req: Request):
-        """Dense prefill, then page the prompt KV into the warm tier."""
+        """Dense prefill, then page the prompt KV into the warm tier
+        (batched: one quant dispatch for all layers x pages)."""
         cfg = self.cfg
         s = len(req.prompt)
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
@@ -164,12 +163,16 @@ class TieredEngine:
         n_full_pages = max((s - self.recent_window // 2) // self.pt, 0)
         k = np.asarray(state.k_cache.astype(jnp.float32))  # [L,1,S,KV,hd]
         v = np.asarray(state.v_cache.astype(jnp.float32))
-        for layer in range(self.la):
-            for page in range(n_full_pages):
-                sl = slice(page * self.pt, (page + 1) * self.pt)
-                self.cache.append_page(
-                    layer, slot, page, jnp.asarray(k[layer, 0, sl]), jnp.asarray(v[layer, 0, sl])
-                )
+        entries = [
+            (layer, slot, page)
+            for layer in range(self.la) for page in range(n_full_pages)
+        ]
+        if entries:
+            kp = np.stack([k[layer, 0, page * self.pt:(page + 1) * self.pt]
+                           for layer, _, page in entries])
+            vp = np.stack([v[layer, 0, page * self.pt:(page + 1) * self.pt]
+                           for layer, _, page in entries])
+            self.cache.append_pages(entries, jnp.asarray(kp), jnp.asarray(vp))
         # Remaining tail into the recent window.
         tail = slice(n_full_pages * self.pt, s)
         tlen = s - n_full_pages * self.pt
@@ -198,9 +201,9 @@ class TieredEngine:
             )
 
     def _mesh_dummy(self):
-        import jax.sharding as jsh
+        from repro.launch.mesh import make_mesh
 
-        return jax.make_mesh((1, 1), ("data", "model"), axis_types=(jsh.AxisType.Auto,) * 2)
+        return make_mesh((1, 1), ("data", "model"))
 
     def _decode_step(self):
         t0 = time.perf_counter()
@@ -245,7 +248,8 @@ class TieredEngine:
             n_out = 1
         k = np.asarray(st.recent_k.astype(jnp.float32))  # [L,B,R,KV,hd]
         v = np.asarray(st.recent_v.astype(jnp.float32))
-        # Page out per layer.
+        # Page out all layers x slots x pages in one batched append.
+        entries, kps, vps = [], [], []
         for layer in range(self.la):
             for i, req in enumerate(self.slots):
                 if req is None:
@@ -254,10 +258,13 @@ class TieredEngine:
                 for p in range(n_out):
                     page_idx = (start_tok + p * self.pt) // self.pt
                     sl = slice(p * self.pt, (p + 1) * self.pt)
-                    self.cache.append_page(
-                        layer, i, page_idx,
-                        jnp.asarray(k[layer, i, sl]), jnp.asarray(v[layer, i, sl]),
-                    )
+                    entries.append((layer, i, page_idx))
+                    kps.append(k[layer, i, sl])
+                    vps.append(v[layer, i, sl])
+        if entries:
+            self.cache.append_pages(
+                entries, jnp.asarray(np.stack(kps)), jnp.asarray(np.stack(vps))
+            )
         shift = n_out * self.pt
         st = self.cache.state
         self.cache.state = dataclasses.replace(
@@ -268,22 +275,8 @@ class TieredEngine:
         )
 
     def _release_slot(self, slot: int):
-        """Request finished: free its pages everywhere."""
-        cache = self.cache
-        for layer in range(self.la):
-            for page in range(cache.max_pages):
-                rid = cache.rid(layer, slot, page)
-                if cache._page_exists[rid]:
-                    layer_, slot_, page_ = layer, slot, page
-                    cache._remove(rid, layer_, slot_, page_)
-                    cache._page_exists[rid] = False
-                    cache.manager.placement[rid] = 0
-        st = cache.state
-        cache.state = dataclasses.replace(
-            st,
-            warm_n=st.warm_n.at[:, slot].set(0),
-            cold_n=st.cold_n.at[:, slot].set(0),
-        )
+        """Request finished: free its pages everywhere (batched)."""
+        self.cache.release_slot_pages(slot)
         self.slots[slot] = None
         self.slot_len[slot] = 0
 

@@ -16,14 +16,26 @@ The KV cache is the serving analogue of the paper's application heap:
   the manager re-promotes them on waterfall/analytical recommendation and
   the engine swaps payloads through the warm pool.
 
-All placement state is host-side numpy (daemon side); page payloads move
-through small jitted transcode helpers.
+All placement state is host-side numpy (daemon side). Two placement vectors
+exist on purpose:
+
+  * ``manager.placement`` — the policy's *desired* placement (what the
+    TierScape model computed at the window boundary),
+  * ``self.physical``     — where each page's payload *actually* lives.
+
+``migrate_batch`` reconciles the two: it groups the migration plan into
+(src, dst) cohorts, gathers each cohort's pages into one [P, T, KV, hd]
+batch, and executes the cohort with a single fused ``transcode_pages``
+kernel dispatch (or a raw media copy on the same-codec fast path) — turning
+the per-window migration cost from O(pages) kernel dispatches into
+O(cohorts). The legacy per-page ``migrate`` path is kept as the equivalence
+oracle and for single-page evictions.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +45,7 @@ from repro.configs.base import ModelConfig
 from repro.core import tco
 from repro.core.manager import ManagerConfig, TierScapeManager
 from repro.core.tiers import TierSet, get as get_tier
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.runtime.serve import TieredKVState, init_tiered_kv_state
 
@@ -40,6 +53,9 @@ from repro.runtime.serve import TieredKVState, init_tiered_kv_state
 # the paper; KV pages never occupy it — the recent window does).
 WARM, COLD, HOST8, HOST4 = 1, 2, 3, 4
 KV_TIER_IDS = ("C5", "C9", "C7", "C10")  # int8-HBM, int4-HBM, int8-host, int4-host
+_BITS = {WARM: 8, COLD: 4, HOST8: 8, HOST4: 4}
+_DEVICE = (WARM, COLD)
+_POOL = {WARM: "warm", COLD: "cold"}
 
 
 def kv_tierset(page_elems: int) -> TierSet:
@@ -52,6 +68,44 @@ class PageMeta:
     seq_slot: int
     page_idx: int  # logical page index within the sequence
     pool_slot: int = -1  # slot within its current pool
+
+
+class _TableEditor:
+    """Batched host-side edits of the device page tables.
+
+    All table mutations of one migrate/append batch happen on numpy copies;
+    ``commit`` writes each table back to the device exactly once, instead of
+    one ``.at[].set`` dispatch per page."""
+
+    def __init__(self, state: TieredKVState):
+        self.tables = {p: np.array(getattr(state, f"{p}_table")) for p in ("warm", "cold")}
+        self.counts = {p: np.array(getattr(state, f"{p}_n")) for p in ("warm", "cold")}
+
+    def remove(self, pool: str, layers, slots, pool_slots) -> None:
+        t, c = self.tables[pool], self.counts[pool]
+        for la, sl, ps in zip(layers, slots, pool_slots):
+            n = int(c[la, sl])
+            row = t[la, sl]
+            idx = int(np.where(row[:n] == ps)[0][0])
+            row[idx] = row[n - 1]
+            row[n - 1] = 0
+            c[la, sl] = n - 1
+
+    def insert(self, pool: str, layers, slots, pool_slots) -> None:
+        t, c = self.tables[pool], self.counts[pool]
+        for la, sl, ps in zip(layers, slots, pool_slots):
+            n = int(c[la, sl])
+            t[la, sl, n] = ps
+            c[la, sl] = n + 1
+
+    def commit(self, state: TieredKVState) -> TieredKVState:
+        return dataclasses.replace(
+            state,
+            warm_table=jnp.asarray(self.tables["warm"]),
+            warm_n=jnp.asarray(self.counts["warm"]),
+            cold_table=jnp.asarray(self.tables["cold"]),
+            cold_n=jnp.asarray(self.counts["cold"]),
+        )
 
 
 class TieredKVCache:
@@ -104,23 +158,41 @@ class TieredKVCache:
         )
         # KV pages never sit in DRAM; block the option by pricing it out.
         self._page_exists = np.zeros(self.n_regions, bool)
+        # Where the payload actually lives (manager.placement is the desired
+        # placement the policy computed; the executor reconciles them).
+        self.physical = np.zeros(self.n_regions, np.int64)
         self._free_warm = list(range(warm_cap - 1, -1, -1))
         self._free_cold = list(range(cold_cap - 1, -1, -1))
         self._pool_slot = np.full(self.n_regions, -1, np.int64)
         self.quality_skipped_mass = 0.0  # cumulative mass of host-excluded pages
+        # Compute-kernel dispatch accounting for the migration/ingestion path
+        # (quant / dequant / transcode launches — the daemon-tax proxy).
+        self.kernel_dispatches = 0
 
     # ------------------------------------------------------------- helpers
     def rid(self, layer: int, slot: int, page: int) -> int:
         return (layer * self.bs + slot) * self.max_pages + page
 
+    def rid_coords(self, rid: int) -> Tuple[int, int, int]:
+        layer = rid // (self.bs * self.max_pages)
+        slot = (rid // self.max_pages) % self.bs
+        page = rid % self.max_pages
+        return layer, slot, page
+
     def _quant_page(self, kpage, vpage, bits: int):
+        self.kernel_dispatches += 2
         kp, ks = kref.quant_kv_page(kpage, bits)
         vp, vs = kref.quant_kv_page(vpage, bits)
         return kp, ks, vp, vs
 
+    def _set_placement(self, rids, level) -> None:
+        self.physical[rids] = level
+        self.manager.placement[rids] = level
+
     # -------------------------------------------------- page ingestion path
     def append_page(self, layer: int, slot: int, page: int, kpage, vpage) -> None:
-        """New page exits the recent window -> warm tier (T1-first, like the
+        """Single-page ingestion (the batched path is ``append_pages``).
+        New page exits the recent window -> warm tier (T1-first, like the
         paper's waterfall: everything starts in the low-latency tier). Falls
         through to the cold tier under warm-pool pressure with nothing left
         to demote (all warm slots held by in-flight migrations)."""
@@ -148,41 +220,221 @@ class TieredKVCache:
             warm_n=st.warm_n.at[layer, slot].set(n + 1),
         )
         self.state = st
-        self.manager.placement[rid] = WARM
+        self._set_placement(rid, WARM)
         self._page_exists[rid] = True
         self._pool_slot[rid] = ps
         # Live compressibility feedback (paper: measured ratios drive the
         # analytical model).
         self.manager.update_measured_ratio(WARM, 2.0 * kp.size / (kp.size + 4 * ks.size) * 1.0)
 
+    def append_pages(self, entries: Sequence[Tuple[int, int, int]], kpages, vpages) -> None:
+        """Batched ingestion: quantize all N new pages with one kernel
+        dispatch per destination tier (K and V stacked into one batch) and
+        commit the page tables once. ``entries`` is [(layer, slot, page)];
+        kpages/vpages are [N, T, KV, hd] float."""
+        n = len(entries)
+        if n == 0:
+            return
+        rids = np.array([self.rid(*e) for e in entries], np.int64)
+        layers = np.array([e[0] for e in entries], np.int64)
+        slots = np.array([e[1] for e in entries], np.int64)
+
+        deficit = n - len(self._free_warm)
+        if deficit > 0:
+            # Warm pressure: demote the coldest existing warm pages, batched.
+            hot = self.manager.telemetry.averaged_hotness(2)
+            cand = np.where((self.physical == WARM) & self._page_exists)[0]
+            take = cand[np.argsort(hot[cand])][:deficit]
+            if take.size:
+                self.migrate_batch(take, np.full(take.size, COLD, np.int64))
+        n_warm = min(n, len(self._free_warm))
+
+        editor = _TableEditor(self.state)
+        for lo, hi, dst in ((0, n_warm, WARM), (n_warm, n, COLD)):
+            if hi <= lo:
+                continue
+            p = hi - lo
+            bits = _BITS[dst]
+            pay, sc = kops.quant_pages(jnp.concatenate([kpages[lo:hi], vpages[lo:hi]]), bits)
+            self.kernel_dispatches += 1
+            self._scatter_device(
+                dst, rids[lo:hi], layers[lo:hi], slots[lo:hi],
+                pay[:p], sc[:p], pay[p:], sc[p:], editor,
+            )
+            if dst == WARM:
+                kp_sz = int(np.prod(pay[:p].shape))
+                sc_sz = int(np.prod(sc[:p].shape))
+                for _ in range(p):
+                    self.manager.update_measured_ratio(
+                        WARM, 2.0 * (kp_sz / p) / (kp_sz / p + 4 * sc_sz / p)
+                    )
+        self.state = editor.commit(self.state)
+        self._page_exists[rids] = True
+
     def _evict_coldest_warm(self) -> bool:
         """Warm pool pressure: demote the coldest warm page to cold pool.
         Returns False when there is nothing demotable."""
         hot = self.manager.telemetry.averaged_hotness(2)
-        warm_rids = np.where((self.manager.placement == WARM) & self._page_exists)[0]
+        warm_rids = np.where((self.physical == WARM) & self._page_exists)[0]
         if warm_rids.size == 0:
             return False
         victim = warm_rids[np.argmin(hot[warm_rids])]
         self.migrate(int(victim), COLD)
         return True
 
-    # ------------------------------------------------------------ migration
+    # ------------------------------------------------- batched migration
+    def migrate_batch(self, rids: np.ndarray, dsts: np.ndarray) -> int:
+        """Execute a migration batch cohort-by-cohort.
+
+        Cohorts run in a phase order that frees device slots before they are
+        re-claimed: device->host swaps out first, then warm->cold demotions,
+        cold->warm promotions, host->device swap-ins, and finally
+        host<->host retranscodes. When promotions would overflow the warm
+        pool even after in-batch frees, the coldest non-batch warm pages are
+        demoted first; any remaining overflow lands in the cold pool (the
+        per-page path's spill semantics). Returns pages actually moved.
+        """
+        rids = np.asarray(rids, np.int64)
+        dsts = np.asarray(dsts, np.int64)
+        if rids.size and np.unique(rids).size != rids.size:
+            # Dedup with the per-page loop's semantics: for repeated rids the
+            # last entry wins (a sequential loop would land the page there).
+            _, rev_first = np.unique(rids[::-1], return_index=True)
+            idx = np.sort(rids.size - 1 - rev_first)
+            rids, dsts = rids[idx], dsts[idx]
+        keep = self._page_exists[rids] & (self.physical[rids] != dsts)
+        rids, dsts = rids[keep], dsts[keep]
+        if rids.size == 0:
+            return 0
+        srcs = self.physical[rids].copy()
+
+        # Warm-capacity pre-pass.
+        inflow = int((dsts == WARM).sum())
+        freed = int((srcs == WARM).sum())
+        deficit = inflow - (len(self._free_warm) + freed)
+        if deficit > 0:
+            hot = self.manager.telemetry.averaged_hotness(2)
+            in_batch = np.zeros(self.n_regions, bool)
+            in_batch[rids] = True
+            cand = np.where((self.physical == WARM) & self._page_exists & ~in_batch)[0]
+            take = cand[np.argsort(hot[cand])][:deficit]
+            if take.size:
+                rids = np.concatenate([take, rids])
+                srcs = np.concatenate([np.full(take.size, WARM, np.int64), srcs])
+                dsts = np.concatenate([np.full(take.size, COLD, np.int64), dsts])
+                deficit -= take.size
+            if deficit > 0:
+                # Still short: the coldest warm-bound pages spill to cold.
+                warm_bound = np.where(dsts == WARM)[0]
+                spill = warm_bound[np.argsort(hot[rids[warm_bound]])][:deficit]
+                dsts[spill] = COLD
+                still = dsts != srcs
+                rids, srcs, dsts = rids[still], srcs[still], dsts[still]
+        if rids.size == 0:
+            return 0
+
+        def phase(s: int, d: int) -> int:
+            if s in _DEVICE and d not in _DEVICE:
+                return 0  # device -> host: frees pool slots first
+            if s == WARM and d == COLD:
+                return 1
+            if s == COLD and d == WARM:
+                return 2
+            if s not in _DEVICE and d in _DEVICE:
+                return 3  # host -> device swap-in (through the pools)
+            return 4  # host <-> host retranscode
+
+        pairs = sorted(
+            {(int(s), int(d)) for s, d in zip(srcs, dsts)},
+            key=lambda p: (phase(*p), p),
+        )
+        editor = _TableEditor(self.state)
+        moved = 0
+        for s, d in pairs:
+            mask = (srcs == s) & (dsts == d)
+            self._exec_cohort(rids[mask], s, d, editor)
+            moved += int(mask.sum())
+        self.state = editor.commit(self.state)
+        return moved
+
+    def _exec_cohort(self, rids: np.ndarray, src: int, dst: int, editor: _TableEditor) -> None:
+        """Move one (src, dst) cohort: gather -> (transcode | copy) -> scatter."""
+        p = rids.size
+        layers = rids // (self.bs * self.max_pages)
+        slots = (rids // self.max_pages) % self.bs
+        st = self.state
+
+        # Gather all pages of the cohort into one [2P, T, KV, hd'] batch
+        # (K pages then V pages, so one kernel dispatch covers both).
+        if src in _DEVICE:
+            pool = _POOL[src]
+            ps = self._pool_slot[rids]
+            k_pay = getattr(st, f"{pool}_k")[layers, ps]
+            k_sc = getattr(st, f"{pool}_k_scales")[layers, ps]
+            v_pay = getattr(st, f"{pool}_v")[layers, ps]
+            v_sc = getattr(st, f"{pool}_v_scales")[layers, ps]
+            editor.remove(pool, layers, slots, ps)
+            (self._free_warm if src == WARM else self._free_cold).extend(int(x) for x in ps)
+        else:
+            hp = [self.host_pages.pop(int(r)) for r in rids]
+            k_pay = jnp.asarray(np.stack([h[0] for h in hp]))
+            k_sc = jnp.asarray(np.stack([h[1] for h in hp]))
+            v_pay = jnp.asarray(np.stack([h[2] for h in hp]))
+            v_sc = jnp.asarray(np.stack([h[3] for h in hp]))
+
+        if _BITS[src] != _BITS[dst]:
+            pay, sc = kops.transcode_pages(
+                jnp.concatenate([k_pay, v_pay]), jnp.concatenate([k_sc, v_sc]),
+                _BITS[src], _BITS[dst],
+            )
+            self.kernel_dispatches += 1
+            k_pay, v_pay = pay[:p], pay[p:]
+            k_sc, v_sc = sc[:p], sc[p:]
+        # else: same-codec fast path — raw media copy, no transcode dispatch.
+
+        if dst in _DEVICE:
+            self._scatter_device(dst, rids, layers, slots, k_pay, k_sc, v_pay, v_sc, editor)
+        else:
+            kp, ks = np.asarray(k_pay), np.asarray(k_sc)
+            vp, vs = np.asarray(v_pay), np.asarray(v_sc)
+            for i, r in enumerate(rids):
+                self.host_pages[int(r)] = (kp[i], ks[i], vp[i], vs[i])
+            self._pool_slot[rids] = -2
+            self._set_placement(rids, dst)
+
+    def _scatter_device(self, dst, rids, layers, slots, k_pay, k_sc, v_pay, v_sc, editor):
+        pool = _POOL[dst]
+        free = self._free_warm if dst == WARM else self._free_cold
+        new_ps = np.array([free.pop() for _ in range(rids.size)], np.int64)
+        st = self.state
+        kw = {
+            f"{pool}_k": getattr(st, f"{pool}_k").at[layers, new_ps].set(k_pay),
+            f"{pool}_k_scales": getattr(st, f"{pool}_k_scales").at[layers, new_ps].set(k_sc),
+            f"{pool}_v": getattr(st, f"{pool}_v").at[layers, new_ps].set(v_pay),
+            f"{pool}_v_scales": getattr(st, f"{pool}_v_scales").at[layers, new_ps].set(v_sc),
+        }
+        self.state = dataclasses.replace(st, **kw)
+        editor.insert(pool, layers, slots, new_ps)
+        self._pool_slot[rids] = new_ps
+        self._set_placement(rids, dst)
+
+    # ------------------------------------------------- per-page migration
     def migrate(self, rid: int, dst: int) -> None:
-        src = int(self.manager.placement[rid])
+        """Per-page migration path (equivalence oracle + single evictions)."""
+        src = int(self.physical[rid])
         if src == dst or not self._page_exists[rid]:
             return
-        layer = rid // (self.bs * self.max_pages)
-        slot = (rid // self.max_pages) % self.bs
-        page = rid % self.max_pages
+        layer, slot, page = self.rid_coords(rid)
         k, v = self._fetch_dense(rid, layer, slot, page)
         self._remove(rid, layer, slot, page)
         self._insert(rid, layer, slot, page, k, v, dst)
 
     def _fetch_dense(self, rid, layer, slot, page):
         """Decompress a page from wherever it lives (f32)."""
-        src = int(self.manager.placement[rid])
+        src = int(self.physical[rid])
         ps = int(self._pool_slot[rid])
         st = self.state
+        self.kernel_dispatches += 2
         if src == WARM:
             k = kref.dequant_kv_page(st.warm_k[layer, ps], st.warm_k_scales[layer, ps], 8)
             v = kref.dequant_kv_page(st.warm_v[layer, ps], st.warm_v_scales[layer, ps], 8)
@@ -197,9 +449,8 @@ class TieredKVCache:
         return k, v
 
     def _remove(self, rid, layer, slot, page):
-        src = int(self.manager.placement[rid])
+        src = int(self.physical[rid])
         ps = int(self._pool_slot[rid])
-        st = self.state
         if src == WARM:
             # Drop from table by swapping with the last entry.
             self._table_remove("warm", layer, slot, ps)
@@ -268,8 +519,37 @@ class TieredKVCache:
             self.host_pages[rid] = tuple(np.asarray(x) for x in (kp, ks, vp, vs))
             ps = -2
         self.state = st
-        self.manager.placement[rid] = dst
+        self._set_placement(rid, dst)
         self._pool_slot[rid] = ps
+
+    # ------------------------------------------------------------ release
+    def release_slot_pages(self, slot: int) -> None:
+        """Request finished: free all of one batch slot's pages, batched."""
+        rids = np.array(
+            [self.rid(layer, slot, page)
+             for layer in range(self.la) for page in range(self.max_pages)],
+            np.int64,
+        )
+        rids = rids[self._page_exists[rids]]
+        for r in rids:
+            src = int(self.physical[r])
+            ps = int(self._pool_slot[r])
+            if src == WARM:
+                self._free_warm.append(ps)
+            elif src == COLD:
+                self._free_cold.append(ps)
+            else:
+                self.host_pages.pop(int(r), None)
+        self._pool_slot[rids] = -1
+        self._page_exists[rids] = False
+        self.physical[rids] = 0
+        self.manager.placement[rids] = 0
+        st = self.state
+        self.state = dataclasses.replace(
+            st,
+            warm_n=st.warm_n.at[:, slot].set(0),
+            cold_n=st.cold_n.at[:, slot].set(0),
+        )
 
     # ------------------------------------------------------------ telemetry
     def record_telemetry(self, telemetry: Dict[str, jax.Array]) -> None:
@@ -285,10 +565,9 @@ class TieredKVCache:
             table = np.asarray(getattr(st, f"{pool}_table"))
             nvec = np.asarray(getattr(st, f"{pool}_n"))
             slot_to_rid = {}
-            pl = self.manager.placement
+            pl = self.physical
             for rid in np.where((pl == placement) & self._page_exists)[0]:
-                layer = rid // (self.bs * self.max_pages)
-                slot = (rid // self.max_pages) % self.bs
+                layer, slot, _ = self.rid_coords(rid)
                 slot_to_rid[(layer, slot, int(self._pool_slot[rid]))] = rid
             for layer in range(self.la):
                 for slot in range(self.bs):
@@ -303,19 +582,21 @@ class TieredKVCache:
 
     # --------------------------------------------------------- window logic
     def end_window(self):
-        """Run the placement model over existing pages; execute migrations."""
+        """Run the placement model over existing pages; execute the plan with
+        the batched cohort executor."""
         plan = self.manager.end_window()
-        moved = 0
-        for rid, dst in zip(plan.regions, plan.dst):
-            if self._page_exists[rid] and dst != 0:
-                self.migrate(int(rid), int(dst))
-                moved += 1
+        if plan.regions.size == 0:
+            return plan, 0
         # Manager may recommend DRAM(0) for hot pages; KV pages instead go
         # warm (the closest legal tier — recent window plays DRAM's role).
-        for rid in plan.regions[plan.dst == 0]:
-            if self._page_exists[rid]:
-                self.migrate(int(rid), WARM)
-                moved += 1
+        dst = plan.dst.copy()
+        dst[dst == 0] = WARM
+        moved = self.migrate_batch(plan.regions, dst)
+        # The executor wrote actual placements (incl. spills) back into
+        # manager.placement so the cost model prices reality; also reconcile
+        # planned no-ops (e.g. DRAM-recommended pages already sitting warm).
+        ex = plan.regions[self._page_exists[plan.regions]]
+        self.manager.placement[ex] = self.physical[ex]
         return plan, moved
 
     # ------------------------------------------------------------- metrics

@@ -1,0 +1,47 @@
+"""Seeded-numpy property-test harness (the hypothesis replacement).
+
+``cases(n)`` yields ``n`` independent, deterministically-seeded generators;
+each test draws its own inputs from its case rng with the ``draw_*``
+helpers. Failures print the case index + root seed so a case replays as
+``rng = case_rng(root, i)``.
+
+No external dependency: tier-1 must collect and pass on a bare
+jax+numpy+pytest environment.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def case_rng(root: int, i: int) -> np.random.Generator:
+    """The i-th case generator of a run rooted at ``root``."""
+    return np.random.default_rng(np.random.SeedSequence([root, i]))
+
+
+def cases(n: int = 50, root: int = 0) -> Iterator[Tuple[int, np.random.Generator]]:
+    """Yield (case_index, rng) for n independent random cases."""
+    for i in range(n):
+        yield i, case_rng(root, i)
+
+
+def draw_int(rng: np.random.Generator, lo: int, hi: int) -> int:
+    """Uniform integer in [lo, hi] (inclusive, hypothesis-style)."""
+    return int(rng.integers(lo, hi + 1))
+
+
+def draw_float(rng: np.random.Generator, lo: float, hi: float) -> float:
+    """Uniform float in [lo, hi]."""
+    return float(rng.uniform(lo, hi))
+
+
+def draw_log_float(rng: np.random.Generator, lo: float, hi: float) -> float:
+    """Log-uniform float in [lo, hi] (scale-type parameters)."""
+    return float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+
+
+def draw_choice(rng: np.random.Generator, options):
+    """One element of ``options``."""
+    return options[int(rng.integers(0, len(options)))]

@@ -1,6 +1,7 @@
 """TierScape core: codecs, tiers, TCO model, waterfall, analytical solver.
 
-Property-based tests (hypothesis) pin the system's invariants:
+Property-based tests (seeded-numpy case sweeps, see tests/proptest.py) pin
+the system's invariants:
   * codec roundtrip error bounds and monotone ratio/latency orderings,
   * waterfall aging/refault laws,
   * the analytical placement always meets its budget when feasible and is
@@ -9,7 +10,6 @@ Property-based tests (hypothesis) pin the system's invariants:
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from repro.core import analytical, codecs, tco, tiers
 from repro.core.manager import make_manager
 from repro.core.waterfall import WaterfallConfig, waterfall_step
+
+from proptest import cases, draw_float, draw_int
 
 
 # ---------------------------------------------------------------------------
@@ -41,12 +43,12 @@ def test_codec_ratio_ordering():
     assert r["int2"] > r["int4"] > r["int8"]
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_codec_roundtrip_randomized(seed):
-    x = jax.random.normal(jax.random.PRNGKey(seed), (512,), jnp.float32) * (seed % 7 + 1)
-    err = float(codecs.roundtrip_error("int8", x))
-    assert err <= 0.02
+def test_codec_roundtrip_randomized():
+    for i, rng in cases(50):
+        seed = draw_int(rng, 0, 2**31 - 1)
+        x = jax.random.normal(jax.random.PRNGKey(seed), (512,), jnp.float32) * (seed % 7 + 1)
+        err = float(codecs.roundtrip_error("int8", x))
+        assert err <= 0.02, (i, seed, err)
 
 
 def test_codec_zero_input():
@@ -114,34 +116,30 @@ def test_tco_model_eq9_to_12():
 # ---------------------------------------------------------------------------
 
 
-@given(
-    st.integers(1, 400),
-    st.integers(1, 5),
-    st.floats(1.0, 100.0),
-    st.integers(0, 2**31 - 1),
-)
-@settings(max_examples=30, deadline=None)
-def test_waterfall_laws(n_regions, n_tiers, h_th, seed):
-    rng = np.random.default_rng(seed)
-    placement = rng.integers(0, n_tiers + 1, n_regions)
-    hotness = rng.exponential(h_th, n_regions)
-    faults = rng.uniform(0, 1, n_regions) * (placement > 0)
-    cfg = WaterfallConfig(hotness_threshold=h_th)
-    new = waterfall_step(placement, hotness, faults, n_tiers, cfg)
-    # Law 1: placements stay in range.
-    assert new.min() >= 0 and new.max() <= n_tiers
-    # Law 2: refaulted regions restart from DRAM.
-    refaulted = (placement > 0) & (faults >= cfg.refault_fraction)
-    assert (new[refaulted] == 0).all()
-    # Law 3: untouched compressed regions age exactly one tier (clamped).
-    untouched = (placement > 0) & (hotness <= 0) & ~refaulted
-    assert (new[untouched] == np.minimum(placement[untouched] + 1, n_tiers)).all()
-    # Law 4: cold DRAM regions are evicted to tier 1.
-    evict = (placement == 0) & (hotness < h_th)
-    assert (new[evict] == 1).all()
-    # Law 5: hot DRAM regions stay.
-    stay = (placement == 0) & (hotness >= h_th)
-    assert (new[stay] == 0).all()
+def test_waterfall_laws():
+    for i, rng in cases(60):
+        n_regions = draw_int(rng, 1, 400)
+        n_tiers = draw_int(rng, 1, 5)
+        h_th = draw_float(rng, 1.0, 100.0)
+        placement = rng.integers(0, n_tiers + 1, n_regions)
+        hotness = rng.exponential(h_th, n_regions)
+        faults = rng.uniform(0, 1, n_regions) * (placement > 0)
+        cfg = WaterfallConfig(hotness_threshold=h_th)
+        new = waterfall_step(placement, hotness, faults, n_tiers, cfg)
+        # Law 1: placements stay in range.
+        assert new.min() >= 0 and new.max() <= n_tiers, i
+        # Law 2: refaulted regions restart from DRAM.
+        refaulted = (placement > 0) & (faults >= cfg.refault_fraction)
+        assert (new[refaulted] == 0).all(), i
+        # Law 3: untouched compressed regions age exactly one tier (clamped).
+        untouched = (placement > 0) & (hotness <= 0) & ~refaulted
+        assert (new[untouched] == np.minimum(placement[untouched] + 1, n_tiers)).all(), i
+        # Law 4: cold DRAM regions are evicted to tier 1.
+        evict = (placement == 0) & (hotness < h_th)
+        assert (new[evict] == 1).all(), i
+        # Law 5: hot DRAM regions stay.
+        stay = (placement == 0) & (hotness >= h_th)
+        assert (new[stay] == 0).all(), i
 
 
 def test_waterfall_converges_cold_pages_to_last_tier():
@@ -168,33 +166,33 @@ def _options():
     return ts, region_bytes, costs, lats
 
 
-@given(st.integers(2, 60), st.floats(0.05, 0.95), st.integers(0, 2**31 - 1))
-@settings(max_examples=30, deadline=None)
-def test_analytical_respects_budget(n, alpha, seed):
-    ts, region_bytes, costs, lats = _options()
-    rng = np.random.default_rng(seed)
-    hot = rng.exponential(100, n) * (rng.uniform(size=n) > 0.3)
-    budget = tco.budget(ts, n, region_bytes, alpha)
-    sol = analytical.solve_greedy(hot, costs, lats, budget)
-    assert sol.feasible
-    assert sol.cost <= budget * (1 + 1e-9)
-    # Placement indices are valid options.
-    assert sol.placement.min() >= 0 and sol.placement.max() <= ts.n_tiers
+def test_analytical_respects_budget():
+    for i, rng in cases(50):
+        ts, region_bytes, costs, lats = _options()
+        n = draw_int(rng, 2, 60)
+        alpha = draw_float(rng, 0.05, 0.95)
+        hot = rng.exponential(100, n) * (rng.uniform(size=n) > 0.3)
+        budget = tco.budget(ts, n, region_bytes, alpha)
+        sol = analytical.solve_greedy(hot, costs, lats, budget)
+        assert sol.feasible, i
+        assert sol.cost <= budget * (1 + 1e-9), i
+        # Placement indices are valid options.
+        assert sol.placement.min() >= 0 and sol.placement.max() <= ts.n_tiers, i
 
 
-@given(st.integers(2, 16), st.floats(0.1, 0.9), st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_analytical_greedy_near_exact(n, alpha, seed):
-    ts, region_bytes, costs, lats = _options()
-    rng = np.random.default_rng(seed)
-    hot = rng.exponential(100, n)
-    budget = tco.budget(ts, n, region_bytes, alpha)
-    g = analytical.solve_greedy(hot, costs, lats, budget)
-    e = analytical.solve_exact_dp(hot, costs, lats, budget, grid=3000)
-    if e.feasible:
-        # LP-greedy is optimal up to one region's edge; allow that slack.
-        slack = float(hot.max()) * float(lats.max())
-        assert g.penalty <= e.penalty + slack + 1e-12
+def test_analytical_greedy_near_exact():
+    for i, rng in cases(50):
+        ts, region_bytes, costs, lats = _options()
+        n = draw_int(rng, 2, 16)
+        alpha = draw_float(rng, 0.1, 0.9)
+        hot = rng.exponential(100, n)
+        budget = tco.budget(ts, n, region_bytes, alpha)
+        g = analytical.solve_greedy(hot, costs, lats, budget)
+        e = analytical.solve_exact_dp(hot, costs, lats, budget, grid=3000)
+        if e.feasible:
+            # LP-greedy is optimal up to one region's edge; allow that slack.
+            slack = float(hot.max()) * float(lats.max())
+            assert g.penalty <= e.penalty + slack + 1e-12, i
 
 
 def test_analytical_alpha_monotone():
@@ -228,6 +226,40 @@ def test_manager_presets_build():
     for name in ("2T-C", "2T-M", "2T-A", "6T-WF-M", "6T-AM-0.5"):
         m = make_manager(name, 128)
         assert m.n_regions == 128
+
+
+def test_manager_config_name_parsing():
+    """Regression: pin make_manager's config-name grammar (paper §7.1)."""
+    thresholds = {"C": 50.0, "M": 100.0, "A": 250.0}
+    for level in ("C", "M", "A"):
+        m = make_manager(f"2T-{level}", 32)
+        assert m.cfg.policy == "2t"
+        assert m.cfg.hotness_threshold == thresholds[level]
+        assert m.tierset.n_tiers == 1  # DRAM + the single production tier
+
+        m = make_manager(f"6T-WF-{level}", 32)
+        assert m.cfg.policy == "waterfall"
+        assert m.cfg.hotness_threshold == thresholds[level]
+        assert m.tierset.n_tiers == 5
+
+    for alpha in ("0.9", "0.5", "0.1"):
+        m = make_manager(f"6T-AM-{alpha}", 32)
+        assert m.cfg.policy == "analytical"
+        assert m.cfg.alpha == pytest.approx(float(alpha))
+        assert m.tierset.n_tiers == 5
+
+    # Case-insensitive (names are upper-cased before parsing).
+    assert make_manager("6t-wf-m", 32).cfg.policy == "waterfall"
+
+    # Custom thresholds flow through.
+    m = make_manager("2T-C", 32, thresholds={"C": 7.0, "M": 9.0, "A": 11.0})
+    assert m.cfg.hotness_threshold == 7.0
+
+
+@pytest.mark.parametrize("bad", ["", "7T-WF-M", "2X-C", "waterfall", "6T-AM-"])
+def test_manager_unknown_config_rejected(bad):
+    with pytest.raises(ValueError):
+        make_manager(bad, 16)
 
 
 def test_manager_window_stats_accumulate():

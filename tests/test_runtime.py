@@ -10,7 +10,7 @@ from jax.sharding import PartitionSpec as P
 
 import repro.configs as configs
 from repro.configs.base import ParallelConfig
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_abstract_mesh, make_mesh
 from repro.models import Model
 from repro.models.inputs import make_train_batch, train_batch_spec
 from repro.optim import adamw
@@ -35,7 +35,7 @@ def test_param_specs_structure_matches_params():
 def test_param_specs_divisibility_respected():
     """Every spec must divide its dimension on the production mesh shape."""
     # AbstractMesh: spec logic only needs axis sizes, not real devices.
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh = make_abstract_mesh((2, 4), ("data", "model"))
     for arch in configs.arch_ids():
         cfg = configs.get(arch)
         model = Model(cfg)
@@ -57,7 +57,7 @@ def test_param_specs_divisibility_respected():
 
 
 def test_batch_axes_divisibility():
-    mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    mesh = make_abstract_mesh((2, 2, 2), ("pod", "data", "model"))
     assert shr.batch_axes_for(mesh, 8) == ("pod", "data")
     assert shr.batch_axes_for(mesh, 2) == ("pod",)
     assert shr.batch_axes_for(mesh, 1) == ()
