@@ -1,0 +1,70 @@
+"""CI perf-guard: compare migration kernel-dispatch counts vs the committed
+baseline.
+
+Usage: ``python benchmarks/check_dispatch_baseline.py CURRENT.json BASELINE.json``
+
+Fails (exit 1) when, for any size present in the baseline:
+  * the batched executor needs MORE dispatches than the baseline (a cohort
+    regression: O(cohorts) sliding back toward O(pages)), or
+  * the loop/batched dispatch ratio falls below the baseline ratio (the
+    headline batching win shrank).
+
+Dispatch counts are deterministic (they count kernel launches, not time), so
+comparisons are exact — no tolerance band needed. Lower batched counts than
+the baseline are an improvement and pass; refresh the baseline by re-running
+``migration_batch.py --json`` and committing the result.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    errors = []
+    for size, base in sorted(baseline.items()):
+        cur = current.get(size)
+        if cur is None:
+            errors.append(f"size {size}: missing from current results")
+            continue
+        if cur["dispatches_batched"] > base["dispatches_batched"]:
+            errors.append(
+                f"size {size}: batched dispatches regressed "
+                f"{base['dispatches_batched']} -> {cur['dispatches_batched']}"
+            )
+        if cur["dispatch_ratio"] < base["dispatch_ratio"]:
+            errors.append(
+                f"size {size}: dispatch ratio regressed "
+                f"{base['dispatch_ratio']:.1f}x -> {cur['dispatch_ratio']:.1f}x"
+            )
+    return errors
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        current = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+    errors = check(current, baseline)
+    if errors:
+        print("dispatch-count regression vs baseline:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    for size, base in sorted(baseline.items()):
+        cur = current[size]
+        print(
+            f"size {size}: batched={cur['dispatches_batched']} "
+            f"(baseline {base['dispatches_batched']}), "
+            f"ratio={cur['dispatch_ratio']:.1f}x "
+            f"(baseline {base['dispatch_ratio']:.1f}x) — OK"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,10 +7,16 @@ O(cohorts) instead of O(pages) — and correspondingly less wall time.
 
 Rows: ``migration/<n_pages>p-<route>`` with us_per_call = batched wall time,
 derived = dispatch counts + speedup.
+
+CLI: ``--sizes 64,128`` picks the page counts (CI runs small shapes) and
+``--json PATH`` dumps the dispatch counts for the perf-guard baseline check
+(``benchmarks/check_dispatch_baseline.py``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax.numpy as jnp
@@ -57,7 +63,7 @@ def _plan(cache: TieredKVCache):
     return rids, dsts
 
 
-def run(csv: Csv, sizes=(256, 512)) -> None:
+def run(csv: Csv, sizes=(256, 512), results: dict | None = None) -> None:
     for n in sizes:
         per_page_cache = _make_cache(n)
         rids, dsts = _plan(per_page_cache)
@@ -77,6 +83,12 @@ def run(csv: Csv, sizes=(256, 512)) -> None:
         batch_disp = batched_cache.kernel_dispatches
 
         assert batch_disp * 5 <= loop_disp, (batch_disp, loop_disp)
+        if results is not None:
+            results[str(n)] = {
+                "dispatches_loop": int(loop_disp),
+                "dispatches_batched": int(batch_disp),
+                "dispatch_ratio": loop_disp / max(batch_disp, 1),
+            }
         csv.add(
             f"{n}p-warm_to_cold_host", batch_s * 1e6,
             f"dispatches_loop={loop_disp} dispatches_batched={batch_disp} "
@@ -86,9 +98,20 @@ def run(csv: Csv, sizes=(256, 512)) -> None:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="256,512",
+                    help="comma-separated migrated-page counts")
+    ap.add_argument("--json", default=None,
+                    help="write dispatch counts to this path (perf-guard)")
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
     csv = Csv("migration")
-    run(csv)
+    results: dict = {}
+    run(csv, sizes=sizes, results=results)
     csv.emit()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,139 @@
+"""Multi-tenant tiersets under the BudgetArbiter — the paper's headline
+comparison (N-tier vs 2-tier) per tenant and in aggregate, on shared pools.
+
+Scenarios (two tenants each, per §8's co-hosting direction):
+  * ``hotcold``  — skewed Gaussian tenant next to a near-uniform cold tenant,
+  * ``bursty``   — flash-crowd tenant next to a steady tenant,
+  * ``skewflip`` — two tenants whose hotness swaps mid-run.
+
+For each scenario and each config (6T analytical vs the 2T production
+baseline) the arbiter shares one budget + one capacity vector across both
+tenants. Rows: ``multitenant/<scenario>-<tenant>-<config>`` with
+us_per_call = wall time per simulated window, derived = per-tenant slowdown /
+TCO savings / fast-tier share / allotted budget; ``-fleet-`` rows carry the
+aggregate and the single-tenant-baseline delta (must stay within 5%).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.core import simulator
+from repro.core.arbiter import BudgetArbiter, TenantSpec
+from repro.core.manager import make_manager
+from repro.core.simulator import Workload
+
+N_REGIONS = 512
+ACCESSES = 200_000
+ALPHA = 0.5
+
+
+def scenarios() -> List[Tuple[str, List[Workload], List[TenantSpec]]]:
+    n = N_REGIONS
+    return [
+        (
+            "hotcold",
+            [
+                simulator.gaussian_kv(n_regions=n, accesses_per_window=ACCESSES,
+                                      sigma_frac=0.08, name="hot"),
+                simulator.uniform_scan(n_regions=n, accesses_per_window=ACCESSES // 10,
+                                       compute_s_per_window=1.0, name="cold"),
+            ],
+            [TenantSpec("hot", sla_weight=1.0),
+             TenantSpec("cold", sla_weight=1.0, alpha_floor=0.05)],
+        ),
+        (
+            "bursty",
+            [
+                simulator.bursty_kv(n_regions=n, accesses_per_window=ACCESSES // 4,
+                                    burst_every=8, burst_windows=2, burst_mult=8.0,
+                                    name="bursty"),
+                simulator.gaussian_kv(n_regions=n, accesses_per_window=ACCESSES,
+                                      sigma_frac=0.12, name="steady"),
+            ],
+            [TenantSpec("bursty", sla_weight=2.0),
+             TenantSpec("steady", sla_weight=1.0)],
+        ),
+        (
+            "skewflip",
+            [
+                simulator.skew_flip(n_regions=n, accesses_hot=ACCESSES,
+                                    accesses_cold=ACCESSES // 10, flip_window=12,
+                                    hot_first=True, name="early"),
+                simulator.skew_flip(n_regions=n, accesses_hot=ACCESSES,
+                                    accesses_cold=ACCESSES // 10, flip_window=12,
+                                    hot_first=False, name="late"),
+            ],
+            [TenantSpec("early", sla_weight=1.0),
+             TenantSpec("late", sla_weight=1.0)],
+        ),
+    ]
+
+
+def _make_arbiter(config: str, specs, n_tenants: int) -> BudgetArbiter:
+    if config == "6t":
+        managers = [make_manager("6T-AM-0.5", N_REGIONS, seed=t)
+                    for t in range(n_tenants)]
+    else:  # the paper's 2-tier production baseline
+        managers = [make_manager("2T-M", N_REGIONS, seed=t)
+                    for t in range(n_tenants)]
+    n_opts = managers[0].tierset.n_tiers + 1
+    # Shared pools: fast tier holds half the fleet, every compressed tier can
+    # hold the whole fleet (capacity pressure lands on the fast tier, where
+    # the arbitration fight actually is).
+    cap = np.full(n_opts, float(n_tenants * N_REGIONS))
+    cap[0] = n_tenants * N_REGIONS / 2
+    return BudgetArbiter(specs, managers, alpha=ALPHA, tier_capacity_regions=cap)
+
+
+def _single_tenant_baseline(workloads: List[Workload], config: str,
+                            windows: int, warmup: int) -> float:
+    """One manager over the concatenated region space (no tenant split)."""
+    name = "6T-AM-0.5" if config == "6t" else "2T-M"
+    m = make_manager(name, N_REGIONS * len(workloads), seed=0)
+    return simulator.simulate_single_tenant_baseline(
+        workloads, m, windows=windows, warmup_windows=warmup, seed=0
+    )
+
+
+def run(csv: Csv, windows: int = 24, warmup: int = 2) -> None:
+    for scenario, workloads, specs in scenarios():
+        for config in ("6t", "2t"):
+            arb = _make_arbiter(config, specs, len(workloads))
+            t0 = time.perf_counter()
+            res = simulator.simulate_multitenant(
+                workloads, arb, windows=windows, warmup_windows=warmup, seed=0
+            )
+            wall = (time.perf_counter() - t0) * 1e6 / windows
+            for ts in res.tenants:
+                csv.add(
+                    f"{scenario}-{ts.tenant}-{config}",
+                    wall,
+                    f"slowdown_pct={ts.slowdown_pct:.2f};"
+                    f"tco_savings_pct={ts.tco_savings_pct:.2f};"
+                    f"fast_regions={ts.mean_fast_regions:.0f};"
+                    f"budget_usd={ts.mean_budget_usd:.3f}",
+                )
+            single = _single_tenant_baseline(workloads, config, windows, warmup)
+            csv.add(
+                f"{scenario}-fleet-{config}",
+                wall,
+                f"tco_savings_pct={res.fleet_savings_pct:.2f};"
+                f"single_tenant_pct={single:.2f};"
+                f"delta_pct={abs(res.fleet_savings_pct - single):.2f};"
+                f"budget_feasible_frac={res.budget_feasible_frac:.2f}",
+            )
+
+
+def main() -> None:
+    csv = Csv("multitenant")
+    run(csv)
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

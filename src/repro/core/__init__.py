@@ -1,7 +1,8 @@
 """TierScape core: multiple software-defined compressed memory tiers for
 TPU model state, with waterfall / analytical placement (paper §4-§6)."""
 
-from repro.core import analytical, codecs, hw, pools, simulator, tco, telemetry, tiers, waterfall
+from repro.core import analytical, arbiter, codecs, hw, pools, simulator, tco, telemetry, tiers, waterfall
+from repro.core.arbiter import ArbiterWindowStats, BudgetArbiter, TenantSpec
 from repro.core.manager import ManagerConfig, MigrationPlan, TierScapeManager, make_manager
 from repro.core.tiers import (
     BASELINE_2T,
@@ -15,6 +16,7 @@ from repro.core.tiers import (
 
 __all__ = [
     "analytical",
+    "arbiter",
     "codecs",
     "hw",
     "pools",
@@ -23,6 +25,9 @@ __all__ = [
     "telemetry",
     "tiers",
     "waterfall",
+    "ArbiterWindowStats",
+    "BudgetArbiter",
+    "TenantSpec",
     "ManagerConfig",
     "MigrationPlan",
     "TierScapeManager",

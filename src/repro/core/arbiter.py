@@ -1,0 +1,408 @@
+"""Global budget arbiter for multi-tenant tiersets (paper §8 direction).
+
+One ``TierScapeManager`` per tenant — each with its own telemetry, placement
+policy and SLA/TCO targets — shares the physical pools. Every profile window
+the ``BudgetArbiter``:
+
+  1. closes every tenant's telemetry window,
+  2. **waterfills** the fleet-wide TCO budget (Eq. 2's bound, summed over
+     tenants) across tenants by marginal TCO-saving per unit of perf impact:
+     the globally cheapest demotion edges — smallest
+     ``sla_weight * hotness * Δlat / Δcost_saved`` — are taken first until the
+     fleet fits the budget, so the hotter / higher-SLA tenant keeps its fast
+     tier and the cheapest marginal pages (usually the colder tenant's) are
+     demoted,
+  3. lets each tenant's manager plan autonomously against its allotted
+     budget (analytical tenants consume the budget; waterfall/2T tenants
+     plan by threshold and are bounded by step 4),
+  4. reconciles shared-pool over-subscription: when a tier's region capacity
+     is exceeded across tenants, the cheapest marginal pages (smallest
+     weighted hotness) are demoted to the next tier with headroom,
+  5. commits every tenant's placement and records per-tenant + fleet stats.
+
+SLA floors: a tenant is never demoted below
+``tco_min + alpha_floor * (tco_max - tco_min)`` USD of residency — a starved
+tenant keeps at least that much fast-tier budget even when another tenant's
+pages are globally hotter. The capacity pass honors floors too (victims are
+taken from above-floor tenants first); only when physical capacity cannot
+hold every tenant's floor does it breach one — capacity is physical, USD
+floors are policy.
+
+Determinism: the waterfill is a single stable argsort over concatenated edge
+keys plus an in-order take; with fixed seeds (telemetry, workloads) the
+allotted budgets and placements are bit-identical across runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import tco
+from repro.core.analytical import _hull_indices
+from repro.core.manager import MigrationPlan, TierScapeManager
+from repro.core.pools import TenantLedger
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """SLA/TCO contract of one tenant sharing the tierset substrate."""
+
+    name: str
+    # Relative price of this tenant's perf impact in the waterfill: a page of
+    # weight-2 tenant is demoted only after an equally-hot page of a weight-1
+    # tenant. >1 = latency-sensitive, <1 = batch/best-effort.
+    sla_weight: float = 1.0
+    # Guaranteed budget floor as a fraction of the tenant's [TCO_min, TCO_max]
+    # span. The arbiter never *demotes* the tenant below this spend; a tenant
+    # with zero measured hotness still parks at min cost voluntarily (there
+    # is no perf to protect, so reserving budget for it would be waste).
+    alpha_floor: float = 0.0
+
+    def __post_init__(self):
+        if self.sla_weight <= 0:
+            raise ValueError("sla_weight must be positive")
+        if not 0.0 <= self.alpha_floor <= 1.0:
+            raise ValueError("alpha_floor must be in [0, 1]")
+
+
+@dataclasses.dataclass
+class TenantWindowStats:
+    tenant: str
+    window: int
+    budget_usd: float  # allotted by the waterfill (incl. slack share)
+    spent_usd: float  # committed placement cost
+    sla_floor_usd: float
+    savings_pct: float
+    fast_regions: int  # regions resident in placement 0 (uncompressed)
+    weighted_penalty_s: float  # sla_weight * sum(hot * Lat) of the commit
+
+
+@dataclasses.dataclass
+class ArbiterWindowStats:
+    window: int
+    global_budget_usd: float
+    fleet_tco_usd: float
+    fleet_savings_pct: float
+    budget_feasible: bool  # False when SLA floors force spend above budget
+    tenants: List[TenantWindowStats]
+
+
+class BudgetArbiter:
+    """Splits per-tier capacity + the global TCO budget across N tenants."""
+
+    def __init__(
+        self,
+        specs: Sequence[TenantSpec],
+        managers: Sequence[TierScapeManager],
+        alpha: float = 0.5,
+        tier_capacity_regions: Optional[np.ndarray] = None,
+    ):
+        if len(specs) != len(managers):
+            raise ValueError("one manager per tenant spec")
+        if len({s.name for s in specs}) != len(specs):
+            raise ValueError("tenant names must be unique")
+        n_opts = {m.tierset.n_tiers + 1 for m in managers}
+        if len(n_opts) != 1:
+            raise ValueError("all tenants must share the tierset structure")
+        self.n_options = n_opts.pop()
+        self.specs = list(specs)
+        self.managers = list(managers)
+        self.alpha = alpha
+        if tier_capacity_regions is None:
+            cap = np.full(self.n_options, np.inf)
+        else:
+            cap = np.asarray(tier_capacity_regions, dtype=np.float64)
+            if cap.shape != (self.n_options,):
+                raise ValueError(f"capacity must have shape ({self.n_options},)")
+            if cap.sum() < sum(m.n_regions for m in managers):
+                raise ValueError("pool capacities cannot hold the fleet's regions")
+        self.capacity_regions = cap
+        self.ledger = TenantLedger([s.name for s in specs], cap)
+        self.history: List[ArbiterWindowStats] = []
+        self._window = 0
+
+    # ----------------------------------------------------------------- window
+    def global_budget_usd(self) -> float:
+        """Fleet-wide Eq. 2 bound: sum of per-tenant alpha-budgets."""
+        return sum(
+            tco.budget(m.tierset, m.n_regions, m.region_bytes, self.alpha, m.measured_ratios)
+            for m in self.managers
+        )
+
+    def sla_floor_usd(self, t: int) -> float:
+        m, s = self.managers[t], self.specs[t]
+        mx = tco.tco_max(m.n_regions, m.region_bytes)
+        mn = tco.tco_min(m.tierset, m.n_regions, m.region_bytes, m.measured_ratios)
+        return mn + s.alpha_floor * (mx - mn)
+
+    def end_window(self) -> Dict[str, MigrationPlan]:
+        """Arbitrate one window; returns each tenant's migration plan."""
+        hots = [m.close_telemetry() for m in self.managers]
+        avg_hots = [
+            m.telemetry.averaged_hotness(m.cfg.history_windows) for m in self.managers
+        ]
+        costs = [
+            tco.usd_per_region(m.tierset, m.region_bytes, m.measured_ratios)
+            for m in self.managers
+        ]
+        lats = [m._lat_region for m in self.managers]
+        floors = [self.sla_floor_usd(t) for t in range(len(self.specs))]
+        global_budget = self.global_budget_usd()
+
+        budgets = self._waterfill(avg_hots, costs, lats, floors, global_budget)
+
+        news = []
+        for t, m in enumerate(self.managers):
+            if m.cfg.policy == "analytical":
+                news.append(
+                    m.plan_placement(
+                        hots[t], budget=budgets[t],
+                        avg_hotness=avg_hots[t], option_costs=costs[t],
+                    )
+                )
+            else:
+                news.append(m.plan_placement(hots[t]))
+        news = self._reconcile_capacity(news, avg_hots, costs, floors)
+
+        plans: Dict[str, MigrationPlan] = {}
+        tenant_stats: List[TenantWindowStats] = []
+        for t, (m, s) in enumerate(zip(self.managers, self.specs)):
+            plans[s.name] = m.commit_placement(news[t])
+            self.ledger.set_usage(
+                s.name, np.bincount(news[t], minlength=self.n_options)
+            )
+            spent = tco.tco_nt(m.tierset, news[t], m.region_bytes, m.measured_ratios)
+            tenant_stats.append(
+                TenantWindowStats(
+                    tenant=s.name,
+                    window=self._window,
+                    budget_usd=budgets[t],
+                    spent_usd=spent,
+                    sla_floor_usd=floors[t],
+                    savings_pct=m.history[-1].savings_pct,
+                    fast_regions=int((news[t] == 0).sum()),
+                    weighted_penalty_s=float(
+                        s.sla_weight * (avg_hots[t] * lats[t][news[t]]).sum()
+                    ),
+                )
+            )
+        # After commit every manager's placement == news[t], so the fleet
+        # aggregation helpers price exactly what was just committed.
+        self.history.append(
+            ArbiterWindowStats(
+                window=self._window,
+                global_budget_usd=global_budget,
+                fleet_tco_usd=tco.fleet_tco_usd(self.managers),
+                fleet_savings_pct=tco.fleet_savings_pct(self.managers),
+                budget_feasible=sum(budgets) <= global_budget * (1 + 1e-9),
+                tenants=tenant_stats,
+            )
+        )
+        self._window += 1
+        return plans
+
+    # -------------------------------------------------------------- waterfill
+    def _waterfill(
+        self,
+        avg_hots: Sequence[np.ndarray],
+        costs: Sequence[np.ndarray],
+        lats: Sequence[np.ndarray],
+        floors: Sequence[float],
+        global_budget: float,
+    ) -> List[float]:
+        """Split ``global_budget`` across tenants by marginal utility.
+
+        Mirrors ``analytical.solve_greedy``'s LP-greedy, but the edge pool is
+        fleet-wide and each edge key is scaled by the tenant's SLA weight.
+        Returns per-tenant USD budgets that sum exactly to
+        ``max(global_budget, sum of floor-clamped spends)``.
+        """
+        n_t = len(self.specs)
+        spend = np.zeros(n_t)
+        edge_key: List[np.ndarray] = []
+        edge_tenant: List[np.ndarray] = []
+        edge_saving: List[np.ndarray] = []
+        edge_region: List[np.ndarray] = []
+
+        for t in range(n_t):
+            hot = np.asarray(avg_hots[t], dtype=np.float64)
+            hull = _hull_indices(costs[t], lats[t])
+            hull_costs = costs[t][hull]
+            cold = hot <= 0
+            # Start everyone at min-penalty; cold regions at min cost (their
+            # penalty is 0 everywhere — exactly solve_greedy's opening state).
+            spend[t] = float(
+                (~cold).sum() * hull_costs[0] + cold.sum() * costs[t].min()
+            )
+            if len(hull) < 2:
+                continue
+            d_cost = hull_costs[:-1] - hull_costs[1:]  # (E,) > 0 saved per edge
+            d_lat = lats[t][hull][1:] - lats[t][hull][:-1]  # (E,) >= 0 added
+            slopes = np.where(d_cost > 0, d_lat / np.maximum(d_cost, 1e-30), np.inf)
+            hot_idx = np.where(~cold)[0]
+            if hot_idx.size == 0:
+                continue
+            keys = self.specs[t].sla_weight * hot[hot_idx][:, None] * slopes[None, :]
+            edge_key.append(keys.reshape(-1))
+            edge_tenant.append(np.full(keys.size, t, dtype=np.int64))
+            edge_saving.append(
+                np.broadcast_to(d_cost[None, :], keys.shape).reshape(-1)
+            )
+            edge_region.append(
+                np.broadcast_to(
+                    np.arange(hot_idx.size)[:, None], keys.shape
+                ).reshape(-1)
+            )
+
+        need = float(spend.sum()) - global_budget
+        if need > 0 and edge_key:
+            keys = np.concatenate(edge_key)
+            tenants = np.concatenate(edge_tenant)
+            savings = np.concatenate(edge_saving)
+            regions = np.concatenate(edge_region)
+            order = np.argsort(keys, kind="stable")
+            blocked: set = set()
+            for i in order:
+                t = int(tenants[i])
+                key = (t, int(regions[i]))
+                if key in blocked:
+                    continue
+                dc = float(savings[i])
+                if spend[t] - dc < floors[t] - 1e-12:
+                    # This demotion would breach the tenant's SLA floor. A
+                    # region's hull edges must be taken in order, so block
+                    # this region's remaining chain — but keep considering
+                    # the tenant's other regions, whose next edges may save
+                    # less and still fit above the floor.
+                    blocked.add(key)
+                    continue
+                spend[t] -= dc
+                need -= dc
+                if need <= 0:
+                    break
+
+        budgets = spend.copy()
+        slack = global_budget - float(spend.sum())
+        if slack > 0:
+            # Distribute unneeded headroom by SLA weight so budgets sum to
+            # the global budget exactly (the ledger invariant).
+            w = np.array([s.sla_weight for s in self.specs])
+            budgets = budgets + slack * w / w.sum()
+        return [float(b) for b in budgets]
+
+    # ---------------------------------------------------- capacity reconcile
+    def _reconcile_capacity(
+        self,
+        news: List[np.ndarray],
+        avg_hots: Sequence[np.ndarray],
+        costs: Sequence[np.ndarray],
+        floors: Sequence[float],
+    ) -> List[np.ndarray]:
+        """Enforce shared per-tier region capacities across tenants.
+
+        Overfull tiers shed their cheapest marginal pages — smallest
+        ``sla_weight * hotness`` fleet-wide — to the next tier index with
+        headroom (denser/cheaper, the demotion direction). Victims whose
+        tenant would drop below its SLA floor are skipped while any
+        above-floor victim exists; if capacity physically cannot hold every
+        floor, the coldest page goes regardless (capacity wins over policy).
+        When no deeper tier has headroom the overflow spills *upward* into
+        the shallowest-constrained faster tier instead (hottest pages first —
+        promotion raises spend, so floors are never at risk); the constructor
+        guarantees total capacity holds the fleet, so one direction always
+        has room.
+        """
+        if not np.isfinite(self.capacity_regions).any():
+            return news
+        sizes = [n.size for n in news]
+        pl = np.concatenate(news)
+        hot = np.concatenate([np.asarray(h, dtype=np.float64) for h in avg_hots])
+        tenant_of = np.concatenate(
+            [np.full(sz, t, dtype=np.int64) for t, sz in enumerate(sizes)]
+        )
+        w = np.array([s.sla_weight for s in self.specs])[tenant_of]
+        spend = np.array(
+            [float(costs[t][news[t]].sum()) for t in range(len(sizes))]
+        )
+        counts = np.bincount(pl, minlength=self.n_options).astype(np.float64)
+        n_t = len(sizes)
+        for k in range(self.n_options):
+            over = counts[k] - self.capacity_regions[k]
+            if over <= 0:
+                continue
+            over = int(np.ceil(over))
+            idx = np.where(pl == k)[0]
+            order = np.lexsort((idx, w[idx] * hot[idx]))  # coldest weighted first
+            cand = idx[order]
+            while over > 0:
+                dst = next(
+                    (j for j in range(k + 1, self.n_options)
+                     if counts[j] + 1 <= self.capacity_regions[j]),
+                    None,
+                )
+                if dst is None:
+                    # No deeper headroom: spill upward to the nearest faster
+                    # tier with room (total capacity was validated, so it
+                    # exists unless every tier is simultaneously full).
+                    dst = next(
+                        (j for j in range(k - 1, -1, -1)
+                         if counts[j] + 1 <= self.capacity_regions[j]),
+                        None,
+                    )
+                if dst is None or cand.size == 0:
+                    raise MemoryError(
+                        f"tier capacities cannot absorb overflow from tier {k}"
+                    )
+                room = int(min(self.capacity_regions[dst] - counts[dst], over))
+                delta = np.array(
+                    [costs[t][dst] - costs[t][k] for t in range(n_t)]
+                )
+                if dst > k:
+                    # Demotion (one batch per destination tier): each tenant
+                    # can shed at most floor((spend - floor) / cost_drop)
+                    # pages before breaching its SLA floor; fill the room
+                    # coldest-first under those per-tenant quotas.
+                    quota = np.where(
+                        delta < 0,
+                        np.floor((spend - np.asarray(floors) + 1e-12)
+                                 / np.maximum(-delta, 1e-30)),
+                        np.inf,
+                    )
+                    take, keep = [], []
+                    for r in cand:
+                        t = tenant_of[r]
+                        if len(take) < room and quota[t] >= 1:
+                            quota[t] -= 1
+                            take.append(r)
+                        else:
+                            keep.append(r)
+                    if not take:
+                        # Every candidate's floor would break: capacity is
+                        # physical, so the coldest pages go regardless.
+                        take, keep = list(cand[:room]), list(cand[room:])
+                    take = np.array(take, dtype=np.int64)
+                    cand = np.array(keep, dtype=np.int64)
+                else:
+                    # Promotion: hottest pages benefit, and spend only
+                    # rises, so SLA floors cannot be violated.
+                    take = cand[-room:]
+                    cand = cand[:-room]
+                pl[take] = dst
+                np.add.at(spend, tenant_of[take], delta[tenant_of[take]])
+                counts[dst] += take.size
+                counts[k] -= take.size
+                over -= take.size
+        out, off = [], 0
+        for sz in sizes:
+            out.append(pl[off : off + sz])
+            off += sz
+        return out
+
+    # ------------------------------------------------------------------ views
+    def tenant_history(self, name: str) -> List[TenantWindowStats]:
+        return [
+            ts for ws in self.history for ts in ws.tenants if ts.tenant == name
+        ]

@@ -36,6 +36,7 @@ class ManagerConfig:
     window_steps: int = 64  # engine steps per profile window
     history_windows: int = 4  # averaging depth for the analytical model
     refault_fraction: float = 0.25
+    tenant: str = ""  # owning tenant in multi-tenant deploys ("" = sole tenant)
 
 
 @dataclasses.dataclass
@@ -125,6 +126,7 @@ class TierScapeManager:
         self._fault_overhead_s = 0.0
         self.history: List[WindowStats] = []
         self.total_daemon_s = 0.0
+        self._pending_daemon_s = 0.0
 
     # ------------------------------------------------------------------ API
     def record_access_counts(self, counts: np.ndarray) -> None:
@@ -171,11 +173,35 @@ class TierScapeManager:
         self.measured_ratios[i] = (1 - ema) * self.measured_ratios[i] + ema * ratio
 
     # -------------------------------------------------------------- window
-    def end_window(self) -> MigrationPlan:
+    # The window boundary is split into three phases so a multi-tenant
+    # BudgetArbiter can interpose between them: close telemetry for every
+    # tenant, waterfill the global budget, then plan+commit each tenant
+    # against its allotted budget. ``end_window`` composes all three for
+    # single-tenant callers (unchanged behavior).
+    def close_telemetry(self) -> np.ndarray:
+        """Phase 1: close the profile window; returns the window's hotness."""
         t0 = time.perf_counter()
         hotness = self.telemetry.close_window()
-        old = self.placement.copy()
+        self._pending_daemon_s += time.perf_counter() - t0
+        return hotness
 
+    def plan_placement(
+        self,
+        hotness: np.ndarray,
+        budget: Optional[float] = None,
+        avg_hotness: Optional[np.ndarray] = None,
+        option_costs: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Phase 2: run the placement policy; returns the proposed placement.
+
+        ``budget`` overrides the analytical policy's self-derived alpha budget
+        (USD) — this is how an arbiter-allotted per-tenant budget flows in.
+        Waterfall/2T ignore it (they are threshold-, not budget-driven).
+        ``avg_hotness``/``option_costs`` let an arbiter pass the values it
+        already computed for the waterfill instead of recomputing them here.
+        """
+        t0 = time.perf_counter()
+        old = self.placement
         if self.cfg.policy in ("waterfall", "2t"):
             fault_frac = (self._fault_counts > 0).astype(np.float64)
             new = waterfall_step(
@@ -186,26 +212,39 @@ class TierScapeManager:
                 WaterfallConfig(self.cfg.hotness_threshold, self.cfg.refault_fraction),
             )
         elif self.cfg.policy == "analytical":
-            avg_hot = self.telemetry.averaged_hotness(self.cfg.history_windows)
-            option_costs = tco.usd_per_region(
-                self.tierset, self.region_bytes, self.measured_ratios
+            avg_hot = (
+                avg_hotness
+                if avg_hotness is not None
+                else self.telemetry.averaged_hotness(self.cfg.history_windows)
             )
-            budget = tco.budget(
-                self.tierset,
-                self.n_regions,
-                self.region_bytes,
-                self.cfg.alpha,
-                self.measured_ratios,
-            )
+            if option_costs is None:
+                option_costs = tco.usd_per_region(
+                    self.tierset, self.region_bytes, self.measured_ratios
+                )
+            if budget is None:
+                budget = tco.budget(
+                    self.tierset,
+                    self.n_regions,
+                    self.region_bytes,
+                    self.cfg.alpha,
+                    self.measured_ratios,
+                )
             sol = analytical.solve_greedy(avg_hot, option_costs, self._lat_region, budget)
             new = sol.placement
         else:
             raise ValueError(f"unknown policy {self.cfg.policy!r}")
+        self._pending_daemon_s += time.perf_counter() - t0
+        return new
 
+    def commit_placement(self, new: np.ndarray) -> MigrationPlan:
+        """Phase 3: adopt ``new``, price the migration, record window stats."""
+        t0 = time.perf_counter()
+        old = self.placement
         moved = np.where(new != old)[0]
         plan = self._plan(moved, old[moved], new[moved])
         self.placement = new
-        daemon_s = time.perf_counter() - t0
+        daemon_s = time.perf_counter() - t0 + self._pending_daemon_s
+        self._pending_daemon_s = 0.0
         self.total_daemon_s += daemon_s + plan.modeled_migration_s
 
         self.history.append(
@@ -229,6 +268,9 @@ class TierScapeManager:
         self._fault_counts[:] = 0
         self._fault_overhead_s = 0.0
         return plan
+
+    def end_window(self, budget: Optional[float] = None) -> MigrationPlan:
+        return self.commit_placement(self.plan_placement(self.close_telemetry(), budget))
 
     def _plan(self, regions: np.ndarray, src: np.ndarray, dst: np.ndarray) -> MigrationPlan:
         """Price a migration batch — vectorized numpy over (src, dst) cohorts.

@@ -24,7 +24,7 @@ consume. Recorded as an adaptation in DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,28 +81,108 @@ def pool_decompress_block(spec: TierSpec, pool: TierPool, slot, shape, dtype=jnp
 
 
 class SlotAllocator:
-    """Host-side slot management for one tier pool (daemon side)."""
+    """Host-side slot management for one tier pool (daemon side).
 
-    def __init__(self, capacity: int):
+    In multi-tenant deploys the pool is shared: ``tenant_quota`` caps how many
+    slots each tenant may hold concurrently (a hard per-tenant reservation,
+    so one tenant cannot starve another's tier — the MaxMem failure mode).
+    """
+
+    def __init__(self, capacity: int, tenant_quota: Optional[Dict[str, int]] = None):
         self.capacity = capacity
+        if tenant_quota is not None and sum(tenant_quota.values()) > capacity:
+            raise ValueError("tenant quotas exceed pool capacity")
+        self.tenant_quota = tenant_quota
         self._free: List[int] = list(range(capacity - 1, -1, -1))
         self._owner: dict[int, int] = {}  # slot -> block_id
+        self._slot_tenant: Dict[int, str] = {}
+        self._tenant_used: Dict[str, int] = {}
 
-    def alloc(self, block_id: int) -> int:
+    def alloc(self, block_id: int, tenant: Optional[str] = None) -> int:
         if not self._free:
             raise MemoryError("tier pool exhausted")
+        if self.tenant_quota is not None:
+            # Quotas are a hard contract: every alloc must be attributable,
+            # or untenanted calls would drain the pool uncounted.
+            if tenant is None:
+                raise ValueError("tenant required when tenant_quota is set")
+            if tenant not in self.tenant_quota:
+                raise KeyError(f"unknown tenant {tenant!r}")
+            if self._tenant_used.get(tenant, 0) >= self.tenant_quota[tenant]:
+                raise MemoryError(f"tenant {tenant!r} quota exhausted")
         slot = self._free.pop()
         self._owner[slot] = block_id
+        if tenant is not None:
+            self._slot_tenant[slot] = tenant
+            self._tenant_used[tenant] = self._tenant_used.get(tenant, 0) + 1
         return slot
 
     def free(self, slot: int) -> None:
         if slot in self._owner:
             del self._owner[slot]
             self._free.append(slot)
+            tenant = self._slot_tenant.pop(slot, None)
+            if tenant is not None:
+                self._tenant_used[tenant] -= 1
 
     @property
     def used(self) -> int:
         return self.capacity - len(self._free)
+
+    def used_by(self, tenant: str) -> int:
+        return self._tenant_used.get(tenant, 0)
+
+
+class TenantLedger:
+    """Per-tenant region accounting + reservations on shared tier pools.
+
+    Tracks, per (tenant, placement index), how many regions the tenant holds
+    (``usage``, written by the arbiter each window) and how many it has
+    reserved ahead of migration (``reserved``). Capacity is fleet-wide per
+    tier; ``headroom``/``oversubscribed`` are what the arbiter's capacity
+    reconciliation enforces.
+    """
+
+    def __init__(self, tenants: Sequence[str], capacity_regions: np.ndarray):
+        self.tenants = list(tenants)
+        self._idx = {t: i for i, t in enumerate(self.tenants)}
+        if len(self._idx) != len(self.tenants):
+            raise ValueError("tenant names must be unique")
+        self.capacity = np.asarray(capacity_regions, dtype=np.float64)
+        self.usage = np.zeros((len(self.tenants), self.capacity.size), dtype=np.int64)
+        self.reserved = np.zeros_like(self.usage)
+
+    def index(self, tenant: str) -> int:
+        return self._idx[tenant]
+
+    def set_usage(self, tenant: str, per_tier_regions: np.ndarray) -> None:
+        per_tier_regions = np.asarray(per_tier_regions, dtype=np.int64)
+        if per_tier_regions.shape != (self.capacity.size,):
+            raise ValueError("usage vector must have one entry per placement index")
+        self.usage[self._idx[tenant]] = per_tier_regions
+
+    def reserve(self, tenant: str, tier: int, n_regions: int = 1) -> bool:
+        """Reserve migration headroom; False when the tier cannot hold it."""
+        if self.headroom(tier) < n_regions:
+            return False
+        self.reserved[self._idx[tenant], tier] += n_regions
+        return True
+
+    def release(self, tenant: str, tier: int, n_regions: int = 1) -> None:
+        t = self._idx[tenant]
+        self.reserved[t, tier] = max(self.reserved[t, tier] - n_regions, 0)
+
+    def headroom(self, tier: int) -> float:
+        return float(
+            self.capacity[tier] - self.usage[:, tier].sum() - self.reserved[:, tier].sum()
+        )
+
+    def tenant_usage(self, tenant: str) -> np.ndarray:
+        return self.usage[self._idx[tenant]].copy()
+
+    def oversubscribed(self) -> np.ndarray:
+        """Per-tier bool: committed usage + reservations exceed capacity."""
+        return (self.usage.sum(axis=0) + self.reserved.sum(axis=0)) > self.capacity
 
 
 @dataclasses.dataclass

@@ -104,6 +104,58 @@ def uniform_scan(
     return Workload(name, n_regions, accesses_per_window, compute_s_per_window, sampler)
 
 
+def bursty_kv(
+    n_regions: int = 4096,
+    accesses_per_window: int = 2_000_000,
+    burst_every: int = 8,
+    burst_windows: int = 2,
+    burst_mult: float = 6.0,
+    sigma_frac: float = 0.10,
+    compute_s_per_window: float = 1.0,
+    name: str = "bursty",
+) -> Workload:
+    """Bursty tenant: Gaussian popularity whose traffic multiplies by
+    ``burst_mult`` for ``burst_windows`` windows out of every ``burst_every``
+    (flash-crowd analogue). The arbiter should hand it fast-tier budget
+    during bursts and reclaim it between them."""
+
+    def sampler(w: int, rng: np.random.Generator) -> np.ndarray:
+        mult = burst_mult if (w % burst_every) < burst_windows else 1.0
+        n_acc = int(accesses_per_window * mult)
+        keys = rng.normal(0.5, sigma_frac, size=n_acc)
+        idx = (np.mod(keys, 1.0) * n_regions).astype(np.int64)
+        return np.bincount(idx, minlength=n_regions).astype(np.float64)
+
+    return Workload(name, n_regions, accesses_per_window, compute_s_per_window, sampler)
+
+
+def skew_flip(
+    n_regions: int = 4096,
+    accesses_hot: int = 2_000_000,
+    accesses_cold: int = 200_000,
+    flip_window: int = 20,
+    hot_first: bool = True,
+    sigma_frac: float = 0.08,
+    compute_s_per_window: float = 1.0,
+    name: str = "skewflip",
+) -> Workload:
+    """Skew-flip tenant: hot Gaussian traffic before ``flip_window``, near-idle
+    uniform traffic after (or the reverse with ``hot_first=False``). Two such
+    tenants with opposite phase model a mid-run skew flip between tenants."""
+
+    def sampler(w: int, rng: np.random.Generator) -> np.ndarray:
+        hot_phase = (w < flip_window) == hot_first
+        if hot_phase:
+            keys = rng.normal(0.5, sigma_frac, size=accesses_hot)
+            idx = (np.mod(keys, 1.0) * n_regions).astype(np.int64)
+        else:
+            idx = rng.integers(0, n_regions, size=accesses_cold)
+        return np.bincount(idx, minlength=n_regions).astype(np.float64)
+
+    return Workload(name, n_regions, max(accesses_hot, accesses_cold),
+                    compute_s_per_window, sampler)
+
+
 PAPER_WORKLOADS: Callable[[], List[Workload]] = lambda: [
     gaussian_kv(name="memcached", sigma_frac=0.08),
     gaussian_kv(name="redis", sigma_frac=0.12, drift_frac=0.02),
@@ -131,6 +183,29 @@ class SimResult:
     fault_hists: np.ndarray  # (W, N+1) faults per source placement
 
 
+def charge_window_faults(
+    manager: TierScapeManager, counts: np.ndarray
+) -> tuple[float, np.ndarray, np.ndarray]:
+    """Ground-truth fault accounting for one window (engine side).
+
+    A compressed region accessed k times faults its distinct blocks on
+    demand: E[distinct blocks among k uniform accesses of B blocks] =
+    B * (1 - (1 - 1/B)^k)  (4KB-page faults within the 2MB region).
+    Returns (fault_overhead_s, per-placement fault histogram, n_blocks).
+    """
+    bpr = manager.blocks_per_region
+    placement_before = manager.placement.copy()
+    faulted = (counts > 0) & (placement_before > 0)
+    fault_ids = np.where(faulted)[0]
+    k = counts[fault_ids]
+    n_blocks = bpr * (1.0 - (1.0 - 1.0 / bpr) ** k)
+    fault_src = placement_before[fault_ids]
+    fault_lat_s = manager.fault_back(fault_ids, n_blocks)
+    fault_hist = np.zeros(manager.tierset.n_tiers + 1)
+    np.add.at(fault_hist, fault_src, n_blocks)
+    return float(fault_lat_s.sum()), fault_hist, n_blocks
+
+
 def simulate(
     workload: Workload,
     manager: TierScapeManager,
@@ -149,30 +224,14 @@ def simulate(
     blk_lat_us = np.array(manager.tierset.latencies_s()) * 1e6
     lat_support_us = np.concatenate([[DRAM_ACCESS_US], blk_lat_us[1:]])
     lat_counts = np.zeros_like(lat_support_us)
-    bpr = manager.blocks_per_region
 
     for w in range(windows):
         counts = workload.sample_window(w, rng)
-        placement_before = manager.placement.copy()
-
-        # --- ground truth fault accounting (engine side) -------------------
-        # A compressed region accessed k times faults its distinct blocks on
-        # demand: E[distinct blocks among k uniform accesses of B blocks] =
-        # B * (1 - (1 - 1/B)^k)  (4KB-page faults within the 2MB region).
-        compressed = placement_before > 0
-        faulted = (counts > 0) & compressed
-        fault_ids = np.where(faulted)[0]
-        k = counts[fault_ids]
-        n_blocks = bpr * (1.0 - (1.0 - 1.0 / bpr) ** k)
-        fault_src = placement_before[fault_ids]
-        fault_lat_s = manager.fault_back(fault_ids, n_blocks)
-        fault_overhead_s = float(fault_lat_s.sum())
+        fault_overhead_s, fault_hist, n_blocks = charge_window_faults(manager, counts)
 
         # Latency distribution: each faulted block pays its tier's fault
         # latency; every other access is a DRAM hit.
         lat_counts[0] += counts.sum() - n_blocks.sum()
-        fault_hist = np.zeros(manager.tierset.n_tiers + 1)
-        np.add.at(fault_hist, fault_src, n_blocks)
         lat_counts[1:] += fault_hist[1:]
         fault_hists.append(fault_hist)
 
@@ -216,3 +275,138 @@ def simulate(
         placement_hists=np.stack(placement_hists),
         fault_hists=np.stack(fault_hists),
     )
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant simulation: N workloads, one manager each, shared substrate
+# under a BudgetArbiter (paper §8 direction).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TenantSimStats:
+    tenant: str
+    workload: str
+    slowdown_pct: float  # mean relative slowdown vs all-DRAM (post-warmup)
+    tco_savings_pct: float
+    mean_fast_regions: float  # mean regions resident uncompressed
+    mean_budget_usd: float  # mean arbiter-allotted budget
+    # All per-window arrays cover the same post-warmup windows, aligned
+    # index-for-index: shape (windows - warmup_windows,).
+    per_window_fast: np.ndarray
+    per_window_budget: np.ndarray
+    per_window_savings: np.ndarray
+    per_window_slowdown: np.ndarray
+
+
+@dataclasses.dataclass
+class MultiTenantSimResult:
+    windows: int
+    fleet_savings_pct: float  # mean aggregate TCO savings (post-warmup)
+    fleet_tco_usd: float  # mean aggregate TCO (post-warmup, this run only)
+    budget_feasible_frac: float  # this run's windows where floors fit the budget
+    tenants: List["TenantSimStats"]
+    per_window_fleet_savings: np.ndarray
+
+
+def simulate_multitenant(
+    workloads: List[Workload],
+    arbiter,
+    windows: int = 40,
+    warmup_windows: int = 2,
+    seed: int = 0,
+) -> MultiTenantSimResult:
+    """Drive N tenant workloads against one BudgetArbiter.
+
+    Per window, each tenant samples its trace, charges faults against its own
+    manager and records telemetry; the arbiter then closes every tenant's
+    window at once — waterfilling budgets, reconciling shared-pool capacity
+    and committing every placement.
+    """
+    specs, managers = arbiter.specs, arbiter.managers
+    assert len(workloads) == len(managers)
+    for wl, m in zip(workloads, managers):
+        assert m.n_regions == wl.n_regions
+    rngs = [np.random.default_rng(seed + 17 * t) for t in range(len(workloads))]
+
+    t_slow: List[List[float]] = [[] for _ in workloads]
+    t_save: List[List[float]] = [[] for _ in workloads]
+    t_fast: List[List[int]] = [[] for _ in workloads]
+    t_budget: List[List[float]] = [[] for _ in workloads]
+    fleet_save: List[float] = []
+
+    for w in range(windows):
+        overheads = []
+        for t, (wl, m) in enumerate(zip(workloads, managers)):
+            counts = wl.sample_window(w, rngs[t])
+            fault_overhead_s, _, _ = charge_window_faults(m, counts)
+            m.record_access_counts(counts)
+            base_s = wl.compute_s_per_window + counts.sum() * DRAM_ACCESS_US * 1e-6
+            overheads.append(100.0 * fault_overhead_s / base_s)
+        arbiter.end_window()
+        ws = arbiter.history[-1]
+        if w >= warmup_windows:
+            fleet_save.append(ws.fleet_savings_pct)
+            for t, ts in enumerate(ws.tenants):
+                t_slow[t].append(overheads[t])
+                t_save[t].append(ts.savings_pct)
+                t_fast[t].append(ts.fast_regions)
+                t_budget[t].append(ts.budget_usd)
+
+    tenants = [
+        TenantSimStats(
+            tenant=specs[t].name,
+            workload=workloads[t].name,
+            slowdown_pct=float(np.mean(t_slow[t])) if t_slow[t] else 0.0,
+            tco_savings_pct=float(np.mean(t_save[t])) if t_save[t] else 0.0,
+            mean_fast_regions=float(np.mean(t_fast[t])) if t_fast[t] else 0.0,
+            mean_budget_usd=float(np.mean(t_budget[t])) if t_budget[t] else 0.0,
+            per_window_fast=np.array(t_fast[t], dtype=np.float64),
+            per_window_budget=np.array(t_budget[t]),
+            per_window_savings=np.array(t_save[t]),
+            per_window_slowdown=np.array(t_slow[t]),
+        )
+        for t in range(len(workloads))
+    ]
+    return MultiTenantSimResult(
+        windows=windows,
+        fleet_savings_pct=float(np.mean(fleet_save)) if fleet_save else 0.0,
+        # Restrict aggregates to THIS run's windows (the arbiter may carry
+        # history from earlier runs), with the same warmup cut as savings.
+        fleet_tco_usd=float(np.mean(
+            [h.fleet_tco_usd for h in arbiter.history[-windows:][warmup_windows:]]
+        )) if windows > warmup_windows else 0.0,
+        budget_feasible_frac=float(np.mean(
+            [h.budget_feasible for h in arbiter.history[-windows:]]
+        )),
+        tenants=tenants,
+        per_window_fleet_savings=np.array(fleet_save),
+    )
+
+
+def simulate_single_tenant_baseline(
+    workloads: List[Workload],
+    manager: TierScapeManager,
+    windows: int = 40,
+    warmup_windows: int = 2,
+    seed: int = 0,
+) -> float:
+    """Mean post-warmup TCO savings of ONE manager over the concatenated
+    region space of all workloads — the no-tenant-split reference that
+    ``simulate_multitenant`` results are compared against. Uses the same
+    per-tenant trace streams (``default_rng(seed + 17*t)``) so the two runs
+    see identical ground-truth accesses.
+    """
+    assert manager.n_regions == sum(wl.n_regions for wl in workloads)
+    rngs = [np.random.default_rng(seed + 17 * t) for t in range(len(workloads))]
+    saves = []
+    for w in range(windows):
+        counts = np.concatenate(
+            [wl.sample_window(w, rngs[t]) for t, wl in enumerate(workloads)]
+        )
+        charge_window_faults(manager, counts)
+        manager.record_access_counts(counts)
+        manager.end_window()
+        if w >= warmup_windows:
+            saves.append(manager.history[-1].savings_pct)
+    return float(np.mean(saves)) if saves else 0.0

@@ -88,3 +88,22 @@ def budget(
     mx = tco_max(n_regions, region_bytes)
     mn = tco_min(tierset, n_regions, region_bytes, measured_ratios)
     return mn + alpha * (mx - mn)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level aggregation (multi-tenant: N managers share the substrate)
+# ---------------------------------------------------------------------------
+
+
+def fleet_tco_usd(managers: Sequence) -> float:
+    """Aggregate memory TCO across tenant managers (Eq. 12 summed)."""
+    return sum(
+        tco_nt(m.tierset, m.placement, m.region_bytes, m.measured_ratios)
+        for m in managers
+    )
+
+
+def fleet_savings_pct(managers: Sequence) -> float:
+    """Fleet TCO savings vs all-DRAM, weighted by each tenant's footprint."""
+    mx = sum(tco_max(m.n_regions, m.region_bytes) for m in managers)
+    return 100.0 * (mx - fleet_tco_usd(managers)) / mx

@@ -30,6 +30,7 @@ class Request:
     rid: int
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int
+    tenant: int = 0  # owning tenant (engine serves interleaved tenant traffic)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -43,6 +44,8 @@ class EngineStats:
     decode_s: float = 0.0
     daemon_s: float = 0.0
     tco_savings_pct: float = 0.0
+    completed_by_tenant: Dict[int, int] = dataclasses.field(default_factory=dict)
+    tco_savings_by_tenant: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 class TieredEngine:
@@ -117,7 +120,7 @@ class TieredEngine:
         self._steps_in_window = 0
 
     # ----------------------------------------------------------------- API
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, tenant: int = 0) -> Request:
         # The tiered state keeps one scalar recent_len/total_len for the
         # whole batch, so slots run in lockstep: equal prompt lengths.
         # (Per-slot lengths is a straightforward extension — vectorize the
@@ -127,7 +130,7 @@ class TieredEngine:
                 s for s in self.slots if s is not None).prompt
             assert len(prompt) == len(first), "engine requires equal prompt lengths"
         req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens, tenant=tenant)
         self.queue.append(req)
         return req
 
@@ -148,6 +151,7 @@ class TieredEngine:
         for i in range(self.bs):
             if self.slots[i] is None and self.queue:
                 req = self.queue.pop(0)
+                self.cache.set_slot_tenant(i, req.tenant)
                 self._prefill(i, req)
                 self.slots[i] = req
 
@@ -231,6 +235,9 @@ class TieredEngine:
             if len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
                 self.stats.completed += 1
+                self.stats.completed_by_tenant[req.tenant] = (
+                    self.stats.completed_by_tenant.get(req.tenant, 0) + 1
+                )
                 self._release_slot(i)
         self.stats.steps += 1
         self._maybe_page_out_recent()
@@ -291,3 +298,8 @@ class TieredEngine:
         self.stats.tco_savings_pct = max(
             self.stats.tco_savings_pct, self.cache.tco_savings_pct()
         )
+        for t in {r.tenant for r in self.slots if r is not None}:
+            self.stats.tco_savings_by_tenant[t] = max(
+                self.stats.tco_savings_by_tenant.get(t, 0.0),
+                self.cache.tco_savings_pct(tenant=t),
+            )

@@ -164,6 +164,11 @@ class TieredKVCache:
         self._free_warm = list(range(warm_cap - 1, -1, -1))
         self._free_cold = list(range(cold_cap - 1, -1, -1))
         self._pool_slot = np.full(self.n_regions, -1, np.int64)
+        # Multi-tenancy: each batch slot is owned by one tenant; a page's
+        # tenant is its slot's tenant (pages are keyed by (layer, slot, page),
+        # so slot ownership is the isolation boundary).
+        self.slot_tenant = np.zeros(self.bs, np.int64)
+        self._rid_slot = (np.arange(self.n_regions) // self.max_pages) % self.bs
         self.quality_skipped_mass = 0.0  # cumulative mass of host-excluded pages
         # Compute-kernel dispatch accounting for the migration/ingestion path
         # (quant / dequant / transcode launches — the daemon-tax proxy).
@@ -178,6 +183,15 @@ class TieredKVCache:
         slot = (rid // self.max_pages) % self.bs
         page = rid % self.max_pages
         return layer, slot, page
+
+    # ---------------------------------------------------------- multi-tenant
+    def set_slot_tenant(self, slot: int, tenant: int) -> None:
+        """Tag a batch slot (and all pages it will hold) with a tenant id."""
+        self.slot_tenant[slot] = tenant
+
+    def tenant_mask(self, tenant: int) -> np.ndarray:
+        """(n_regions,) bool: regions owned by ``tenant`` via their slot."""
+        return self.slot_tenant[self._rid_slot] == tenant
 
     def _quant_page(self, kpage, vpage, bits: int):
         self.kernel_dispatches += 2
@@ -557,7 +571,43 @@ class TieredKVCache:
 
         telemetry[pool] : [L, B, MP] normalized masses; map each table entry
         back to its region id via the logical page order of the table.
+        Vectorized with the same table->rid mapping trick as ``_plan``:
+        a (layer, pool_slot) -> rid lookup array turns the per-page python
+        loop into one fancy-indexed gather + ``np.add.at`` per pool.
+        ``_fold_telemetry_loop`` is the per-page equivalence oracle.
         """
+        # Host pages are never read in-step: their skipped mass is the
+        # quality cost of the best-TCO tiers (tracked, reported).
+        self.manager.record_access_counts(self._fold_telemetry(telemetry) * 1000.0)
+
+    def _fold_telemetry(self, telemetry: Dict[str, jax.Array]) -> np.ndarray:
+        counts = np.zeros(self.n_regions)
+        st = self.state
+        for pool, placement in (("warm", WARM), ("cold", COLD)):
+            live = np.where((self.physical == placement) & self._page_exists)[0]
+            if live.size == 0:
+                continue
+            mass = np.asarray(telemetry[pool])  # [L,B,MP]
+            table = np.asarray(getattr(st, f"{pool}_table"))  # [L,B,MPT]
+            nvec = np.asarray(getattr(st, f"{pool}_n"))  # [L,B]
+            # (layer, pool_slot) -> rid. Pool slots come from one shared free
+            # list, so a slot maps to at most one live rid.
+            cap = getattr(st, f"{pool}_k").shape[1]
+            rid_of = np.full((self.la, cap), -1, np.int64)
+            rid_of[live // (self.bs * self.max_pages), self._pool_slot[live]] = live
+            m = min(mass.shape[2], table.shape[2])
+            entry = table[:, :, :m]  # [L,B,m]
+            cand = rid_of[np.arange(self.la)[:, None, None], entry]
+            valid = np.arange(m)[None, None, :] < nvec[..., None]
+            valid &= cand >= 0
+            # The rid must belong to this (layer, slot) row (stale table
+            # entries past n are already masked; this guards slot identity).
+            valid &= ((cand // self.max_pages) % self.bs) == np.arange(self.bs)[None, :, None]
+            np.add.at(counts, cand[valid], mass[:, :, :m][valid])
+        return counts
+
+    def _fold_telemetry_loop(self, telemetry: Dict[str, jax.Array]) -> np.ndarray:
+        """Per-page reference semantics for ``_fold_telemetry`` (oracle)."""
         counts = np.zeros(self.n_regions)
         st = self.state
         for pool, placement in (("warm", WARM), ("cold", COLD)):
@@ -576,9 +626,7 @@ class TieredKVCache:
                         rid = slot_to_rid.get((layer, slot, int(table[layer, slot, j])))
                         if rid is not None:
                             counts[rid] += mass[layer, slot, j]
-        # Host pages are never read in-step: their skipped mass is the
-        # quality cost of the best-TCO tiers (tracked, reported).
-        self.manager.record_access_counts(counts * 1000.0)  # scale to count-like
+        return counts
 
     # --------------------------------------------------------- window logic
     def end_window(self):
@@ -610,9 +658,12 @@ class TieredKVCache:
             tot += a.size * a.dtype.itemsize
         return tot
 
-    def tco_usd(self) -> float:
-        """Memory TCO of *existing* pages under the current placement."""
+    def tco_usd(self, tenant: Optional[int] = None) -> float:
+        """Memory TCO of *existing* pages under the current placement,
+        optionally restricted to one tenant's pages."""
         exists = self._page_exists
+        if tenant is not None:
+            exists = exists & self.tenant_mask(tenant)
         if not exists.any():
             return 0.0
         costs = tco.usd_per_region(
@@ -620,11 +671,13 @@ class TieredKVCache:
         )
         return float(costs[self.manager.placement[exists]].sum())
 
-    def tco_savings_pct(self) -> float:
+    def tco_savings_pct(self, tenant: Optional[int] = None) -> float:
         """Savings vs holding every existing page uncompressed in HBM."""
         exists = self._page_exists
+        if tenant is not None:
+            exists = exists & self.tenant_mask(tenant)
         n = int(exists.sum())
         if n == 0:
             return 0.0
         mx = tco.tco_max(n, self.manager.region_bytes)
-        return 100.0 * (mx - self.tco_usd()) / mx
+        return 100.0 * (mx - self.tco_usd(tenant)) / mx
