@@ -1,0 +1,74 @@
+"""CI perf-guard: media-pipeline overlap metrics vs the committed baseline.
+
+Usage: ``python benchmarks/check_media_baseline.py CURRENT.json BASELINE.json``
+
+Fails (exit 1) when:
+  * async final placements are not bit-identical to the serial oracle
+    (correctness, exact — no tolerance),
+  * no decode step was retired during an in-flight migration cohort
+    (the overlap headline regressed to zero),
+  * no bytes transited the host swap device (the staging ring fell out of
+    the data path),
+  * overlap efficiency fell more than 0.25 below the committed baseline
+    (a band, because hotness-driven plan sizes may drift a little across
+    platforms/jax versions; structural regressions blow well through it).
+
+Refresh the baseline with ``media_pipeline.py --json`` and commit.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+EFFICIENCY_BAND = 0.25
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    errors = []
+    cur = current.get("overlap")
+    base = baseline.get("overlap")
+    if cur is None or base is None:
+        return ["missing 'overlap' section in current or baseline results"]
+    if not cur.get("placements_identical", False):
+        errors.append("async placements diverged from the serial oracle")
+    if cur.get("overlapped_steps", 0) < 1:
+        errors.append("no decode steps retired during migration (overlap=0)")
+    if cur.get("host_bytes", 0) <= 0:
+        errors.append("no bytes transited the host swap device")
+    floor = base["overlap_efficiency"] - EFFICIENCY_BAND
+    if cur.get("overlap_efficiency", 0.0) < floor:
+        errors.append(
+            f"overlap efficiency regressed: {cur.get('overlap_efficiency'):.2f} "
+            f"< baseline {base['overlap_efficiency']:.2f} - {EFFICIENCY_BAND}"
+        )
+    return errors
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        current = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+    errors = check(current, baseline)
+    if errors:
+        print("media-pipeline regression vs baseline:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    cur, base = current["overlap"], baseline["overlap"]
+    print(
+        f"overlap: steps={cur['overlapped_steps']} "
+        f"efficiency={cur['overlap_efficiency']:.2f} "
+        f"(baseline {base['overlap_efficiency']:.2f}) "
+        f"identical={cur['placements_identical']} "
+        f"host_bytes={cur['host_bytes']} — OK"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

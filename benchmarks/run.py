@@ -8,6 +8,7 @@
   fig13      daemon tax
   serving    tiered-KV engine vs dense decode on a real model
   migration  batched cohort executor vs per-page loop (dispatches + time)
+  media      async media pipeline: decode/migration overlap + device charges
   multitenant  N tenants sharing pools under the BudgetArbiter (6T vs 2T)
   roofline   per-(arch x shape x mesh) dry-run roofline summary
 """
@@ -23,6 +24,7 @@ from benchmarks import (
     fig9_placement,
     fig12_tail_latency,
     fig13_daemon_tax,
+    media_pipeline,
     migration_batch,
     multitenant,
     roofline_report,
@@ -37,6 +39,7 @@ TABLES = {
     "fig13": fig13_daemon_tax.run,
     "serving": serving_tiered.run,
     "migration": migration_batch.run,
+    "media": media_pipeline.run,
     "multitenant": multitenant.run,
     "roofline": roofline_report.run,
 }

@@ -33,6 +33,12 @@ def main() -> None:
     ap.add_argument("--policy", default="analytical",
                     choices=["analytical", "waterfall"])
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--async-migration", action="store_true",
+                    help="overlap migration cohorts with decode steps via "
+                         "the backing-media pipeline (non-blocking window "
+                         "boundaries)")
+    ap.add_argument("--vary-prompts", action="store_true",
+                    help="submit unequal prompt lengths (per-slot decode)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -44,13 +50,18 @@ def main() -> None:
         max_seq_len=args.prompt_len + args.new_tokens + 32,
         recent_window=16,
         ts=TierScapeRunConfig(enabled=True, policy=args.policy,
-                              alpha=args.alpha, window_steps=8),
+                              alpha=args.alpha, window_steps=8,
+                              async_migration=args.async_migration),
     )
 
     rng = np.random.default_rng(0)
-    reqs = [eng.submit(rng.integers(1, cfg.vocab_size, args.prompt_len),
-                       max_new_tokens=args.new_tokens)
-            for _ in range(args.requests)]
+    reqs = []
+    for i in range(args.requests):
+        plen = args.prompt_len
+        if args.vary_prompts:  # per-slot lengths: each request its own size
+            plen = max(args.prompt_len - 8 * (i % args.slots), 8)
+        reqs.append(eng.submit(rng.integers(1, cfg.vocab_size, plen),
+                               max_new_tokens=args.new_tokens))
 
     t0 = time.time()
     stats = eng.run(max_steps=args.requests * args.new_tokens * 2)
@@ -60,7 +71,11 @@ def main() -> None:
     print(f"completed {stats.completed}/{args.requests} requests in "
           f"{stats.steps} engine steps ({wall:.1f}s wall)")
     print(f"windows={stats.windows} migrations={stats.migrations} "
-          f"daemon_s={stats.daemon_s:.2f}")
+          f"daemon_s={stats.daemon_s:.2f} overlapped_steps={stats.overlapped_steps}")
+    busy = {d: round(s * 1e6, 2)
+            for d, s in eng.cache.pipeline.media_busy_s().items() if s > 0}
+    if busy:
+        print(f"media busy (us, executed): {busy}")
     pl = eng.cache.manager.placement[eng.cache._page_exists]
     hist = np.bincount(pl, minlength=5)
     names = {0: "dram", WARM: "warm-int8-hbm", COLD: "cold-int4-hbm",

@@ -187,3 +187,9 @@ class TierScapeRunConfig:
     # Device-resident tier pair used inside the jitted serve step.
     warm_tier: str = "C1"
     cold_tier: str = "C9"
+    # Backing-media subsystem: route window migration plans through the
+    # async double-buffered pipeline (non-blocking window boundaries) and
+    # size its pinned staging ring. Off = blocking migrate_batch (the
+    # equivalence oracle).
+    async_migration: bool = False
+    media_ring_slots: int = 64

@@ -88,6 +88,10 @@ class ArbiterWindowStats:
     fleet_savings_pct: float
     budget_feasible: bool  # False when SLA floors force spend above budget
     tenants: List[TenantWindowStats]
+    # Shared-bandwidth reconcile: fleet migration bytes billed per device
+    # and moves deferred because a device's window budget was exhausted.
+    media_bytes_by_device: Dict[str, float] = dataclasses.field(default_factory=dict)
+    deferred_migrations: int = 0
 
 
 class BudgetArbiter:
@@ -99,7 +103,13 @@ class BudgetArbiter:
         managers: Sequence[TierScapeManager],
         alpha: float = 0.5,
         tier_capacity_regions: Optional[np.ndarray] = None,
+        media_bw_budget_bytes: Optional[Dict[str, float]] = None,
     ):
+        """``media_bw_budget_bytes`` caps, per backing-media device, the
+        migration bytes the whole fleet may move in one window (bandwidth is
+        a shared resource exactly like tier capacity). Moves exceeding a
+        device's budget are deferred — the placement keeps its old value and
+        the policy retries next window — coldest weighted pages first."""
         if len(specs) != len(managers):
             raise ValueError("one manager per tenant spec")
         if len({s.name for s in specs}) != len(specs):
@@ -120,6 +130,7 @@ class BudgetArbiter:
             if cap.sum() < sum(m.n_regions for m in managers):
                 raise ValueError("pool capacities cannot hold the fleet's regions")
         self.capacity_regions = cap
+        self.media_bw_budget_bytes = dict(media_bw_budget_bytes or {})
         self.ledger = TenantLedger([s.name for s in specs], cap)
         self.history: List[ArbiterWindowStats] = []
         self._window = 0
@@ -148,7 +159,9 @@ class BudgetArbiter:
             tco.usd_per_region(m.tierset, m.region_bytes, m.measured_ratios)
             for m in self.managers
         ]
-        lats = [m._lat_region for m in self.managers]
+        # Contended latencies: devices saturated in previous windows make
+        # their tiers look slower to every tenant's waterfill.
+        lats = [m.contended_latencies_s() for m in self.managers]
         floors = [self.sla_floor_usd(t) for t in range(len(self.specs))]
         global_budget = self.global_budget_usd()
 
@@ -165,12 +178,18 @@ class BudgetArbiter:
                 )
             else:
                 news.append(m.plan_placement(hots[t]))
+        news, deferred = self._reconcile_bandwidth(news, avg_hots)
         news = self._reconcile_capacity(news, avg_hots, costs, floors)
 
         plans: Dict[str, MigrationPlan] = {}
         tenant_stats: List[TenantWindowStats] = []
+        media_bytes: Dict[str, float] = {}
         for t, (m, s) in enumerate(zip(self.managers, self.specs)):
             plans[s.name] = m.commit_placement(news[t])
+            # Fleet media traffic as COMMITTED (capacity-pass moves included,
+            # deferred moves excluded) — agrees with the tenants' WindowStats.
+            for dev, b in plans[s.name].media_bytes_by_device.items():
+                media_bytes[dev] = media_bytes.get(dev, 0.0) + b
             self.ledger.set_usage(
                 s.name, np.bincount(news[t], minlength=self.n_options)
             )
@@ -199,6 +218,8 @@ class BudgetArbiter:
                 fleet_savings_pct=tco.fleet_savings_pct(self.managers),
                 budget_feasible=sum(budgets) <= global_budget * (1 + 1e-9),
                 tenants=tenant_stats,
+                media_bytes_by_device=media_bytes,
+                deferred_migrations=deferred,
             )
         )
         self._window += 1
@@ -292,6 +313,94 @@ class BudgetArbiter:
             w = np.array([s.sla_weight for s in self.specs])
             budgets = budgets + slack * w / w.sum()
         return [float(b) for b in budgets]
+
+    # --------------------------------------------------- bandwidth reconcile
+    def _reconcile_bandwidth(
+        self, news: List[np.ndarray], avg_hots: Sequence[np.ndarray]
+    ):
+        """Enforce per-device migration-bandwidth budgets fleet-wide.
+
+        Every planned move bills a read to its source device and a write to
+        its destination device (the manager's media cost model). When a
+        device's billed bytes exceed its per-window budget, the cheapest
+        marginal moves touching that device — smallest ``sla_weight *
+        hotness`` fleet-wide, ties by region index — are *deferred*: the
+        region keeps its current placement and the policy re-plans it next
+        window. Bandwidth behaves exactly like tier capacity: a shared
+        physical resource the arbiter rations, which is what keeps one
+        tenant's migration storm from stealing the PCIe link out from under
+        another tenant's swap-ins (the MaxMem contention failure).
+
+        Runs before the capacity reconcile (deferring a move can leave a
+        tier overfull, which capacity then resolves); capacity-pass moves
+        are therefore not bandwidth-capped — a documented one-pass
+        approximation. The committed per-device traffic reported in
+        ``ArbiterWindowStats`` is aggregated from the tenants' committed
+        plans, so it includes those moves.
+
+        Returns (news, total deferred moves).
+        """
+        if not self.media_bw_budget_bytes:
+            return news, 0
+
+        # Flatten every tenant's moves with their per-device byte bills.
+        move_t: List[np.ndarray] = []
+        move_r: List[np.ndarray] = []
+        move_key: List[np.ndarray] = []
+        move_read_dev: List[np.ndarray] = []
+        move_write_dev: List[np.ndarray] = []
+        move_read_b: List[np.ndarray] = []
+        move_write_b: List[np.ndarray] = []
+        for t, m in enumerate(self.managers):
+            moved = np.where(news[t] != m.placement)[0]
+            if moved.size == 0:
+                continue
+            src = m.placement[moved]
+            dst = news[t][moved]
+            move_t.append(np.full(moved.size, t, np.int64))
+            move_r.append(moved)
+            hot = np.asarray(avg_hots[t], dtype=np.float64)[moved]
+            move_key.append(self.specs[t].sla_weight * hot)
+            names = np.array(m._dev_names)
+            move_read_dev.append(names[src])
+            move_write_dev.append(names[dst])
+            move_read_b.append(m._stored_bytes[src].astype(np.float64))
+            move_write_b.append(m._stored_bytes[dst].astype(np.float64))
+        if not move_t:
+            return news, 0
+
+        tenants = np.concatenate(move_t)
+        regions = np.concatenate(move_r)
+        keys = np.concatenate(move_key)
+        rdev = np.concatenate(move_read_dev)
+        wdev = np.concatenate(move_write_dev)
+        rb = np.concatenate(move_read_b)
+        wb = np.concatenate(move_write_b)
+
+        spend: Dict[str, float] = {}
+        for i in range(tenants.size):
+            spend[rdev[i]] = spend.get(rdev[i], 0.0) + rb[i]
+            spend[wdev[i]] = spend.get(wdev[i], 0.0) + wb[i]
+        alive = np.ones(tenants.size, bool)
+        order = np.lexsort((regions, tenants, keys))  # coldest weighted first
+        for dev, budget in self.media_bw_budget_bytes.items():
+            if spend.get(dev, 0.0) <= budget:
+                continue
+            for i in order:
+                if not alive[i]:
+                    continue
+                if rdev[i] != dev and wdev[i] != dev:
+                    continue
+                # Defer: undo both of the move's device bills.
+                spend[rdev[i]] -= rb[i]
+                spend[wdev[i]] -= wb[i]
+                alive[i] = False
+                news[int(tenants[i])][int(regions[i])] = self.managers[
+                    int(tenants[i])
+                ].placement[int(regions[i])]
+                if spend.get(dev, 0.0) <= budget:
+                    break
+        return news, int((~alive).sum())
 
     # ---------------------------------------------------- capacity reconcile
     def _reconcile_capacity(

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -51,6 +51,11 @@ class MigrationPlan:
     # Distinct (src, dst) pairs: a batched executor needs O(n_cohorts)
     # kernel dispatches for this plan, not O(M).
     n_cohorts: int = 0
+    # Per-backing-device bandwidth charges of this plan: reads are billed to
+    # each region's source device, writes to its destination device, with
+    # the device's fixed per-op setup cost once per region.
+    media_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
+    media_s_by_device: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -66,6 +71,9 @@ class WindowStats:
     daemon_s: float  # model eval + plan construction wall time
     modeled_migration_s: float
     migration_cohorts: int = 0  # distinct (src, dst) pairs = kernel dispatches
+    # Window TCO report: migration traffic billed per backing-media device.
+    media_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
+    media_s_by_device: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class TierScapeManager:
@@ -121,6 +129,16 @@ class TierScapeManager:
             [-1] + [codec_names.index(t.codec_name) for t in tierset.tiers],
             dtype=np.int64,
         )
+        # Backing-media devices per placement index (media subsystem): the
+        # plan bills migration reads/writes to these, and live contention
+        # pressure fed back via ``note_media_charges`` inflates the
+        # planning latencies so placement prices bandwidth contention.
+        self._devices = tierset.media_devices()
+        self._dev_names = [d.name for d in self._devices]
+        self._dev_read_bw = np.array([d.read_bw for d in self._devices])
+        self._dev_write_bw = np.array([d.write_bw for d in self._devices])
+        self._dev_fixed_s = np.array([d.fixed_latency_s for d in self._devices])
+        self.media_pressure: Dict[str, float] = {}
         self._window = 0
         self._fault_counts = np.zeros(n_regions, dtype=np.int64)
         self._fault_overhead_s = 0.0
@@ -171,6 +189,38 @@ class TierScapeManager:
         """Feed back actually-achieved compressibility for tier (1-based)."""
         i = tier_index - 1
         self.measured_ratios[i] = (1 - ema) * self.measured_ratios[i] + ema * ratio
+
+    # --------------------------------------------------------------- media
+    def note_media_charges(
+        self, busy_s_by_device: Dict[str, float], window_s: float, ema: float = 0.5
+    ) -> None:
+        """Feed back executed per-device busy time for one window.
+
+        Utilization (busy / window, clipped to 1) is EMA-folded into
+        ``media_pressure``; the analytical policy prices it through
+        ``contended_latencies_s`` so a saturated swap device makes its tiers
+        look slower and placement routes around the contention.
+        """
+        for name, busy_s in busy_s_by_device.items():
+            rho = min(max(busy_s, 0.0) / max(window_s, 1e-30), 1.0)
+            self.media_pressure[name] = (
+                (1 - ema) * self.media_pressure.get(name, 0.0) + ema * rho
+            )
+
+    def contended_latencies_s(self) -> np.ndarray:
+        """Per-placement-index planning latency with queueing inflation.
+
+        M/M/1-style: a device at utilization rho serves a newcomer
+        ~1/(1-rho) slower. With no recorded pressure this is exactly
+        ``_lat_region`` (planning behavior unchanged until charges arrive).
+        """
+        if not self.media_pressure:
+            return self._lat_region
+        lat = self._lat_region.copy()
+        for i, name in enumerate(self._dev_names):
+            rho = min(self.media_pressure.get(name, 0.0), 0.95)
+            lat[i] *= 1.0 + rho / (1.0 - rho)
+        return lat
 
     # -------------------------------------------------------------- window
     # The window boundary is split into three phases so a multi-tenant
@@ -229,7 +279,9 @@ class TierScapeManager:
                     self.cfg.alpha,
                     self.measured_ratios,
                 )
-            sol = analytical.solve_greedy(avg_hot, option_costs, self._lat_region, budget)
+            sol = analytical.solve_greedy(
+                avg_hot, option_costs, self.contended_latencies_s(), budget
+            )
             new = sol.placement
         else:
             raise ValueError(f"unknown policy {self.cfg.policy!r}")
@@ -262,6 +314,8 @@ class TierScapeManager:
                 daemon_s=daemon_s,
                 modeled_migration_s=plan.modeled_migration_s,
                 migration_cohorts=plan.n_cohorts,
+                media_bytes_by_device=plan.media_bytes_by_device,
+                media_s_by_device=plan.media_s_by_device,
             )
         )
         self._window += 1
@@ -293,7 +347,39 @@ class TierScapeManager:
         total_s = float(np.where(same_codec, copy_s, code_s).sum())
         total_bytes = int((read_b + write_b).sum())
         n_cohorts = int(np.unique(src * (self.tierset.n_tiers + 1) + dst).size)
-        return MigrationPlan(regions, src, dst, total_bytes, total_s, n_cohorts)
+        media_bytes, media_s = self._media_charges(src, dst, read_b, write_b)
+        return MigrationPlan(
+            regions, src, dst, total_bytes, total_s, n_cohorts,
+            media_bytes_by_device=media_bytes, media_s_by_device=media_s,
+        )
+
+    def _media_charges(
+        self, src: np.ndarray, dst: np.ndarray, read_b: np.ndarray, write_b: np.ndarray
+    ):
+        """Bill a migration batch to its backing devices: each region pays a
+        read op on its source device and a write op on its destination
+        device (fixed setup + bytes/bandwidth). Indexes sharing a physical
+        device (e.g. both host tiers behind one PCIe link) aggregate — that
+        aggregation is the shared-bandwidth contention the arbiter sees."""
+        media_bytes: Dict[str, int] = {}
+        media_s: Dict[str, float] = {}
+        for idx in range(len(self._devices)):
+            name = self._dev_names[idx]
+            r_mask = src == idx
+            w_mask = dst == idx
+            n_ops = int(r_mask.sum()) + int(w_mask.sum())
+            if n_ops == 0:
+                continue
+            rb = int(read_b[r_mask].sum())
+            wb = int(write_b[w_mask].sum())
+            t = (
+                n_ops * float(self._dev_fixed_s[idx])
+                + rb / float(self._dev_read_bw[idx])
+                + wb / float(self._dev_write_bw[idx])
+            )
+            media_bytes[name] = media_bytes.get(name, 0) + rb + wb
+            media_s[name] = media_s.get(name, 0.0) + t
+        return media_bytes, media_s
 
     def _plan_loop(self, regions: np.ndarray, src: np.ndarray, dst: np.ndarray) -> MigrationPlan:
         """Per-page reference pricing (the pre-batching executor semantics).

@@ -26,12 +26,15 @@ time — matching the paper's "perf w.r.t. all-DRAM" axis in Fig. 8.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core import hw
 from repro.core.manager import TierScapeManager
+
+if TYPE_CHECKING:  # runtime import is deferred: repro.media imports
+    from repro.media.devices import MediaQueue  # repro.core back (hw)
 
 # Service time for an access that hits uncompressed HBM/DRAM (block-granular
 # engine access, not a single cache line).
@@ -177,6 +180,11 @@ class SimResult:
     daemon_tax_pct: float  # daemon time / total runtime
     mean_migrations_per_window: float
     mean_cohorts_per_window: float  # batched executor: dispatches per window
+    # Backing-media replay: migration traffic queued through each device's
+    # bandwidth/queue-depth model over the whole run.
+    media_bytes_by_device: Dict[str, int]
+    media_busy_s_by_device: Dict[str, float]
+    media_queue_wait_s: float  # time plans spent waiting on busy channels
     per_window_savings: np.ndarray
     per_window_slowdown: np.ndarray
     placement_hists: np.ndarray  # (W, N+1)
@@ -206,16 +214,44 @@ def charge_window_faults(
     return float(fault_lat_s.sum()), fault_hist, n_blocks
 
 
+def replay_plan_media(
+    manager: TierScapeManager,
+    queues: Dict[str, MediaQueue],
+    now_s: float,
+    price_contention: bool = False,
+    window_s: float = 1.0,
+) -> None:
+    """Replay the last window's migration plan through the media queues.
+
+    Each device's share of the plan (bytes billed by ``manager._plan``) is
+    submitted at the window's virtual timestamp, so queue-depth contention
+    across windows (and across tenants sharing ``queues``) accumulates in
+    ``busy_s``/``queue_wait_s`` deterministically. ``price_contention``
+    additionally feeds the executed busy time back into the manager so the
+    next window's placement prices the contention.
+    """
+    ws = manager.history[-1]
+    for name, n_bytes in ws.media_bytes_by_device.items():
+        queues[name].submit(n_bytes, now=now_s, ops=max(ws.migration_cohorts, 1))
+    if price_contention:
+        manager.note_media_charges(ws.media_s_by_device, window_s)
+
+
 def simulate(
     workload: Workload,
     manager: TierScapeManager,
     windows: int = 40,
     warmup_windows: int = 2,
     seed: int = 0,
+    price_media_contention: bool = False,
 ) -> SimResult:
+    from repro.media.devices import make_queues
+
     rng = np.random.default_rng(seed)
     n = workload.n_regions
     assert manager.n_regions == n
+    # Backing-media replay: one queue per distinct device in the tierset.
+    media_queues = make_queues(d.name for d in manager.tierset.media_devices())
 
     slowdowns, savings = [], []
     placement_hists, fault_hists = [], []
@@ -240,6 +276,10 @@ def simulate(
         manager.end_window()
 
         base_s = workload.compute_s_per_window + counts.sum() * DRAM_ACCESS_US * 1e-6
+        replay_plan_media(
+            manager, media_queues, now_s=w * base_s,
+            price_contention=price_media_contention, window_s=base_s,
+        )
         if w >= warmup_windows:
             slowdowns.append(100.0 * fault_overhead_s / base_s)
             savings.append(manager.history[-1].savings_pct)
@@ -269,6 +309,15 @@ def simulate(
         ),
         mean_cohorts_per_window=float(
             np.mean([h.migration_cohorts for h in manager.history])
+        ),
+        media_bytes_by_device={
+            n_: q.bytes_total for n_, q in media_queues.items() if q.ops
+        },
+        media_busy_s_by_device={
+            n_: q.busy_s for n_, q in media_queues.items() if q.ops
+        },
+        media_queue_wait_s=float(
+            sum(q.queue_wait_s for q in media_queues.values())
         ),
         per_window_savings=np.array(savings),
         per_window_slowdown=np.array(slowdowns),
@@ -307,6 +356,11 @@ class MultiTenantSimResult:
     budget_feasible_frac: float  # this run's windows where floors fit the budget
     tenants: List["TenantSimStats"]
     per_window_fleet_savings: np.ndarray
+    # Shared backing-media replay: all tenants' migration traffic queued
+    # through ONE set of device queues (the contention the arbiter prices).
+    media_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
+    media_busy_s_by_device: Dict[str, float] = dataclasses.field(default_factory=dict)
+    media_queue_wait_s: float = 0.0
 
 
 def simulate_multitenant(
@@ -323,11 +377,18 @@ def simulate_multitenant(
     window at once — waterfilling budgets, reconciling shared-pool capacity
     and committing every placement.
     """
+    from repro.media.devices import make_queues
+
     specs, managers = arbiter.specs, arbiter.managers
     assert len(workloads) == len(managers)
     for wl, m in zip(workloads, managers):
         assert m.n_regions == wl.n_regions
     rngs = [np.random.default_rng(seed + 17 * t) for t in range(len(workloads))]
+    # One shared queue set: tenants contend for the same physical devices
+    # (union across tiersets — tenants may bind tiers to different devices).
+    media_queues = make_queues(
+        d.name for m in managers for d in m.tierset.media_devices()
+    )
 
     t_slow: List[List[float]] = [[] for _ in workloads]
     t_save: List[List[float]] = [[] for _ in workloads]
@@ -344,6 +405,8 @@ def simulate_multitenant(
             base_s = wl.compute_s_per_window + counts.sum() * DRAM_ACCESS_US * 1e-6
             overheads.append(100.0 * fault_overhead_s / base_s)
         arbiter.end_window()
+        for m in managers:
+            replay_plan_media(m, media_queues, now_s=float(w))
         ws = arbiter.history[-1]
         if w >= warmup_windows:
             fleet_save.append(ws.fleet_savings_pct)
@@ -381,6 +444,13 @@ def simulate_multitenant(
         )),
         tenants=tenants,
         per_window_fleet_savings=np.array(fleet_save),
+        media_bytes_by_device={
+            n_: q.bytes_total for n_, q in media_queues.items() if q.ops
+        },
+        media_busy_s_by_device={
+            n_: q.busy_s for n_, q in media_queues.items() if q.ops
+        },
+        media_queue_wait_s=float(sum(q.queue_wait_s for q in media_queues.values())),
     )
 
 

@@ -39,10 +39,23 @@ class TierSpec:
     pool: str  # "slab" | "packed"
     codec_name: str  # key into CODECS
     media: str  # "hbm" | "host"
+    # Backing-media device binding (key into repro.media.devices.DEVICES).
+    # Empty = the default device for this media class (hbm -> on-chip HBM,
+    # host -> host DRAM behind PCIe); override to rebind a tier onto CXL or
+    # NVMe swap devices without changing its codec/pool identity.
+    media_device: str = ""
 
     @property
     def codec(self) -> Codec:
         return CODECS[self.codec_name]
+
+    @property
+    def device(self):
+        """Resolved MediaDevice this tier's payloads live on."""
+        from repro.media import devices as media_devices
+
+        name = self.media_device or media_devices.DEFAULT_FOR_MEDIA[self.media]
+        return media_devices.get(name)
 
     # -- size accounting ----------------------------------------------------
     def stored_bytes(self, n_elem: int, src_bytes_per_elem: int = 2) -> int:
@@ -179,6 +192,12 @@ class TierSet:
 
     def ratios(self):
         return [1.0] + [t.effective_ratio(self.block_elems, self.src_bytes_per_elem) for t in self.tiers]
+
+    def media_devices(self):
+        """MediaDevice per placement index (index 0 = uncompressed on-chip)."""
+        from repro.media import devices as media_devices
+
+        return [media_devices.get("hbm")] + [t.device for t in self.tiers]
 
 
 def default_tierset(block_elems: int = 2048) -> TierSet:

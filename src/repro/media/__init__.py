@@ -1,0 +1,25 @@
+"""Backing-media subsystem: software-defined swap devices.
+
+The paper defines a tier by (codec x pool x media); this package makes the
+third axis a first-class object instead of a latency constant:
+
+  * ``devices``  — the ``MediaDevice`` catalog (HBM, host-DRAM-over-PCIe,
+    CXL, NVMe) with a bandwidth / queue-depth / fixed-latency cost model and
+    a deterministic virtual-time ``MediaQueue`` for contention accounting,
+  * ``ringbuf``  — the pinned staging ring buffer (numpy shared-memory
+    layout, watermark-based credit flow) through which all host-tier
+    payloads transit,
+  * ``pipeline`` — the async, double-buffered migration pipeline that splits
+    migration cohorts into stage -> transcode -> commit phases and overlaps
+    them with engine decode steps.
+"""
+
+from repro.media.devices import (  # noqa: F401
+    DEFAULT_FOR_MEDIA,
+    DEVICES,
+    MediaDevice,
+    MediaQueue,
+    get,
+)
+from repro.media.pipeline import MigrationPipeline  # noqa: F401
+from repro.media.ringbuf import PinnedRing  # noqa: F401

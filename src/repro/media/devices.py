@@ -1,0 +1,136 @@
+"""Backing-media device catalog + deterministic queue/bandwidth model.
+
+A ``MediaDevice`` is the third axis of a software-defined tier (codec x
+pool x media): the physical thing a compressed payload is read from and
+written to. The cost model is the standard DMA-engine abstraction:
+
+  service_time(bytes) = fixed_latency + bytes / bandwidth
+
+with ``queue_depth`` concurrent channels — a transfer submitted while every
+channel is busy queues behind the earliest-finishing one. ``MediaQueue``
+evaluates that model in *virtual time* (callers supply ``now``; nothing here
+reads a clock), so contention accounting is bit-deterministic across runs —
+the property the equivalence and determinism tests lean on.
+
+Presets mirror the platforms the paper's tiers (and the CXL follow-on work)
+are built from; HBM/host numbers come from ``core/hw.py`` so the device
+model and the per-tier latency model (Eq. 8) agree by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class MediaDevice:
+    """One backing-media device class and its transfer cost model."""
+
+    name: str
+    read_bw: float  # sustained B/s
+    write_bw: float  # sustained B/s
+    fixed_latency_s: float  # per-op setup (DMA descriptor / doorbell / link RTT)
+    queue_depth: int  # concurrent in-flight transfers the device sustains
+
+    def __post_init__(self):
+        if self.read_bw <= 0 or self.write_bw <= 0:
+            raise ValueError("bandwidth must be positive")
+        if self.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+
+    def service_time_s(self, n_bytes: int, write: bool = False) -> float:
+        """Uncontended transfer time for one op of ``n_bytes``."""
+        bw = self.write_bw if write else self.read_bw
+        return self.fixed_latency_s + n_bytes / bw
+
+
+# ---------------------------------------------------------------------------
+# Catalog. HBM and host-DRAM-over-PCIe reuse the hw.py constants so the
+# TierSpec latency model and the device model price the same hardware the
+# same way; CXL and NVMe are published-part-class numbers for the swap
+# devices the composable-memory work targets.
+# ---------------------------------------------------------------------------
+
+DEVICES: Dict[str, MediaDevice] = {
+    d.name: d
+    for d in (
+        MediaDevice("hbm", hw.V5E.hbm_bw, hw.V5E.hbm_bw, 0.0, queue_depth=8),
+        MediaDevice(
+            "host_dram_pcie",
+            hw.V5E.host_link_bw,
+            hw.V5E.host_link_bw,
+            hw.MEDIA_FIXED_US["host"] * 1e-6,
+            queue_depth=4,
+        ),
+        # CXL 2.0 x8-class memory expander: near-PCIe bandwidth, lower setup
+        # cost (load/store semantics, no DMA descriptor round-trip).
+        MediaDevice("cxl", 64e9, 48e9, 0.6e-6, queue_depth=8),
+        # Datacenter NVMe (Gen4 x4 class): the deepest, cheapest swap device;
+        # long setup, deep queues.
+        MediaDevice("nvme", 7e9, 5e9, 10e-6, queue_depth=32),
+    )
+}
+
+# Media string (TierSpec.media) -> default device binding.
+DEFAULT_FOR_MEDIA: Dict[str, str] = {"hbm": "hbm", "host": "host_dram_pcie"}
+
+
+def get(name: str) -> MediaDevice:
+    try:
+        return DEVICES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown media device {name!r}; catalog: {sorted(DEVICES)}"
+        ) from None
+
+
+class MediaQueue:
+    """Virtual-time transfer queue for one device.
+
+    ``submit`` places a transfer on the earliest-free of ``queue_depth``
+    channels and returns ``(start_s, done_s)``; cumulative ``busy_s`` /
+    ``bytes_total`` / ``queue_wait_s`` are the per-device bandwidth charges
+    the TCO report and the arbiter consume. Purely arithmetic — identical
+    submissions produce identical accounting.
+    """
+
+    def __init__(self, device: MediaDevice):
+        self.device = device
+        self._channels: List[float] = [0.0] * device.queue_depth
+        self.busy_s = 0.0
+        self.queue_wait_s = 0.0
+        self.bytes_total = 0
+        self.ops = 0
+
+    def submit(
+        self, n_bytes: int, now: float = 0.0, write: bool = False, ops: int = 1
+    ) -> Tuple[float, float]:
+        """Charge one aggregate transfer of ``n_bytes`` spanning ``ops``
+        device operations (each op pays the fixed setup cost)."""
+        svc = (
+            ops * self.device.fixed_latency_s
+            + n_bytes / (self.device.write_bw if write else self.device.read_bw)
+        )
+        ch = min(range(len(self._channels)), key=lambda i: self._channels[i])
+        start = max(now, self._channels[ch])
+        done = start + svc
+        self._channels[ch] = done
+        self.busy_s += svc
+        self.queue_wait_s += start - now
+        self.bytes_total += int(n_bytes)
+        self.ops += ops
+        return start, done
+
+    def utilization(self, elapsed_s: float) -> float:
+        """Fraction of one channel's time spent transferring (can exceed 1
+        on multi-channel devices under heavy load; callers clip)."""
+        return self.busy_s / max(elapsed_s, 1e-30)
+
+
+def make_queues(names) -> Dict[str, MediaQueue]:
+    """One MediaQueue per distinct device name (shared across callers of one
+    substrate — that sharing IS the contention being modeled)."""
+    return {n: MediaQueue(get(n)) for n in dict.fromkeys(names)}

@@ -1,0 +1,256 @@
+"""Async, double-buffered migration pipeline over a phase-split executor.
+
+``migrate_batch`` executes a window's migration plan as (src, dst) cohorts;
+this pipeline splits each cohort into three phases and spreads them across
+engine decode steps instead of blocking the window boundary:
+
+  stage     — gather the cohort's payloads out of the source tier (device
+              pool rows or host-tier dict), retire them from the source page
+              tables, and pin them in the staging ring buffer (host-media
+              cohorts) or a device staging hold (HBM-to-HBM cohorts). Charges
+              the source device's read bandwidth.
+  transcode — run the fused transcode kernel over the staged batch (skipped
+              on the same-codec fast path).
+  commit    — scatter into the destination tier, update placement, release
+              ring credits. Charges the destination device's write bandwidth.
+
+One ``tick()`` — called by the engine after every decode step — advances the
+oldest incomplete cohort by one phase and, double-buffer style, stages the
+next cohort while the head is mid-flight, so at most two cohorts hold
+staging resources and a cohort commits every other tick in steady state.
+Ring-credit shortage stalls the stage phase (counted, never dropped).
+
+The executor contract (implemented by ``serving.kv_cache.TieredKVCache``):
+
+  stage_cohort(rids, src) -> {k_pay, k_sc, v_pay, v_sc} numpy arrays
+  transcode_cohort(payload, src, dst) -> payload
+  commit_cohort(rids, payload, src, dst) -> per-rid landed levels
+  page_stored_bytes(level) -> int        # media bytes of one page at level
+  device_of(level) -> str                # media-device name for a level
+  on_pipeline_drained() -> None          # reconcile hook after a full drain
+
+A page is unreadable between stage and commit (it has left the source tier
+and not yet entered the destination): decode steps skip it exactly the way
+host-tier pages are always skipped in-step. That brief access-skip is the
+migration's quality cost; the serial oracle pays it as a blocked boundary
+instead.
+
+``serial=True`` is the equivalence oracle: ``submit`` runs every phase to
+completion inline (the blocking window-boundary semantics), through the very
+same phase callbacks — final placements must be bit-identical to the async
+schedule, which the media tests assert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.media.devices import MediaQueue
+from repro.media.ringbuf import PinnedRing
+
+# Payload keys in staging order; pack/unpack relies on this ordering.
+_PAYLOAD_KEYS = ("k_pay", "k_sc", "v_pay", "v_sc")
+
+
+@dataclasses.dataclass
+class _Cohort:
+    rids: np.ndarray
+    src: int
+    dst: int
+    phase: str = "pending"  # pending -> staged -> transcoded -> (committed)
+    payload: Optional[Dict[str, np.ndarray]] = None  # device staging hold
+    ring_slots: Optional[List[int]] = None  # host staging (pinned ring)
+    meta: Optional[List[Tuple[Tuple[int, ...], np.dtype]]] = None  # per-key
+
+
+class MigrationPipeline:
+    def __init__(
+        self,
+        executor,
+        ring: PinnedRing,
+        queues: Dict[str, MediaQueue],
+        step_period_s: float = 50e-6,
+        serial: bool = False,
+    ):
+        self.executor = executor
+        self.ring = ring
+        self.queues = queues
+        self.step_period_s = step_period_s
+        self.serial = serial
+        self._queue: Deque[_Cohort] = deque()
+        self._step = 0
+        # Stats the overlap benchmark and tests consume.
+        self.cohorts_done = 0
+        self.pages_moved = 0
+        self.busy_ticks = 0
+        self.stall_ticks = 0
+
+    # ------------------------------------------------------------------ API
+    @property
+    def busy(self) -> bool:
+        return bool(self._queue)
+
+    def submit(self, cohorts: Sequence[Tuple[np.ndarray, int, int]]) -> int:
+        """Enqueue phase-ordered (rids, src, dst) cohorts; returns pages
+        queued. Cohorts larger than half the staging ring are chunked so two
+        chunks can be in flight at once (the double buffer) and a single
+        cohort can never wedge the ring."""
+        chunk = max(self.ring.n_slots // 2, 1)
+        n = 0
+        for rids, src, dst in cohorts:
+            rids = np.asarray(rids, np.int64)
+            for lo in range(0, rids.size, chunk):
+                part = rids[lo : lo + chunk]
+                if part.size:
+                    self._queue.append(_Cohort(part, int(src), int(dst)))
+                    n += int(part.size)
+        if self.serial:
+            self.drain()
+        return n
+
+    def tick(self) -> bool:
+        """Advance one decode step's worth of migration work. Returns True
+        if any phase progressed (False = idle or stalled on ring credits)."""
+        self._step += 1
+        if not self._queue:
+            return False
+        self.busy_ticks += 1
+        now = self._step * self.step_period_s
+        head = self._queue[0]
+        progressed = False
+        if head.phase == "transcoded":
+            self._commit(head, now)
+            self._queue.popleft()
+            progressed = True
+            if not self._queue:
+                # Batch fully drained: reconcile desired vs physical state.
+                self.executor.on_pipeline_drained()
+        elif head.phase == "staged":
+            self._transcode(head)
+            progressed = True
+        else:  # pending
+            progressed = self._stage(head, now)
+        # Double buffer: while the head is mid-flight, stage the next
+        # pending cohort so its payload is ready the moment the head
+        # commits. At most two cohorts ever hold staging resources.
+        in_flight = sum(1 for c in self._queue if c.phase != "pending")
+        if in_flight == 1 and len(self._queue) > 1:
+            nxt = self._queue[1]
+            if nxt.phase == "pending":
+                progressed = self._stage(nxt, now) or progressed
+        if not progressed:
+            self.stall_ticks += 1
+        return progressed
+
+    def drain(self) -> int:
+        """Run the queue to completion (the blocking fallback). Returns
+        pages committed."""
+        budget = 4 * len(self._queue) + 8
+        before = self.pages_moved
+        while self._queue:
+            budget -= 1
+            if budget < 0:
+                raise RuntimeError("migration pipeline failed to drain")
+            self.tick()
+        return self.pages_moved - before
+
+    # --------------------------------------------------------------- phases
+    def _uses_ring(self, c: _Cohort) -> bool:
+        """Host-media payloads transit the pinned ring; moves between
+        accelerator-local pools stage in device scratch. Index 0 is the
+        uncompressed accelerator tier, so its device defines "local"."""
+        local = self.executor.device_of(0)
+        return (
+            self.executor.device_of(c.src) != local
+            or self.executor.device_of(c.dst) != local
+        )
+
+    def _stage(self, c: _Cohort, now: float) -> bool:
+        use_ring = self._uses_ring(c)
+        slots = None
+        if use_ring:
+            slots = self.ring.try_acquire(int(c.rids.size))
+            if slots is None:
+                return False  # backpressured: retry next tick
+        payload = self.executor.stage_cohort(c.rids, c.src)
+        src_dev = self.queues[self.executor.device_of(c.src)]
+        src_dev.submit(
+            self.executor.page_stored_bytes(c.src) * int(c.rids.size),
+            now=now,
+            write=False,
+            ops=int(c.rids.size),
+        )
+        if use_ring:
+            c.ring_slots = slots
+            c.meta = self._pack(payload, slots)
+            c.payload = None
+        else:
+            c.payload = payload
+        c.phase = "staged"
+        return True
+
+    def _transcode(self, c: _Cohort) -> None:
+        payload = self._unpack(c) if c.ring_slots is not None else c.payload
+        payload = self.executor.transcode_cohort(payload, c.src, c.dst)
+        if c.ring_slots is not None:
+            c.meta = self._pack(payload, c.ring_slots)
+        else:
+            c.payload = payload
+        c.phase = "transcoded"
+
+    def _commit(self, c: _Cohort, now: float) -> None:
+        payload = self._unpack(c) if c.ring_slots is not None else c.payload
+        actual = self.executor.commit_cohort(c.rids, payload, c.src, c.dst)
+        # Bill the devices that really absorbed the writes — commit-time
+        # spills may have landed pages below the planned destination.
+        for level in np.unique(np.asarray(actual, np.int64)):
+            n = int((np.asarray(actual) == level).sum())
+            self.queues[self.executor.device_of(int(level))].submit(
+                self.executor.page_stored_bytes(int(level)) * n,
+                now=now,
+                write=True,
+                ops=n,
+            )
+        if c.ring_slots is not None:
+            self.ring.release(c.ring_slots)
+            c.ring_slots = None
+        c.payload = None
+        c.phase = "committed"
+        self.cohorts_done += 1
+        self.pages_moved += int(c.rids.size)
+
+    # ------------------------------------------------------- ring transit
+    def _pack(
+        self, payload: Dict[str, np.ndarray], slots: List[int]
+    ) -> List[Tuple[Tuple[int, ...], np.dtype]]:
+        """Serialize each page's four arrays into its pinned ring slot."""
+        arrs = [np.asarray(payload[k]) for k in _PAYLOAD_KEYS]
+        meta = [(a.shape[1:], a.dtype) for a in arrs]
+        for i, slot in enumerate(slots):
+            self.ring.stage(slot, b"".join(a[i].tobytes() for a in arrs))
+        return meta
+
+    def _unpack(self, c: _Cohort) -> Dict[str, np.ndarray]:
+        out: Dict[str, List[np.ndarray]] = {k: [] for k in _PAYLOAD_KEYS}
+        assert c.meta is not None and c.ring_slots is not None
+        for slot in c.ring_slots:
+            raw = self.ring.read(slot)
+            off = 0
+            for key, (shape, dtype) in zip(_PAYLOAD_KEYS, c.meta):
+                nb = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+                out[key].append(
+                    np.frombuffer(raw[off : off + nb], dtype=dtype).reshape(shape)
+                )
+                off += nb
+        return {k: np.stack(v) for k, v in out.items()}
+
+    # ---------------------------------------------------------------- views
+    def media_busy_s(self) -> Dict[str, float]:
+        return {name: q.busy_s for name, q in self.queues.items()}
+
+    def media_bytes(self) -> Dict[str, int]:
+        return {name: q.bytes_total for name, q in self.queues.items()}

@@ -1,0 +1,118 @@
+"""Pinned staging ring buffer with watermark-based credit flow.
+
+Host-tier payloads do not jump between device pools and host dicts for free:
+on real hardware they transit a pinned (page-locked) staging arena that the
+DMA engine reads/writes, and the daemon recycles staging slots under a
+credit protocol so a slow consumer back-pressures the producer instead of
+overrunning the arena. This module models exactly that, deterministically:
+
+  * the arena is one contiguous numpy buffer carved into fixed-size slots
+    (the shared-memory layout a host daemon would mmap),
+  * producers ``try_acquire`` slot credits and ``stage`` raw payload bytes
+    into them; consumers ``read`` and ``release``,
+  * credit flow is watermark-hysteretic: when free credits fall to the low
+    watermark the ring enters backpressure and refuses new acquisitions
+    until frees climb back above the high watermark — the classic
+    stop/resume protocol that avoids thrashing around a single threshold.
+
+Invariants (tested):
+  free + held == n_slots at all times; a slot is never handed out twice;
+  double-release raises; backpressure engages at ``low_watermark`` and
+  clears only at ``high_watermark``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class PinnedRing:
+    def __init__(
+        self,
+        n_slots: int,
+        slot_bytes: int,
+        low_watermark: float = 0.125,
+        high_watermark: float = 0.5,
+    ):
+        if n_slots < 1 or slot_bytes < 1:
+            raise ValueError("ring needs at least one slot of at least one byte")
+        if not 0.0 <= low_watermark < high_watermark <= 1.0:
+            raise ValueError("need 0 <= low_watermark < high_watermark <= 1")
+        self.n_slots = n_slots
+        self.slot_bytes = slot_bytes
+        # The pinned arena. One allocation, slot-strided — the layout a
+        # host-side daemon would place in shared memory and register with
+        # the DMA engine.
+        self.buf = np.zeros((n_slots, slot_bytes), dtype=np.uint8)
+        self._fill = np.zeros(n_slots, dtype=np.int64)  # valid bytes per slot
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._held: set = set()
+        self.low_slots = int(np.floor(low_watermark * n_slots))
+        self.high_slots = max(int(np.ceil(high_watermark * n_slots)), self.low_slots + 1)
+        self.backpressured = False
+        # Telemetry for the pipeline's stall accounting.
+        self.acquires = 0
+        self.stalls = 0
+
+    # ------------------------------------------------------------- credits
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def held_slots(self) -> int:
+        return len(self._held)
+
+    def can_acquire(self, n: int) -> bool:
+        if self.backpressured:
+            return False
+        return n <= len(self._free)
+
+    def try_acquire(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` slot credits, or None under backpressure / shortage.
+
+        A failed acquire that found the ring short engages backpressure (the
+        producer must wait for the consumer to drain past the high
+        watermark); a successful acquire that lands free credits at or below
+        the low watermark engages it for the *next* producer.
+        """
+        self.acquires += 1
+        if self.backpressured or n > len(self._free):
+            if n <= self.n_slots:  # a satisfiable request blocked on credits
+                self.stalls += 1
+            if n > len(self._free):
+                self.backpressured = True
+            return None
+        slots = [self._free.pop() for _ in range(n)]
+        self._held.update(slots)
+        if len(self._free) <= self.low_slots:
+            self.backpressured = True
+        return slots
+
+    def release(self, slots: Sequence[int]) -> None:
+        for s in slots:
+            if s not in self._held:
+                raise ValueError(f"slot {s} released without being held")
+            self._held.discard(s)
+            self._fill[s] = 0
+            self._free.append(s)
+        if self.backpressured and len(self._free) >= self.high_slots:
+            self.backpressured = False
+
+    # ---------------------------------------------------------------- data
+    def stage(self, slot: int, payload: bytes) -> None:
+        """Copy raw payload bytes into a held slot (the pinned write)."""
+        if slot not in self._held:
+            raise ValueError(f"stage into unheld slot {slot}")
+        n = len(payload)
+        if n > self.slot_bytes:
+            raise ValueError(f"payload of {n}B exceeds slot size {self.slot_bytes}B")
+        self.buf[slot, :n] = np.frombuffer(payload, dtype=np.uint8)
+        self._fill[slot] = n
+
+    def read(self, slot: int) -> bytes:
+        if slot not in self._held:
+            raise ValueError(f"read from unheld slot {slot}")
+        return self.buf[slot, : int(self._fill[slot])].tobytes()

@@ -104,8 +104,8 @@ class TieredKVState:
     cold_n: jax.Array
     recent_k: jax.Array  # [L, B, R, KV, hd] bf16
     recent_v: jax.Array
-    recent_len: jax.Array  # int32 scalar
-    total_len: jax.Array  # int32 scalar
+    recent_len: jax.Array  # [B] int32 — per-slot dense-window fill
+    total_len: jax.Array  # [B] int32 — per-slot sequence position
 
 
 def init_tiered_kv_state(
@@ -138,8 +138,8 @@ def init_tiered_kv_state(
         cold_n=jnp.zeros((la, batch), jnp.int32),
         recent_k=jnp.zeros((la, batch, recent_window, kv, hd), jnp.bfloat16),
         recent_v=jnp.zeros((la, batch, recent_window, kv, hd), jnp.bfloat16),
-        recent_len=jnp.zeros((), jnp.int32),
-        total_len=jnp.zeros((), jnp.int32),
+        recent_len=jnp.zeros((batch,), jnp.int32),
+        total_len=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -245,16 +245,25 @@ def make_tiered_decode_step(
         return make_sp_pool_attention(mesh, shr.batch_axes_for(mesh, batch_size))
 
     def attend_tiered(blk, x, layer_tkv, total_len, recent_len):
-        """x [B,1,D]; one attention layer against pools + recent window."""
+        """x [B,1,D]; one attention layer against pools + recent window.
+        ``total_len``/``recent_len`` are per-slot [B] vectors: each slot
+        rotary-encodes at its own position and appends the new token at its
+        own dense-window offset (slots hold unequal sequence lengths)."""
         hn = layers.apply_norm(cfg.norm, blk["norm1"], x, cfg.norm_eps)
         b = x.shape[0]
-        positions = jnp.full((b, 1), total_len, dtype=jnp.int32)
+        positions = total_len[:, None].astype(jnp.int32)  # [B, 1]
         q, k_new, v_new = attn_mod._project_qkv(blk["attn"], cfg, hn, positions, act_shard)
-        recent_k = jax.lax.dynamic_update_slice_in_dim(
-            layer_tkv["recent_k"], k_new.astype(layer_tkv["recent_k"].dtype), recent_len, axis=1
+        # Per-slot scatter at index recent_len[b]: one-hot masked write (the
+        # vector analogue of dynamic_update_slice_in_dim; an index beyond
+        # the window writes nothing, matching an inactive slot).
+        r = layer_tkv["recent_k"].shape[1]
+        at = (jnp.arange(r, dtype=jnp.int32)[None, :] == recent_len[:, None])
+        at = at[:, :, None, None]  # [B, R, 1, 1]
+        recent_k = jnp.where(
+            at, k_new.astype(layer_tkv["recent_k"].dtype), layer_tkv["recent_k"]
         )
-        recent_v = jax.lax.dynamic_update_slice_in_dim(
-            layer_tkv["recent_v"], v_new.astype(layer_tkv["recent_v"].dtype), recent_len, axis=1
+        recent_v = jnp.where(
+            at, v_new.astype(layer_tkv["recent_v"].dtype), layer_tkv["recent_v"]
         )
         pools = {
             "warm": {
@@ -420,6 +429,6 @@ def tiered_kv_state_specs(
         cold_n=P(None, bax),
         recent_k=P(None, bax, None, None, None),
         recent_v=P(None, bax, None, None, None),
-        recent_len=P(),
-        total_len=P(),
+        recent_len=P(bax),
+        total_len=P(bax),
     )

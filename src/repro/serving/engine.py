@@ -41,6 +41,9 @@ class EngineStats:
     windows: int = 0
     migrations: int = 0
     completed: int = 0
+    # Decode steps retired while a migration cohort was in flight (async
+    # media pipeline) — the numerator of overlap efficiency.
+    overlapped_steps: int = 0
     decode_s: float = 0.0
     daemon_s: float = 0.0
     tco_savings_pct: float = 0.0
@@ -89,6 +92,8 @@ class TieredEngine:
             max_seq_len,
             recent_window,
             mgr_cfg,
+            async_migration=ts.async_migration,
+            ring_slots=ts.media_ring_slots,
         )
         from repro.launch.mesh import make_mesh
 
@@ -121,14 +126,9 @@ class TieredEngine:
 
     # ----------------------------------------------------------------- API
     def submit(self, prompt: np.ndarray, max_new_tokens: int, tenant: int = 0) -> Request:
-        # The tiered state keeps one scalar recent_len/total_len for the
-        # whole batch, so slots run in lockstep: equal prompt lengths.
-        # (Per-slot lengths is a straightforward extension — vectorize the
-        # two scalars; out of scope here, noted in DESIGN.md.)
-        if any(s is not None for s in self.slots) or self.queue:
-            first = self.queue[0].prompt if self.queue else next(
-                s for s in self.slots if s is not None).prompt
-            assert len(prompt) == len(first), "engine requires equal prompt lengths"
+        # recent_len/total_len are per-slot vectors in the tiered state, so
+        # slots hold unequal prompt lengths and decode at their own
+        # positions.
         req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, tenant=tenant)
         self.queue.append(req)
@@ -141,6 +141,11 @@ class TieredEngine:
             self._steps_in_window += 1
             if self._steps_in_window >= self.ts.window_steps:
                 self._end_window()
+        # Traffic ended with cohorts still in flight: finish them (already
+        # counted in stats.migrations when their window queued them).
+        t0 = time.perf_counter()
+        self.cache.drain_migrations()
+        self.stats.daemon_s += time.perf_counter() - t0
         self.stats.tco_savings_pct = max(
             self.stats.tco_savings_pct, self.cache.tco_savings_pct()
         )
@@ -187,8 +192,8 @@ class TieredEngine:
             jnp.asarray(v[:, 0, tail]).astype(st.recent_v.dtype))
         self.cache.state = dataclasses.replace(
             st, recent_k=rk, recent_v=rv,
-            recent_len=jnp.asarray(max(int(st.recent_len), tlen), jnp.int32),
-            total_len=jnp.asarray(max(int(st.total_len), s), jnp.int32),
+            recent_len=st.recent_len.at[slot].set(tlen),
+            total_len=st.total_len.at[slot].set(s),
         )
         self.slot_len[slot] = s
         req.out_tokens.append(int(jnp.argmax(logits[0, -1])))
@@ -224,6 +229,11 @@ class TieredEngine:
 
         t1 = time.perf_counter()
         self.cache.record_telemetry(telemetry)
+        # Advance in-flight migration cohorts by one phase: decode retired a
+        # step while migration ran — the overlap the async pipeline buys.
+        if self.cache.pipeline.busy:
+            self.cache.pipeline.tick()
+            self.stats.overlapped_steps += 1
         self.stats.daemon_s += time.perf_counter() - t1
 
         next_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
@@ -243,26 +253,31 @@ class TieredEngine:
         self._maybe_page_out_recent()
 
     def _maybe_page_out_recent(self):
-        """When the recent window fills, compress its oldest full pages."""
+        """When a slot's recent window fills, compress its oldest full
+        pages. Per-slot: each slot pages out at its own fill level and its
+        recent rows shift by its own amount (slots hold unequal lengths)."""
         st = self.cache.state
-        rl = int(st.recent_len)
-        if rl < self.recent_window:
+        rl = np.asarray(st.recent_len)  # [B]
+        full = [
+            i for i, req in enumerate(self.slots)
+            if req is not None and int(rl[i]) >= self.recent_window
+        ]
+        if not full:
             return
-        # Move floor(rl/pt)-1 pages out, keep the newest tokens dense.
-        n_out = max(rl // self.pt - 1, 0)
-        if n_out == 0:
-            # Window full but cannot page: drop oldest half (safety valve).
-            n_out = 1
         k = np.asarray(st.recent_k.astype(jnp.float32))  # [L,B,R,KV,hd]
         v = np.asarray(st.recent_v.astype(jnp.float32))
-        # Page out all layers x slots x pages in one batched append.
+        # Page out all layers x full-slots x pages in one batched append.
         entries, kps, vps = [], [], []
+        shift = np.zeros(self.bs, np.int64)
+        for i in full:
+            # Move floor(rl/pt)-1 pages out, keep the newest tokens dense
+            # (n_out >= 1: the window is full, something must leave).
+            n_out = max(int(rl[i]) // self.pt - 1, 1)
+            shift[i] = n_out * self.pt
         for layer in range(self.la):
-            for i, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                start_tok = int(self.slot_len[i]) - rl
-                for p in range(n_out):
+            for i in full:
+                start_tok = int(self.slot_len[i]) - int(rl[i])
+                for p in range(int(shift[i]) // self.pt):
                     page_idx = (start_tok + p * self.pt) // self.pt
                     sl = slice(p * self.pt, (p + 1) * self.pt)
                     entries.append((layer, i, page_idx))
@@ -272,13 +287,17 @@ class TieredEngine:
             self.cache.append_pages(
                 entries, jnp.asarray(np.stack(kps)), jnp.asarray(np.stack(vps))
             )
-        shift = n_out * self.pt
         st = self.cache.state
+        # Per-slot roll, device-side: row b reads from (j + shift[b]) % R.
+        r = st.recent_k.shape[2]
+        idx = (jnp.arange(r, dtype=jnp.int32)[None, :]
+               + jnp.asarray(shift, jnp.int32)[:, None]) % r  # [B, R]
+        gidx = idx[None, :, :, None, None]
         self.cache.state = dataclasses.replace(
             st,
-            recent_k=jnp.roll(st.recent_k, -shift, axis=2),
-            recent_v=jnp.roll(st.recent_v, -shift, axis=2),
-            recent_len=st.recent_len - shift,
+            recent_k=jnp.take_along_axis(st.recent_k, gidx, axis=2),
+            recent_v=jnp.take_along_axis(st.recent_v, gidx, axis=2),
+            recent_len=st.recent_len - jnp.asarray(shift, jnp.int32),
         )
 
     def _release_slot(self, slot: int):
@@ -286,6 +305,12 @@ class TieredEngine:
         self.cache.release_slot_pages(slot)
         self.slots[slot] = None
         self.slot_len[slot] = 0
+        st = self.cache.state
+        self.cache.state = dataclasses.replace(
+            st,
+            recent_len=st.recent_len.at[slot].set(0),
+            total_len=st.total_len.at[slot].set(0),
+        )
 
     def _end_window(self):
         t0 = time.perf_counter()

@@ -44,9 +44,13 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import tco
 from repro.core.manager import ManagerConfig, TierScapeManager
+from repro.core.pools import SlotAllocator
 from repro.core.tiers import TierSet, get as get_tier
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.media.devices import make_queues
+from repro.media.pipeline import MigrationPipeline
+from repro.media.ringbuf import PinnedRing
 from repro.runtime.serve import TieredKVState, init_tiered_kv_state
 
 # Placement indices (0 stays "uncompressed DRAM" for cost-model parity with
@@ -56,6 +60,11 @@ KV_TIER_IDS = ("C5", "C9", "C7", "C10")  # int8-HBM, int4-HBM, int8-host, int4-h
 _BITS = {WARM: 8, COLD: 4, HOST8: 8, HOST4: 4}
 _DEVICE = (WARM, COLD)
 _POOL = {WARM: "warm", COLD: "cold"}
+# A page staged out of its source tier but not yet committed to its
+# destination by the async migration pipeline. Every placement mask in this
+# module is a positive-level comparison, so in-flight pages drop out of
+# telemetry folds, eviction scans and capacity pre-passes automatically.
+INFLIGHT = -1
 
 
 def kv_tierset(page_elems: int) -> TierSet:
@@ -121,7 +130,19 @@ class TieredKVCache:
         recent_window: int,
         manager_cfg: ManagerConfig,
         warm_frac: float = 0.5,
+        tenant_quota: Optional[Dict[str, Dict[int, int]]] = None,
+        async_migration: bool = False,
+        ring_slots: int = 64,
+        media_step_s: float = 50e-6,
     ):
+        """``tenant_quota`` maps pool name ("warm"/"cold") -> {tenant id ->
+        max concurrently held slots}. When a pool carries a quota, every
+        tenant that allocates from it must appear in the dict (the
+        ``SlotAllocator`` hard contract) — quota exhaustion spills that
+        tenant's pages down-tier instead of letting it drain the shared
+        free list. ``async_migration`` routes window migration plans
+        through the double-buffered media pipeline instead of the blocking
+        ``migrate_batch`` path."""
         self.cfg = cfg
         self.la = n_attn_layers
         self.bs = batch_slots
@@ -161,8 +182,14 @@ class TieredKVCache:
         # Where the payload actually lives (manager.placement is the desired
         # placement the policy computed; the executor reconciles them).
         self.physical = np.zeros(self.n_regions, np.int64)
-        self._free_warm = list(range(warm_cap - 1, -1, -1))
-        self._free_cold = list(range(cold_cap - 1, -1, -1))
+        # Device-pool slot management. SlotAllocators (daemon side) own the
+        # free lists; ``tenant_quota`` caps per-tenant residency so one
+        # tenant cannot exhaust a shared pool (the MaxMem failure mode).
+        tenant_quota = tenant_quota or {}
+        self._alloc = {
+            "warm": SlotAllocator(warm_cap, tenant_quota.get("warm")),
+            "cold": SlotAllocator(cold_cap, tenant_quota.get("cold")),
+        }
         self._pool_slot = np.full(self.n_regions, -1, np.int64)
         # Multi-tenancy: each batch slot is owned by one tenant; a page's
         # tenant is its slot's tenant (pages are keyed by (layer, slot, page),
@@ -173,6 +200,31 @@ class TieredKVCache:
         # Compute-kernel dispatch accounting for the migration/ingestion path
         # (quant / dequant / transcode launches — the daemon-tax proxy).
         self.kernel_dispatches = 0
+
+        # --- backing-media subsystem -----------------------------------
+        # One MediaQueue per distinct device (shared-bandwidth accounting),
+        # a pinned staging ring sized for the fattest page representation
+        # (int8 payload + f32 scales, K and V), and the async migration
+        # pipeline. serial=True (async_migration off) keeps the blocking
+        # window-boundary semantics as the equivalence oracle.
+        ts = self.manager.tierset
+        self._dev_names = [d.name for d in ts.media_devices()]
+        self._page_stored_bytes = np.array(
+            [self.page_elems * 2]
+            + [t.stored_bytes(self.page_elems, 2) for t in ts.tiers],
+            np.int64,
+        )
+        hd8 = page_tokens * kv * hd  # int8 payload bytes per K (or V) page
+        sc = 4 * page_tokens * kv  # f32 scale bytes per K (or V) page
+        self.staging_ring = PinnedRing(max(ring_slots, 2), 2 * (hd8 + sc))
+        self.media_queues = make_queues(self._dev_names)
+        self.async_migration = async_migration
+        self.pipeline = MigrationPipeline(
+            self, self.staging_ring, self.media_queues,
+            step_period_s=media_step_s, serial=not async_migration,
+        )
+        self._pending_reconcile: List[np.ndarray] = []
+        self._media_busy_snapshot: Dict[str, float] = {}
 
     # ------------------------------------------------------------- helpers
     def rid(self, layer: int, slot: int, page: int) -> int:
@@ -193,6 +245,51 @@ class TieredKVCache:
         """(n_regions,) bool: regions owned by ``tenant`` via their slot."""
         return self.slot_tenant[self._rid_slot] == tenant
 
+    # ------------------------------------------------- pool slot accounting
+    # The raw free lists stay visible (tests and tools introspect them), but
+    # every mutation goes through the SlotAllocators so per-tenant quota
+    # accounting can never drift from the lists.
+    @property
+    def _free_warm(self) -> List[int]:
+        return self._alloc["warm"]._free
+
+    @property
+    def _free_cold(self) -> List[int]:
+        return self._alloc["cold"]._free
+
+    def _tenant_of_rid(self, rid: int) -> int:
+        return int(self.slot_tenant[int(self._rid_slot[rid])])
+
+    def _quota_headroom(self, pool: str, tenant: int) -> int:
+        """Slots ``tenant`` may still claim under its quota alone (ignores
+        the global free list — the capacity pre-passes handle that)."""
+        a = self._alloc[pool]
+        if a.tenant_quota is None:
+            return a.capacity
+        if tenant not in a.tenant_quota:
+            raise KeyError(
+                f"tenant {tenant!r} allocates from quota'd pool {pool!r} "
+                f"but has no quota entry"
+            )
+        return max(a.tenant_quota[tenant] - a.used_by(tenant), 0)
+
+    def _pool_headroom(self, pool: str, tenant: Optional[int] = None) -> int:
+        """Slots allocatable right now: global free list, clipped by the
+        tenant's quota when the pool is quota-managed."""
+        a = self._alloc[pool]
+        free = len(a._free)
+        if a.tenant_quota is None or tenant is None:
+            return free
+        return min(free, self._quota_headroom(pool, tenant))
+
+    def _alloc_slot(self, pool: str, rid: int) -> int:
+        a = self._alloc[pool]
+        tenant = self._tenant_of_rid(rid) if a.tenant_quota is not None else None
+        return a.alloc(int(rid), tenant)
+
+    def _free_slot(self, pool: str, pool_slot: int) -> None:
+        self._alloc[pool].free(int(pool_slot))
+
     def _quant_page(self, kpage, vpage, bits: int):
         self.kernel_dispatches += 2
         kp, ks = kref.quant_kv_page(kpage, bits)
@@ -211,13 +308,17 @@ class TieredKVCache:
         through to the cold tier under warm-pool pressure with nothing left
         to demote (all warm slots held by in-flight migrations)."""
         rid = self.rid(layer, slot, page)
-        if not self._free_warm:
-            self._evict_coldest_warm()
-        if not self._free_warm:
+        tenant = self._tenant_of_rid(rid)
+        if self._pool_headroom("warm", tenant) == 0:
+            # Under a pure quota shortage only this tenant's own warm pages
+            # free quota; under global pressure any warm page will do.
+            scoped = tenant if self._quota_headroom("warm", tenant) == 0 else None
+            self._evict_coldest_warm(tenant=scoped)
+        if self._pool_headroom("warm", tenant) == 0:
             self._page_exists[rid] = True
             self._insert(rid, layer, slot, page, kpage, vpage, COLD)
             return
-        ps = self._free_warm.pop()
+        ps = self._alloc_slot("warm", rid)
         kp, ks, vp, vs = self._quant_page(kpage, vpage, 8)
         st = self.state
         st = dataclasses.replace(
@@ -252,6 +353,7 @@ class TieredKVCache:
         rids = np.array([self.rid(*e) for e in entries], np.int64)
         layers = np.array([e[0] for e in entries], np.int64)
         slots = np.array([e[1] for e in entries], np.int64)
+        tenants = self.slot_tenant[slots]
 
         deficit = n - len(self._free_warm)
         if deficit > 0:
@@ -261,20 +363,54 @@ class TieredKVCache:
             take = cand[np.argsort(hot[cand])][:deficit]
             if take.size:
                 self.migrate_batch(take, np.full(take.size, COLD, np.int64))
-        n_warm = min(n, len(self._free_warm))
+        if self._alloc["warm"].tenant_quota is not None:
+            # Per-tenant pressure: a tenant at quota frees headroom only by
+            # demoting its OWN coldest warm pages.
+            hot = self.manager.telemetry.averaged_hotness(2)
+            for t in np.unique(tenants):
+                want = int((tenants == t).sum())
+                q_deficit = want - self._quota_headroom("warm", int(t))
+                if q_deficit <= 0:
+                    continue
+                cand = np.where(
+                    (self.physical == WARM) & self._page_exists & self.tenant_mask(int(t))
+                )[0]
+                take = cand[np.argsort(hot[cand])][:q_deficit]
+                if take.size:
+                    self.migrate_batch(take, np.full(take.size, COLD, np.int64))
+
+        # Per-entry destination: warm while global + tenant headroom lasts,
+        # then cold, then (cold quota exhausted) the int4 host tier. With no
+        # quotas this degenerates to the first-N-warm split.
+        dst_of = np.full(n, HOST4, np.int64)
+        warm_fit = self._claim_fits("warm", rids)
+        dst_of[warm_fit] = WARM
+        rest = np.where(~warm_fit)[0]
+        if rest.size:
+            cold_fit = self._claim_fits("cold", rids[rest])
+            dst_of[rest[cold_fit]] = COLD
 
         editor = _TableEditor(self.state)
-        for lo, hi, dst in ((0, n_warm, WARM), (n_warm, n, COLD)):
-            if hi <= lo:
+        for dst in (WARM, COLD, HOST4):
+            sel = np.where(dst_of == dst)[0]
+            if sel.size == 0:
                 continue
-            p = hi - lo
+            p = sel.size
             bits = _BITS[dst]
-            pay, sc = kops.quant_pages(jnp.concatenate([kpages[lo:hi], vpages[lo:hi]]), bits)
+            pay, sc = kops.quant_pages(jnp.concatenate([kpages[sel], vpages[sel]]), bits)
             self.kernel_dispatches += 1
-            self._scatter_device(
-                dst, rids[lo:hi], layers[lo:hi], slots[lo:hi],
-                pay[:p], sc[:p], pay[p:], sc[p:], editor,
-            )
+            if dst in _DEVICE:
+                self._scatter_device(
+                    dst, rids[sel], layers[sel], slots[sel],
+                    pay[:p], sc[:p], pay[p:], sc[p:], editor,
+                )
+            else:
+                kp, ks = np.asarray(pay[:p]), np.asarray(sc[:p])
+                vp, vs = np.asarray(pay[p:]), np.asarray(sc[p:])
+                for j, r in enumerate(rids[sel]):
+                    self.host_pages[int(r)] = (kp[j], ks[j], vp[j], vs[j])
+                self._pool_slot[rids[sel]] = -2
+                self._set_placement(rids[sel], dst)
             if dst == WARM:
                 kp_sz = int(np.prod(pay[:p].shape))
                 sc_sz = int(np.prod(sc[:p].shape))
@@ -285,11 +421,16 @@ class TieredKVCache:
         self.state = editor.commit(self.state)
         self._page_exists[rids] = True
 
-    def _evict_coldest_warm(self) -> bool:
+    def _evict_coldest_warm(self, tenant: Optional[int] = None) -> bool:
         """Warm pool pressure: demote the coldest warm page to cold pool.
+        ``tenant`` scopes the victim search to one tenant's pages (quota
+        pressure frees quota only by evicting the quota holder's own pages).
         Returns False when there is nothing demotable."""
         hot = self.manager.telemetry.averaged_hotness(2)
-        warm_rids = np.where((self.physical == WARM) & self._page_exists)[0]
+        mask = (self.physical == WARM) & self._page_exists
+        if tenant is not None:
+            mask &= self.tenant_mask(tenant)
+        warm_rids = np.where(mask)[0]
         if warm_rids.size == 0:
             return False
         victim = warm_rids[np.argmin(hot[warm_rids])]
@@ -297,29 +438,33 @@ class TieredKVCache:
         return True
 
     # ------------------------------------------------- batched migration
-    def migrate_batch(self, rids: np.ndarray, dsts: np.ndarray) -> int:
-        """Execute a migration batch cohort-by-cohort.
+    def plan_cohorts(
+        self, rids: np.ndarray, dsts: np.ndarray
+    ) -> List[Tuple[np.ndarray, int, int]]:
+        """Normalize a migration batch into ordered (rids, src, dst) cohorts.
 
-        Cohorts run in a phase order that frees device slots before they are
-        re-claimed: device->host swaps out first, then warm->cold demotions,
-        cold->warm promotions, host->device swap-ins, and finally
-        host<->host retranscodes. When promotions would overflow the warm
-        pool even after in-batch frees, the coldest non-batch warm pages are
-        demoted first; any remaining overflow lands in the cold pool (the
-        per-page path's spill semantics). Returns pages actually moved.
+        Shared by the blocking executor (``migrate_batch``) and the async
+        media pipeline. Dedups (last entry wins, the per-page loop's
+        semantics), drops no-ops/missing/in-flight pages, runs the warm
+        capacity + tenant-quota pre-passes, and phase-orders the cohorts so
+        frees land before re-claims: device->host swap-outs first, then
+        warm->cold demotions, cold->warm promotions, host->device swap-ins,
+        and finally host<->host retranscodes.
         """
         rids = np.asarray(rids, np.int64)
         dsts = np.asarray(dsts, np.int64)
         if rids.size and np.unique(rids).size != rids.size:
-            # Dedup with the per-page loop's semantics: for repeated rids the
-            # last entry wins (a sequential loop would land the page there).
             _, rev_first = np.unique(rids[::-1], return_index=True)
             idx = np.sort(rids.size - 1 - rev_first)
             rids, dsts = rids[idx], dsts[idx]
-        keep = self._page_exists[rids] & (self.physical[rids] != dsts)
+        keep = (
+            self._page_exists[rids]
+            & (self.physical[rids] != dsts)
+            & (self.physical[rids] != INFLIGHT)
+        )
         rids, dsts = rids[keep], dsts[keep]
         if rids.size == 0:
-            return 0
+            return []
         srcs = self.physical[rids].copy()
 
         # Warm-capacity pre-pass.
@@ -344,8 +489,9 @@ class TieredKVCache:
                 dsts[spill] = COLD
                 still = dsts != srcs
                 rids, srcs, dsts = rids[still], srcs[still], dsts[still]
+        rids, srcs, dsts = self._quota_pre_pass(rids, srcs, dsts)
         if rids.size == 0:
-            return 0
+            return []
 
         def phase(s: int, d: int) -> int:
             if s in _DEVICE and d not in _DEVICE:
@@ -362,12 +508,88 @@ class TieredKVCache:
             {(int(s), int(d)) for s, d in zip(srcs, dsts)},
             key=lambda p: (phase(*p), p),
         )
+        return [
+            (rids[(srcs == s) & (dsts == d)], s, d) for s, d in pairs
+        ]
+
+    def _quota_pre_pass(self, rids, srcs, dsts):
+        """Tenant-quota capacity pre-pass for the device pools.
+
+        Warm: a tenant whose warm inflow exceeds its remaining quota (plus
+        its own in-batch warm frees) first demotes its own coldest
+        non-batch warm pages, then spills its coldest warm-bound pages to
+        the cold pool. Cold: overflow past the tenant's cold quota (after
+        in-batch cold frees) spills straight to the int4 host tier — same
+        direction the single-page ``_insert`` path takes, so the blocking
+        executor can never hit a quota-exhausted alloc mid-cohort."""
+        if self._alloc["warm"].tenant_quota is not None and (dsts == WARM).any():
+            hot = self.manager.telemetry.averaged_hotness(2)
+            tenants_r = self.slot_tenant[self._rid_slot[rids]]
+            for t in np.unique(tenants_r[dsts == WARM]):
+                t = int(t)
+                mine = tenants_r == t
+                inflow = int(((dsts == WARM) & mine).sum())
+                freed = int(((srcs == WARM) & mine).sum())
+                deficit = inflow - (self._quota_headroom("warm", t) + freed)
+                if deficit <= 0:
+                    continue
+                in_batch = np.zeros(self.n_regions, bool)
+                in_batch[rids] = True
+                cand = np.where(
+                    (self.physical == WARM)
+                    & self._page_exists
+                    & self.tenant_mask(t)
+                    & ~in_batch
+                )[0]
+                take = cand[np.argsort(hot[cand])][:deficit]
+                if take.size:
+                    rids = np.concatenate([take, rids])
+                    srcs = np.concatenate([np.full(take.size, WARM, np.int64), srcs])
+                    dsts = np.concatenate([np.full(take.size, COLD, np.int64), dsts])
+                    tenants_r = self.slot_tenant[self._rid_slot[rids]]
+                    deficit -= take.size
+                if deficit > 0:
+                    mine = tenants_r == t
+                    warm_bound = np.where((dsts == WARM) & mine)[0]
+                    spill = warm_bound[np.argsort(hot[rids[warm_bound]])][:deficit]
+                    dsts[spill] = COLD
+                    still = dsts != srcs
+                    rids, srcs, dsts = rids[still], srcs[still], dsts[still]
+                    tenants_r = self.slot_tenant[self._rid_slot[rids]]
+        if self._alloc["cold"].tenant_quota is not None and (dsts == COLD).any():
+            hot = self.manager.telemetry.averaged_hotness(2)
+            tenants_r = self.slot_tenant[self._rid_slot[rids]]
+            for t in np.unique(tenants_r[dsts == COLD]):
+                t = int(t)
+                mine = tenants_r == t
+                inflow = int(((dsts == COLD) & mine).sum())
+                freed = int(((srcs == COLD) & mine).sum())
+                deficit = inflow - (self._quota_headroom("cold", t) + freed)
+                if deficit <= 0:
+                    continue
+                cold_bound = np.where((dsts == COLD) & mine)[0]
+                spill = cold_bound[np.argsort(hot[rids[cold_bound]])][:deficit]
+                dsts[spill] = HOST4
+                still = dsts != srcs
+                rids, srcs, dsts = rids[still], srcs[still], dsts[still]
+                tenants_r = self.slot_tenant[self._rid_slot[rids]]
+        return rids, srcs, dsts
+
+    def migrate_batch(self, rids: np.ndarray, dsts: np.ndarray) -> int:
+        """Execute a migration batch cohort-by-cohort, blocking (the serial
+        oracle the async pipeline is equivalence-tested against). When
+        promotions would overflow the warm pool even after in-batch frees,
+        the coldest non-batch warm pages are demoted first; any remaining
+        overflow lands in the cold pool (the per-page path's spill
+        semantics). Returns pages actually moved."""
+        cohorts = self.plan_cohorts(rids, dsts)
+        if not cohorts:
+            return 0
         editor = _TableEditor(self.state)
         moved = 0
-        for s, d in pairs:
-            mask = (srcs == s) & (dsts == d)
-            self._exec_cohort(rids[mask], s, d, editor)
-            moved += int(mask.sum())
+        for crids, s, d in cohorts:
+            self._exec_cohort(crids, s, d, editor)
+            moved += int(crids.size)
         self.state = editor.commit(self.state)
         return moved
 
@@ -388,7 +610,8 @@ class TieredKVCache:
             v_pay = getattr(st, f"{pool}_v")[layers, ps]
             v_sc = getattr(st, f"{pool}_v_scales")[layers, ps]
             editor.remove(pool, layers, slots, ps)
-            (self._free_warm if src == WARM else self._free_cold).extend(int(x) for x in ps)
+            for x in ps:
+                self._free_slot(pool, int(x))
         else:
             hp = [self.host_pages.pop(int(r)) for r in rids]
             k_pay = jnp.asarray(np.stack([h[0] for h in hp]))
@@ -418,8 +641,7 @@ class TieredKVCache:
 
     def _scatter_device(self, dst, rids, layers, slots, k_pay, k_sc, v_pay, v_sc, editor):
         pool = _POOL[dst]
-        free = self._free_warm if dst == WARM else self._free_cold
-        new_ps = np.array([free.pop() for _ in range(rids.size)], np.int64)
+        new_ps = np.array([self._alloc_slot(pool, int(r)) for r in rids], np.int64)
         st = self.state
         kw = {
             f"{pool}_k": getattr(st, f"{pool}_k").at[layers, new_ps].set(k_pay),
@@ -432,11 +654,161 @@ class TieredKVCache:
         self._pool_slot[rids] = new_ps
         self._set_placement(rids, dst)
 
+    # ------------------------------------- phase-split executor (pipeline)
+    # The async media pipeline drives one cohort through these three
+    # callbacks across successive engine decode steps. Payloads cross the
+    # phase boundaries as numpy dicts so host-media cohorts can round-trip
+    # through the pinned staging ring bit-exactly.
+    def stage_cohort(self, rids: np.ndarray, src: int) -> Dict[str, np.ndarray]:
+        """Phase 1: gather the cohort's payloads and retire them from the
+        source tier. Pages go in-flight: out of every placement mask until
+        ``commit_cohort`` lands them, and — like host-tier pages always are
+        — unreadable by decode steps for those few ticks. That bounded
+        access-skip is the async pipeline's quality cost; the serial oracle
+        pays a blocked window boundary instead."""
+        rids = np.asarray(rids, np.int64)
+        layers = rids // (self.bs * self.max_pages)
+        slots = (rids // self.max_pages) % self.bs
+        st = self.state
+        if src in _DEVICE:
+            pool = _POOL[src]
+            ps = self._pool_slot[rids]
+            payload = {
+                "k_pay": np.asarray(getattr(st, f"{pool}_k")[layers, ps]),
+                "k_sc": np.asarray(getattr(st, f"{pool}_k_scales")[layers, ps]),
+                "v_pay": np.asarray(getattr(st, f"{pool}_v")[layers, ps]),
+                "v_sc": np.asarray(getattr(st, f"{pool}_v_scales")[layers, ps]),
+            }
+            editor = _TableEditor(st)
+            editor.remove(pool, layers, slots, ps)
+            self.state = editor.commit(st)
+            for x in ps:
+                self._free_slot(pool, int(x))
+        else:
+            hp = [self.host_pages.pop(int(r)) for r in rids]
+            payload = {
+                "k_pay": np.stack([h[0] for h in hp]),
+                "k_sc": np.stack([h[1] for h in hp]),
+                "v_pay": np.stack([h[2] for h in hp]),
+                "v_sc": np.stack([h[3] for h in hp]),
+            }
+        self.physical[rids] = INFLIGHT
+        self._pool_slot[rids] = -3
+        return payload
+
+    def transcode_cohort(
+        self, payload: Dict[str, np.ndarray], src: int, dst: int
+    ) -> Dict[str, np.ndarray]:
+        """Phase 2: one fused transcode dispatch for the whole cohort (K and
+        V stacked); the same-codec fast path is a raw media copy."""
+        if _BITS[src] == _BITS[dst]:
+            return payload
+        p = payload["k_pay"].shape[0]
+        pay, sc = kops.transcode_pages(
+            jnp.concatenate([jnp.asarray(payload["k_pay"]), jnp.asarray(payload["v_pay"])]),
+            jnp.concatenate([jnp.asarray(payload["k_sc"]), jnp.asarray(payload["v_sc"])]),
+            _BITS[src], _BITS[dst],
+        )
+        self.kernel_dispatches += 1
+        return {
+            "k_pay": np.asarray(pay[:p]), "k_sc": np.asarray(sc[:p]),
+            "v_pay": np.asarray(pay[p:]), "v_sc": np.asarray(sc[p:]),
+        }
+
+    def _claim_fits(self, pool: str, rids: np.ndarray) -> np.ndarray:
+        """Greedy in-order claim check: True where the rid could take a
+        ``pool`` slot right now, honoring both the global free list and the
+        rid's tenant quota. Shared by batched ingestion and the async
+        commit phase so the two fit/spill decisions cannot drift."""
+        a = self._alloc[pool]
+        glob = len(a._free)
+        claimed: Dict[int, int] = {}
+        out = np.zeros(len(rids), bool)
+        for i, r in enumerate(rids):
+            t = self._tenant_of_rid(int(r))
+            c = claimed.get(t, 0)
+            if glob > 0 and self._pool_headroom(pool, t) - c > 0:
+                out[i] = True
+                claimed[t] = c + 1
+                glob -= 1
+        return out
+
+    def commit_cohort(
+        self, rids: np.ndarray, payload: Dict[str, np.ndarray], src: int, dst: int
+    ) -> np.ndarray:
+        """Phase 3: scatter into the destination tier. Device headroom is
+        re-checked at commit time (appends may have raced the in-flight
+        cohort); pages that no longer fit spill down-tier, re-transcoding
+        the spilled sub-batch when the spill crosses codecs. Returns the
+        per-rid level actually landed (spills included) so the pipeline can
+        bill the devices that really absorbed the writes."""
+        rids = np.asarray(rids, np.int64)
+        actual = np.full(rids.size, dst, np.int64)
+        if dst in _DEVICE:
+            fits = self._claim_fits(_POOL[dst], rids)
+            fi = np.where(fits)[0]
+            if fi.size:
+                frids = rids[fi]
+                layers = frids // (self.bs * self.max_pages)
+                slots = (frids // self.max_pages) % self.bs
+                editor = _TableEditor(self.state)
+                self._scatter_device(
+                    dst, frids, layers, slots,
+                    payload["k_pay"][fi], payload["k_sc"][fi],
+                    payload["v_pay"][fi], payload["v_sc"][fi], editor,
+                )
+                self.state = editor.commit(self.state)
+            sp = np.where(~fits)[0]
+            if sp.size:
+                sub = {k: v[sp] for k, v in payload.items()}
+                spill_dst = COLD if dst == WARM else HOST4
+                sub = self.transcode_cohort(sub, dst, spill_dst)
+                actual[sp] = self.commit_cohort(rids[sp], sub, src, spill_dst)
+            return actual
+        kp, ks = np.asarray(payload["k_pay"]), np.asarray(payload["k_sc"])
+        vp, vs = np.asarray(payload["v_pay"]), np.asarray(payload["v_sc"])
+        for i, r in enumerate(rids):
+            self.host_pages[int(r)] = (kp[i], ks[i], vp[i], vs[i])
+        self._pool_slot[rids] = -2
+        self._set_placement(rids, dst)
+        return actual
+
+    def device_of(self, level: int) -> str:
+        """Backing-media device name for a placement level."""
+        return self._dev_names[int(level)]
+
+    def page_stored_bytes(self, level: int) -> int:
+        """Media bytes one page occupies at a placement level."""
+        return int(self._page_stored_bytes[int(level)])
+
+    def on_pipeline_drained(self) -> None:
+        """Pipeline hook after a batch fully commits: reconcile the
+        policy's desired placement with physical reality (spills included)
+        and feed the executed media busy time back to the manager as
+        contention pressure."""
+        for rids in self._pending_reconcile:
+            ex = rids[self._page_exists[rids] & (self.physical[rids] != INFLIGHT)]
+            self.manager.placement[ex] = self.physical[ex]
+        self._pending_reconcile.clear()
+        busy = {n: q.busy_s for n, q in self.media_queues.items()}
+        delta = {
+            n: busy[n] - self._media_busy_snapshot.get(n, 0.0) for n in busy
+        }
+        self._media_busy_snapshot = busy
+        window_s = self.manager.cfg.window_steps * self.pipeline.step_period_s
+        self.manager.note_media_charges(delta, window_s)
+
+    def drain_migrations(self) -> int:
+        """Block until every in-flight migration cohort commits."""
+        if self.pipeline.busy:
+            return self.pipeline.drain()
+        return 0
+
     # ------------------------------------------------- per-page migration
     def migrate(self, rid: int, dst: int) -> None:
         """Per-page migration path (equivalence oracle + single evictions)."""
         src = int(self.physical[rid])
-        if src == dst or not self._page_exists[rid]:
+        if src == dst or src == INFLIGHT or not self._page_exists[rid]:
             return
         layer, slot, page = self.rid_coords(rid)
         k, v = self._fetch_dense(rid, layer, slot, page)
@@ -468,10 +840,10 @@ class TieredKVCache:
         if src == WARM:
             # Drop from table by swapping with the last entry.
             self._table_remove("warm", layer, slot, ps)
-            self._free_warm.append(ps)
+            self._free_slot("warm", ps)
         elif src == COLD:
             self._table_remove("cold", layer, slot, ps)
-            self._free_cold.append(ps)
+            self._free_slot("cold", ps)
         else:
             self.host_pages.pop(rid, None)
         self._pool_slot[rid] = -1
@@ -491,12 +863,18 @@ class TieredKVCache:
 
     def _insert(self, rid, layer, slot, page, k, v, dst):
         st = self.state
-        if dst == WARM and not self._free_warm:
-            if not self._evict_coldest_warm():
+        tenant = self._tenant_of_rid(rid)
+        if dst == WARM and self._pool_headroom("warm", tenant) == 0:
+            scoped = tenant if self._quota_headroom("warm", tenant) == 0 else None
+            if not self._evict_coldest_warm(tenant=scoped):
                 dst = COLD  # nothing demotable; spill to the next tier
+            elif self._pool_headroom("warm", tenant) == 0:
+                dst = COLD  # eviction freed no usable headroom
             st = self.state
+        if dst == COLD and self._pool_headroom("cold", tenant) == 0:
+            dst = HOST4  # cold quota exhausted; spill to the host tier
         if dst == WARM:
-            ps = self._free_warm.pop()
+            ps = self._alloc_slot("warm", rid)
             kp, ks, vp, vs = self._quant_page(k, v, 8)
             st = dataclasses.replace(
                 st,
@@ -512,7 +890,7 @@ class TieredKVCache:
                 warm_n=st.warm_n.at[layer, slot].set(n + 1),
             )
         elif dst == COLD:
-            ps = self._free_cold.pop()
+            ps = self._alloc_slot("cold", rid)
             kp, ks, vp, vs = self._quant_page(k, v, 4)
             st = dataclasses.replace(
                 st,
@@ -538,7 +916,14 @@ class TieredKVCache:
 
     # ------------------------------------------------------------ release
     def release_slot_pages(self, slot: int) -> None:
-        """Request finished: free all of one batch slot's pages, batched."""
+        """Request finished: free all of one batch slot's pages, batched.
+        If any of THIS slot's pages ride an in-flight migration cohort the
+        pipeline is drained first (they must not strand in the staging
+        ring); other slots' cohorts keep overlapping undisturbed."""
+        if self.pipeline.busy and bool(
+            (self.physical[self._rid_slot == slot] == INFLIGHT).any()
+        ):
+            self.pipeline.drain()
         rids = np.array(
             [self.rid(layer, slot, page)
              for layer in range(self.la) for page in range(self.max_pages)],
@@ -549,9 +934,9 @@ class TieredKVCache:
             src = int(self.physical[r])
             ps = int(self._pool_slot[r])
             if src == WARM:
-                self._free_warm.append(ps)
+                self._free_slot("warm", ps)
             elif src == COLD:
-                self._free_cold.append(ps)
+                self._free_slot("cold", ps)
             else:
                 self.host_pages.pop(int(r), None)
         self._pool_slot[rids] = -1
@@ -630,8 +1015,19 @@ class TieredKVCache:
 
     # --------------------------------------------------------- window logic
     def end_window(self):
-        """Run the placement model over existing pages; execute the plan with
-        the batched cohort executor."""
+        """Run the placement model over existing pages and execute the plan.
+
+        Serial mode (the oracle): the batched cohort executor runs the plan
+        to completion before returning — the window boundary blocks.
+
+        Async mode: cohorts are submitted to the media pipeline and the
+        boundary returns immediately; decode steps tick the pipeline and
+        the desired/physical reconcile happens when the batch drains. A
+        previous window's stragglers are drained first so the placement
+        model never plans over in-flight pages.
+        """
+        if self.pipeline.busy:
+            self.pipeline.drain()
         plan = self.manager.end_window()
         if plan.regions.size == 0:
             return plan, 0
@@ -639,6 +1035,14 @@ class TieredKVCache:
         # warm (the closest legal tier — recent window plays DRAM's role).
         dst = plan.dst.copy()
         dst[dst == 0] = WARM
+        if self.async_migration:
+            cohorts = self.plan_cohorts(plan.regions, dst)
+            self._pending_reconcile.append(np.asarray(plan.regions, np.int64))
+            queued = self.pipeline.submit(cohorts)
+            if not self.pipeline.busy:
+                # Empty plan after pre-passes: reconcile immediately.
+                self.on_pipeline_drained()
+            return plan, queued
         moved = self.migrate_batch(plan.regions, dst)
         # The executor wrote actual placements (incl. spills) back into
         # manager.placement so the cost model prices reality; also reconcile

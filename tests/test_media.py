@@ -1,0 +1,433 @@
+"""Backing-media subsystem: ring-buffer invariants, device-queue accounting,
+async-pipeline vs serial-oracle equivalence, non-blocking window boundaries,
+tenant pool quotas, per-slot sequence lengths, and the arbiter's shared
+bandwidth budget."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TierScapeRunConfig
+from repro.core.arbiter import BudgetArbiter, TenantSpec
+from repro.core.manager import ManagerConfig, make_manager
+from repro.media.devices import DEVICES, MediaQueue, get as get_device, make_queues
+from repro.media.ringbuf import PinnedRing
+from repro.serving.kv_cache import COLD, HOST4, HOST8, WARM, TieredKVCache
+
+from proptest import cases, draw_int
+from test_migration import CFG, assert_same_state, check_table_invariants, fill_cache
+
+
+def make_cache(async_migration=False, tenant_quota=None, ring_slots=64,
+               layers=2, slots=2, page_tokens=8, max_seq=64, warm_frac=0.5):
+    return TieredKVCache(
+        CFG, layers, slots, page_tokens, max_seq, recent_window=16,
+        manager_cfg=ManagerConfig(policy="analytical", alpha=0.5),
+        warm_frac=warm_frac, tenant_quota=tenant_quota,
+        async_migration=async_migration, ring_slots=ring_slots,
+    )
+
+
+# ---------------------------------------------------------------------------
+# pinned ring buffer: credit/watermark invariants
+# ---------------------------------------------------------------------------
+
+
+def test_ring_conserves_slots_and_rejects_double_release():
+    r = PinnedRing(8, 16)
+    got = r.try_acquire(3)
+    assert got is not None and len(got) == 3
+    assert r.free_slots + r.held_slots == 8
+    r.release(got)
+    assert r.free_slots == 8
+    with pytest.raises(ValueError):
+        r.release(got)  # already released
+
+
+def test_ring_watermark_hysteresis():
+    # 8 slots, low=1 (floor 0.125*8), high=4: draining to <=1 free engages
+    # backpressure; it clears only once >=4 slots are free again.
+    r = PinnedRing(8, 16, low_watermark=0.125, high_watermark=0.5)
+    a = r.try_acquire(4)
+    b = r.try_acquire(3)  # 1 free -> at the low watermark
+    assert a is not None and b is not None
+    assert r.backpressured
+    assert r.try_acquire(1) is None  # stalled despite a free slot
+    r.release(b[:2])  # 3 free: still below the high watermark
+    assert r.backpressured and r.try_acquire(1) is None
+    r.release(b[2:])  # 4 free: hysteresis clears
+    assert not r.backpressured
+    assert r.try_acquire(1) is not None
+
+
+def test_ring_oversized_acquire_stalls_and_data_roundtrips():
+    r = PinnedRing(4, 8)
+    assert r.try_acquire(5) is None  # never satisfiable this instant
+    r.backpressured = False  # reset for the data check
+    s = r.try_acquire(2)
+    payload = bytes(range(8))
+    r.stage(s[0], payload)
+    assert r.read(s[0]) == payload
+    with pytest.raises(ValueError):
+        r.stage(s[1], bytes(9))  # exceeds slot_bytes
+
+
+# ---------------------------------------------------------------------------
+# media devices: cost model + deterministic queue contention
+# ---------------------------------------------------------------------------
+
+
+def test_device_catalog_and_service_times():
+    assert {"hbm", "host_dram_pcie", "cxl", "nvme"} <= set(DEVICES)
+    host = get_device("host_dram_pcie")
+    # Service time = fixed + bytes/bw, monotone in bytes.
+    assert host.service_time_s(0) == pytest.approx(host.fixed_latency_s)
+    assert host.service_time_s(1 << 20) > host.service_time_s(1 << 10)
+    # HBM is strictly the faster medium for any transfer.
+    hbm = get_device("hbm")
+    assert hbm.service_time_s(1 << 20) < host.service_time_s(1 << 20)
+    with pytest.raises(KeyError):
+        get_device("tape")
+
+
+def test_queue_depth_contention_and_determinism():
+    nvme = get_device("nvme")
+    q1 = MediaQueue(get_device("host_dram_pcie"))  # depth 4
+    # Submitting more transfers than the queue depth at the same instant
+    # makes the excess wait behind the earliest-finishing channel.
+    for _ in range(4):
+        q1.submit(1 << 20, now=0.0)
+    assert q1.queue_wait_s == 0.0
+    _, done = q1.submit(1 << 20, now=0.0)
+    assert q1.queue_wait_s > 0.0
+    assert done > nvme.fixed_latency_s  # finished strictly after its wait
+
+    # Determinism: identical submission sequences -> identical accounting.
+    def run():
+        q = MediaQueue(get_device("cxl"))
+        for i in range(10):
+            q.submit((i + 1) * 4096, now=i * 1e-5, write=i % 2 == 0)
+        return q.busy_s, q.queue_wait_s, q.bytes_total
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# async pipeline vs serial oracle: bit-identical final placement + content
+# ---------------------------------------------------------------------------
+
+
+def test_async_pipeline_matches_serial_oracle():
+    for i, rng in cases(8):
+        serial, asyn = make_cache(), make_cache(async_migration=True, ring_slots=8)
+        n_pages = draw_int(rng, 6, serial.n_regions)
+        fill_seed = draw_int(rng, 0, 2**31 - 1)
+        fill_cache(serial, np.random.default_rng(fill_seed), n_pages)
+        fill_cache(asyn, np.random.default_rng(fill_seed), n_pages)
+        for _ in range(draw_int(rng, 1, 3)):
+            live = np.where(serial._page_exists)[0]
+            m = draw_int(rng, 1, len(live))
+            rids = rng.choice(live, size=m, replace=False)
+            dsts = np.array(
+                [rng.choice([t for t in (WARM, COLD, HOST8, HOST4)
+                             if t != serial.physical[r]]) for r in rids], np.int64)
+            serial.migrate_batch(rids, dsts)
+            queued = asyn.pipeline.submit(asyn.plan_cohorts(rids, dsts))
+            ticks = 0
+            while asyn.pipeline.busy:
+                asyn.pipeline.tick()
+                ticks += 1
+                assert ticks < 10 * queued + 50, "pipeline wedged"
+            assert_same_state(serial, asyn)
+
+
+def test_pipeline_survives_tiny_ring_and_credit_starvation():
+    """A 4-slot ring forces 2-page chunking; a competing credit holder
+    (another tierset's migration stream sharing the staging arena) starves
+    the stage phase, which must stall — never drop — and resume once the
+    credits come back. Result bit-matches the oracle."""
+    serial, asyn = make_cache(warm_frac=1.0), make_cache(
+        async_migration=True, ring_slots=4, warm_frac=1.0)
+    fill_cache(serial, np.random.default_rng(5), 24)
+    fill_cache(asyn, np.random.default_rng(5), 24)
+    rids = np.where(serial._page_exists)[0]
+    dsts = np.where(np.arange(rids.size) % 2 == 0, HOST8, HOST4).astype(np.int64)
+    serial.migrate_batch(rids, dsts)
+
+    hold = asyn.staging_ring.try_acquire(3)  # competing producer
+    asyn.pipeline.submit(asyn.plan_cohorts(rids, dsts))
+    for _ in range(5):
+        assert not asyn.pipeline.tick()  # starved: no phase can progress
+    assert asyn.staging_ring.stalls > 0
+    assert asyn.pipeline.pages_moved == 0
+    asyn.staging_ring.release(hold)  # credits return; hysteresis clears
+    while asyn.pipeline.busy:
+        asyn.pipeline.tick()
+    assert_same_state(serial, asyn)
+    assert asyn.pipeline.cohorts_done >= 12  # chunked into 2-page cohorts
+
+
+def test_window_boundary_is_non_blocking_with_inflight_cohort():
+    """end_window in async mode returns with cohorts still in flight;
+    telemetry keeps folding, appends keep landing, and the eventual drain
+    reconciles desired placement with physical reality."""
+    c = make_cache(async_migration=True, ring_slots=8, warm_frac=1.0)
+    rng = np.random.default_rng(7)
+    fill_cache(c, rng, 24)
+    counts = np.zeros(c.n_regions)
+    live = np.where(c._page_exists)[0]
+    counts[live[:4]] = 1000.0  # 4 hot pages; the rest should sink tiers
+    c.manager.record_access_counts(counts)
+    plan, queued = c.end_window()
+    assert queued > 0
+    assert c.pipeline.busy, "boundary should not have blocked"
+    from repro.serving.kv_cache import INFLIGHT
+    c.pipeline.tick()  # first decode step stages the head cohort
+    assert (c.physical == INFLIGHT).any()
+    # Mid-flight work: telemetry folds (in-flight pages excluded)...
+    c.record_telemetry({
+        "warm": jnp.zeros((c.la, c.bs, c.max_pages)),
+        "cold": jnp.zeros((c.la, c.bs, c.max_pages)),
+    })
+    # ...and decode-step ticks retire migration phases.
+    ticks = 0
+    while c.pipeline.busy:
+        c.pipeline.tick()
+        ticks += 1
+        assert ticks < 200
+    assert ticks > 1  # genuinely spread over multiple steps
+    assert not (c.physical == INFLIGHT).any()
+    ex = c._page_exists
+    np.testing.assert_array_equal(c.physical[ex], c.manager.placement[ex])
+    check_table_invariants(c)
+    # The serial oracle (same seeds, async off) lands identical placements.
+    s = make_cache(async_migration=False, ring_slots=8, warm_frac=1.0)
+    fill_cache(s, np.random.default_rng(7), 24)
+    s.manager.record_access_counts(counts.copy())
+    s.end_window()
+    np.testing.assert_array_equal(c.physical, s.physical)
+
+
+def test_media_accounting_deterministic_and_reported():
+    """Same scenario twice -> identical per-device charges; the window TCO
+    report (WindowStats) carries the per-device bytes/seconds."""
+    def run():
+        c = make_cache(async_migration=True, ring_slots=8, warm_frac=1.0)
+        fill_cache(c, np.random.default_rng(3), 24)
+        counts = np.zeros(c.n_regions)
+        counts[np.where(c._page_exists)[0][:4]] = 500.0
+        c.manager.record_access_counts(counts)
+        c.end_window()
+        c.drain_migrations()
+        ws = c.manager.history[-1]
+        return ws.media_bytes_by_device, ws.media_s_by_device, c.pipeline.media_busy_s()
+    a, b = run(), run()
+    assert a == b
+    bytes_by_dev, s_by_dev, executed = a
+    assert bytes_by_dev, "window TCO report should carge media traffic"
+    assert any(v > 0 for v in bytes_by_dev.values())
+    assert set(bytes_by_dev) == set(s_by_dev)
+    assert any(v > 0 for v in executed.values())
+    # Host-bound demotions must bill the PCIe swap device specifically.
+    assert executed.get("host_dram_pcie", 0.0) > 0.0
+
+
+def test_contention_pressure_inflates_planning_latencies():
+    mgr = make_manager("6T-AM-0.5", 32)
+    base = mgr.contended_latencies_s().copy()
+    mgr.note_media_charges({"host_dram_pcie": 10.0}, window_s=10.0)  # rho=1
+    inflated = mgr.contended_latencies_s()
+    host_idx = [i for i, n in enumerate(mgr._dev_names) if n == "host_dram_pcie"]
+    hbm_idx = [i for i, n in enumerate(mgr._dev_names) if n == "hbm"]
+    assert host_idx and hbm_idx
+    assert all(inflated[i] > base[i] for i in host_idx)
+    assert all(inflated[i] == base[i] for i in hbm_idx)
+
+
+# ---------------------------------------------------------------------------
+# tenant quotas on the serving cache's device pools
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_quota_caps_warm_residency_on_append():
+    # Warm pool has 8 slots; tenant 0 may hold 3, tenant 1 the rest.
+    c = make_cache(warm_frac=0.25, tenant_quota={"warm": {0: 3, 1: 5}})
+    assert c._alloc["warm"].capacity == 8
+    c.set_slot_tenant(0, 0)
+    c.set_slot_tenant(1, 1)
+    rng = np.random.default_rng(0)
+    kv, hd = CFG.n_kv_heads, CFG.head_dim_()
+    # Tenant 0 floods slot 0 with pages: only 3 may sit warm.
+    entries = [(la, 0, pg) for la in range(c.la) for pg in range(6)]
+    k = rng.normal(0, 1, (len(entries), c.pt, kv, hd)).astype(np.float32)
+    c.append_pages(entries, jnp.asarray(k), jnp.asarray(k * 0.3))
+    t0_warm = int(((c.physical == WARM) & c._page_exists & c.tenant_mask(0)).sum())
+    assert t0_warm == 3
+    assert c._alloc["warm"].used_by(0) == 3
+    # Tenant 1 still gets warm slots — tenant 0 could not exhaust the pool.
+    entries1 = [(la, 1, pg) for la in range(c.la) for pg in range(2)]
+    k1 = rng.normal(0, 1, (len(entries1), c.pt, kv, hd)).astype(np.float32)
+    c.append_pages(entries1, jnp.asarray(k1), jnp.asarray(k1 * 0.3))
+    t1_warm = int(((c.physical == WARM) & c._page_exists & c.tenant_mask(1)).sum())
+    assert t1_warm == 4
+    check_table_invariants(c)
+
+
+def test_tenant_quota_bounds_promotions_in_migrate_batch():
+    c = make_cache(warm_frac=0.5, tenant_quota={"warm": {0: 2, 1: 14}})
+    c.set_slot_tenant(0, 0)
+    c.set_slot_tenant(1, 1)
+    fill_cache(c, np.random.default_rng(2), 20)
+    # Push everything cold, then ask for mass promotion of tenant 0's pages.
+    live = np.where(c._page_exists)[0]
+    c.migrate_batch(live, np.full(live.size, COLD, np.int64))
+    mine = np.where(c._page_exists & c.tenant_mask(0))[0]
+    c.migrate_batch(mine, np.full(mine.size, WARM, np.int64))
+    t0_warm = int(((c.physical == WARM) & c.tenant_mask(0) & c._page_exists).sum())
+    assert t0_warm <= 2  # quota held; overflow spilled back to cold
+    assert int(((c.physical == COLD) & c.tenant_mask(0) & c._page_exists).sum()) > 0
+    check_table_invariants(c)
+    # Pool-level accounting agrees with the placement vector.
+    assert c._alloc["warm"].used_by(0) == t0_warm
+
+
+def test_cold_quota_batch_demotion_spills_to_host():
+    """A batched WARM->COLD demotion for a tenant at its cold quota must
+    spill the overflow to the int4 host tier (like the per-page path), not
+    blow up mid-cohort with a quota-exhausted alloc."""
+    c = make_cache(warm_frac=1.0, tenant_quota={"cold": {0: 2, 1: 30}})
+    c.set_slot_tenant(0, 0)
+    c.set_slot_tenant(1, 0)
+    fill_cache(c, np.random.default_rng(6), 16)  # all land warm
+    live = np.where(c._page_exists)[0]
+    moved = c.migrate_batch(live, np.full(live.size, COLD, np.int64))
+    assert moved == live.size
+    assert int(((c.physical == COLD) & c._page_exists).sum()) == 2
+    assert int(((c.physical == HOST4) & c._page_exists).sum()) == live.size - 2
+    assert c._alloc["cold"].used_by(0) == 2
+    check_table_invariants(c)
+
+
+def test_quota_requires_known_tenant():
+    c = make_cache(tenant_quota={"warm": {1: 4}})
+    c.set_slot_tenant(0, 0)  # tenant 0 has no quota entry
+    with pytest.raises(KeyError):
+        c.append_page(0, 0, 0,
+                      jnp.zeros((c.pt, CFG.n_kv_heads, CFG.head_dim_())),
+                      jnp.zeros((c.pt, CFG.n_kv_heads, CFG.head_dim_())))
+
+
+# ---------------------------------------------------------------------------
+# per-slot sequence lengths in the tiered engine
+# ---------------------------------------------------------------------------
+
+
+def _tiny_model():
+    import jax
+    from repro.models import Model
+
+    cfg = ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16,
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _run_engine(model, params, prompts, batch_slots, window_steps=1000,
+                max_new=6, async_migration=False):
+    from repro.serving import TieredEngine
+
+    eng = TieredEngine(
+        model, params, batch_slots=batch_slots, page_tokens=8, max_seq_len=64,
+        recent_window=16,
+        ts=TierScapeRunConfig(enabled=True, policy="analytical",
+                              window_steps=window_steps,
+                              async_migration=async_migration),
+    )
+    reqs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    stats = eng.run(max_steps=200)
+    return eng, reqs, stats
+
+
+def test_engine_serves_unequal_prompt_lengths():
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(4)
+    pa = rng.integers(1, cfg.vocab_size, 21)
+    pb = rng.integers(1, cfg.vocab_size, 9)
+    # Batched run with unequal lengths (no migration windows: window huge).
+    eng, (ra, rb), stats = _run_engine(model, params, [pa, pb], batch_slots=2)
+    assert stats.completed == 2
+    assert len(ra.out_tokens) >= 6 and len(rb.out_tokens) >= 6
+    # Per-slot positions: each request decodes exactly like a solo run of
+    # the same prompt (rows are independent through attention + pools).
+    _, (sa,), _ = _run_engine(model, params, [pa], batch_slots=1)
+    _, (sb,), _ = _run_engine(model, params, [pb], batch_slots=1)
+    assert ra.out_tokens == sa.out_tokens, "long prompt diverged from solo run"
+    assert rb.out_tokens == sb.out_tokens, "short prompt diverged from solo run"
+
+
+def test_engine_overlaps_migration_with_decode():
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, cfg.vocab_size, 48) for _ in range(2)]
+    eng, _, stats = _run_engine(
+        model, params, prompts, batch_slots=2, window_steps=4, max_new=12,
+        async_migration=True,
+    )
+    assert stats.completed == 2
+    assert stats.migrations > 0
+    assert stats.overlapped_steps > 0, "no decode step retired during migration"
+    assert not eng.cache.pipeline.busy  # run() drains stragglers
+
+
+# ---------------------------------------------------------------------------
+# arbiter: per-device bandwidth as a shared, rationed resource
+# ---------------------------------------------------------------------------
+
+
+def _arbiter(budget=None, windows=3, n_regions=64, seed=0):
+    managers = [make_manager("6T-AM-0.5", n_regions) for _ in range(2)]
+    arb = BudgetArbiter(
+        [TenantSpec("a", sla_weight=2.0), TenantSpec("b")],
+        managers, alpha=0.5, media_bw_budget_bytes=budget,
+    )
+    rng = np.random.default_rng(seed)
+    for w in range(windows):
+        for m in managers:
+            counts = np.zeros(n_regions)
+            hot = rng.choice(n_regions, size=8, replace=False)
+            counts[hot] = rng.integers(100, 1000, 8)
+            m.record_access_counts(counts)
+        arb.end_window()
+    return arb
+
+
+def test_arbiter_defers_moves_when_device_bandwidth_saturates():
+    free = _arbiter(budget=None)
+    assert all(ws.deferred_migrations == 0 for ws in free.history)
+    traffic = [ws.media_bytes_by_device for ws in free.history]
+    assert any(t.get("host_dram_pcie", 0) > 0 for t in traffic)
+    # Give the PCIe link a budget far below the unconstrained traffic.
+    peak = max(t.get("host_dram_pcie", 0) for t in traffic)
+    capped = _arbiter(budget={"host_dram_pcie": peak / 8})
+    assert any(ws.deferred_migrations > 0 for ws in capped.history)
+    for ws in capped.history:
+        assert ws.media_bytes_by_device.get("host_dram_pcie", 0.0) <= peak / 8 + 1e-9
+
+
+def test_simulator_replays_media_queues():
+    from repro.core import simulator
+
+    wl = simulator.gaussian_kv(n_regions=256, accesses_per_window=20_000)
+    m = make_manager("6T-AM-0.5", 256)
+    r = simulator.simulate(wl, m, windows=6, seed=1)
+    assert r.media_bytes_by_device, "simulator should replay media traffic"
+    assert sum(r.media_bytes_by_device.values()) > 0
+    assert all(v >= 0 for v in r.media_busy_s_by_device.values())
+    # Determinism of the replay.
+    m2 = make_manager("6T-AM-0.5", 256)
+    r2 = simulator.simulate(wl, m2, windows=6, seed=1)
+    assert r.media_bytes_by_device == r2.media_bytes_by_device
+    assert r.media_busy_s_by_device == r2.media_busy_s_by_device
