@@ -1,0 +1,182 @@
+"""Consolidated, baseline-driven CI perf guard.
+
+One registry of guards replaces the former copy-pasted per-benchmark check
+scripts (``check_dispatch_baseline.py`` / ``check_media_baseline.py``): each
+entry names a committed baseline JSON under ``benchmarks/baselines/``, a
+runner that produces the current metrics (shapes derived from the baseline
+where applicable), and a check function. ``benchmarks/run.py
+--check-baselines`` drives the whole matrix and exits non-zero on any
+regression.
+
+Check semantics per guard:
+
+  migration_dispatch — kernel-dispatch counts are deterministic, so the
+    comparison is exact: batched dispatches must not exceed the baseline and
+    the loop/batched ratio must not shrink. Bench sizes are the baseline's
+    own keys (add a size to the baseline and CI covers it automatically).
+  media_overlap — async placements must stay bit-identical to the serial
+    oracle, overlap must stay > 0, bytes must transit the host swap device,
+    and overlap efficiency may drift at most ``EFFICIENCY_BAND`` below the
+    baseline (plan sizes wobble a little across platforms/jax versions).
+  prefetch_hitrate — prefetched placements must stay bit-identical to the
+    no-prefetch oracle, decode-visible swap-in stalls must be reduced, at
+    least one page must be prefetched, and the hit rate must stay >= 0.5
+    and within ``HIT_RATE_BAND`` of the baseline.
+
+Refresh any baseline by re-running its benchmark with ``--json`` and
+committing the result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, List
+
+from benchmarks.common import Csv
+
+EFFICIENCY_BAND = 0.25
+HIT_RATE_BAND = 0.15
+
+
+# ---------------------------------------------------------------------------
+# check functions (current results vs committed baseline -> list of errors)
+# ---------------------------------------------------------------------------
+
+
+def check_dispatch(current: dict, baseline: dict) -> List[str]:
+    errors = []
+    for size, base in sorted(baseline.items()):
+        cur = current.get(size)
+        if cur is None:
+            errors.append(f"size {size}: missing from current results")
+            continue
+        if cur["dispatches_batched"] > base["dispatches_batched"]:
+            errors.append(
+                f"size {size}: batched dispatches regressed "
+                f"{base['dispatches_batched']} -> {cur['dispatches_batched']}"
+            )
+        if cur["dispatch_ratio"] < base["dispatch_ratio"]:
+            errors.append(
+                f"size {size}: dispatch ratio regressed "
+                f"{base['dispatch_ratio']:.1f}x -> {cur['dispatch_ratio']:.1f}x"
+            )
+    return errors
+
+
+def check_media(current: dict, baseline: dict) -> List[str]:
+    errors = []
+    cur = current.get("overlap")
+    base = baseline.get("overlap")
+    if cur is None or base is None:
+        return ["missing 'overlap' section in current or baseline results"]
+    if not cur.get("placements_identical", False):
+        errors.append("async placements diverged from the serial oracle")
+    if cur.get("overlapped_steps", 0) < 1:
+        errors.append("no decode steps retired during migration (overlap=0)")
+    if cur.get("host_bytes", 0) <= 0:
+        errors.append("no bytes transited the host swap device")
+    floor = base["overlap_efficiency"] - EFFICIENCY_BAND
+    if cur.get("overlap_efficiency", 0.0) < floor:
+        errors.append(
+            f"overlap efficiency regressed: {cur.get('overlap_efficiency'):.2f} "
+            f"< baseline {base['overlap_efficiency']:.2f} - {EFFICIENCY_BAND}"
+        )
+    return errors
+
+
+def check_prefetch(current: dict, baseline: dict) -> List[str]:
+    errors = []
+    cur = current.get("prefetch")
+    base = baseline.get("prefetch")
+    if cur is None or base is None:
+        return ["missing 'prefetch' section in current or baseline results"]
+    if not cur.get("placements_identical", False):
+        errors.append("prefetch placements diverged from the no-prefetch oracle")
+    if not cur.get("stall_reduced", False):
+        errors.append("prefetch did not reduce decode-visible swap-in stalls")
+    if cur.get("pages_prefetched", 0) < 1:
+        errors.append("no pages were ever prefetched")
+    floor = max(0.5, base["hit_rate"] - HIT_RATE_BAND)
+    if cur.get("hit_rate", 0.0) < floor:
+        errors.append(
+            f"prefetch hit rate regressed: {cur.get('hit_rate', 0.0):.2f} "
+            f"< floor {floor:.2f} (baseline {base['hit_rate']:.2f})"
+        )
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# guard registry
+# ---------------------------------------------------------------------------
+
+
+def _run_dispatch(results: dict, baseline: dict) -> None:
+    from benchmarks import migration_batch
+
+    sizes = tuple(sorted(int(k) for k in baseline))
+    migration_batch.run(Csv("migration"), sizes=sizes, results=results)
+
+
+def _run_media(results: dict, baseline: dict) -> None:
+    from benchmarks import media_pipeline
+
+    media_pipeline.run(Csv("media"), results)
+
+
+def _run_prefetch(results: dict, baseline: dict) -> None:
+    from benchmarks import prefetch_hitrate
+
+    prefetch_hitrate.run(Csv("prefetch"), results)
+
+
+@dataclasses.dataclass(frozen=True)
+class Guard:
+    name: str
+    baseline_file: str
+    run: Callable[[dict, dict], None]  # (results out, baseline in)
+    check: Callable[[dict, dict], List[str]]
+
+
+GUARDS = (
+    Guard("migration_dispatch", "migration_dispatch.json", _run_dispatch, check_dispatch),
+    Guard("media_overlap", "media_overlap.json", _run_media, check_media),
+    Guard("prefetch_hitrate", "prefetch_hitrate.json", _run_prefetch, check_prefetch),
+)
+
+
+def check_baselines(
+    baseline_dir: str = "benchmarks/baselines", out_dir: str | None = None
+) -> int:
+    """Run every registered guard; returns a process exit code (0 = all OK).
+    ``out_dir`` dumps each guard's current metrics as ``<name>.json`` (the
+    CI artifact)."""
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    failures: Dict[str, List[str]] = {}
+    for g in GUARDS:
+        with open(os.path.join(baseline_dir, g.baseline_file)) as f:
+            baseline = json.load(f)
+        results: dict = {}
+        g.run(results, baseline)
+        if out_dir:
+            with open(os.path.join(out_dir, f"{g.name}.json"), "w") as f:
+                json.dump(results, f, indent=2, sort_keys=True)
+        errors = g.check(results, baseline)
+        if errors:
+            failures[g.name] = errors
+            print(f"FAIL {g.name}: regression vs {g.baseline_file}")
+            for e in errors:
+                print(f"  {e}")
+        else:
+            print(f"OK {g.name} (vs {g.baseline_file})")
+    if failures:
+        print(f"{len(failures)}/{len(GUARDS)} perf guards failed")
+        return 1
+    print(f"all {len(GUARDS)} perf guards passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(check_baselines())

@@ -1,0 +1,149 @@
+"""Prefetch/readahead benchmark: hide swap-in latency behind decode.
+
+Drives a ``TieredKVCache`` (async media pipeline) through a skew-flip
+workload — hot set A on device tiers, cold set B demoted to the int4 host
+tier, then the skew flips and B ramps hot — twice: once with the
+warming-page predictor + speculative staging enabled, once reactive-only
+(the no-prefetch oracle). Reports:
+
+  * prefetch hit rate — staged pages the boundary plan then moved (their
+    demand stage pays no host read) over everything staged,
+  * decode-visible swap-in stall — source-read service time paid at window
+    boundaries for host-media demand stages (``pipeline.demand_swapin_s``);
+    prefetch must strictly reduce it,
+  * placement equivalence — final ``physical`` must be bit-identical to the
+    no-prefetch oracle (speculation hides latency, never changes policy),
+  * mispredict billing — speculative bytes/busy time billed on the shared
+    device queues whether or not the prediction landed.
+
+Rows: ``prefetch/overlap`` plus per-device speculative charges. CLI:
+``--json PATH`` dumps the metrics for the consolidated CI perf guard
+(``benchmarks/run.py --check-baselines`` vs
+``benchmarks/baselines/prefetch_hitrate.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import Csv
+from repro.configs.base import ModelConfig
+from repro.core.manager import ManagerConfig
+from repro.serving.kv_cache import WARM, TieredKVCache
+
+CFG = ModelConfig(
+    name="bench", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16,
+)
+
+# Skew-flip schedule (per-window access counts for sets A and B): A hot
+# while B idles in the host tier, then the skew flips and B ramps. Mirrors
+# ``simulator.skew_flip`` at cache scale.
+SCHEDULE = [
+    (600, 0), (600, 0), (600, 60), (600, 240), (30, 600), (10, 600), (5, 600),
+]
+TICKS_PER_WINDOW = 10  # simulated decode steps between boundaries
+
+
+def _make_cache(prefetch: bool) -> TieredKVCache:
+    cache = TieredKVCache(
+        CFG, 2, 2, 8, 128, recent_window=16,
+        manager_cfg=ManagerConfig(policy="analytical", alpha=0.4),
+        warm_frac=0.5, async_migration=True, ring_slots=64,
+        prefetch=prefetch, prefetch_max_pages=16,
+    )
+    rng = np.random.default_rng(0)
+    coords = [
+        (la, sl, pg)
+        for la in range(cache.la) for sl in range(cache.bs)
+        for pg in range(cache.max_pages)
+    ]
+    k = rng.normal(0, 1, (len(coords), cache.pt, CFG.n_kv_heads, CFG.head_dim_()))
+    k = k.astype(np.float32)
+    cache.append_pages(coords, jnp.asarray(k), jnp.asarray(k * 0.3))
+    return cache
+
+
+def _drive(prefetch: bool) -> TieredKVCache:
+    cache = _make_cache(prefetch)
+    set_a = np.where(cache.physical == WARM)[0]  # landed fast at ingest
+    set_b = np.setdiff1d(np.where(cache._page_exists)[0], set_a)
+    for hot_a, hot_b in SCHEDULE:
+        counts = np.zeros(cache.n_regions)
+        counts[set_a] = hot_a
+        counts[set_b] = hot_b
+        cache.manager.record_access_counts(counts)
+        # Mid-window decode steps: demand cohorts tick first, idle steps go
+        # to speculative staging (exactly the engine's decode loop).
+        for _ in range(TICKS_PER_WINDOW):
+            if cache.pipeline.busy:
+                cache.pipeline.tick()
+            else:
+                cache.prefetch_tick()
+        cache.end_window()
+        cache.drain_migrations()
+    return cache
+
+
+def run(csv: Csv, results: dict | None = None) -> None:
+    # No hard asserts here: regressions must surface through the
+    # consolidated perf guard's checks (baseline_guard.check_prefetch), not
+    # abort the whole benchmark suite mid-run.
+    reactive = _drive(prefetch=False)
+    spec = _drive(prefetch=True)
+
+    pipe = spec.pipeline
+    identical = bool(np.array_equal(reactive.physical, spec.physical))
+    stall_spec = pipe.demand_swapin_s
+    stall_reactive = reactive.pipeline.demand_swapin_s
+    hit_rate = pipe.prefetch_hit_rate()
+
+    csv.add(
+        "overlap", stall_spec * 1e6,
+        f"hit_rate={hit_rate:.2f} staged={pipe.prefetch_staged} "
+        f"hits={pipe.prefetch_hits} misses={pipe.prefetch_misses} "
+        f"stall_reactive_us={stall_reactive * 1e6:.1f} "
+        f"stall_prefetch_us={stall_spec * 1e6:.1f} "
+        f"placements_identical={identical}",
+    )
+    for dev, read_s in sorted(pipe.prefetch_read_s_by_device.items()):
+        csv.add(
+            f"spec-{dev}", read_s * 1e6,
+            f"speculative_bytes={pipe.prefetch_bytes_by_device[dev]} "
+            f"(billed, hits and misses alike)",
+        )
+    if results is not None:
+        results["prefetch"] = {
+            "hit_rate": float(hit_rate),
+            "pages_prefetched": int(pipe.prefetch_staged),
+            "hits": int(pipe.prefetch_hits),
+            "misses": int(pipe.prefetch_misses),
+            "stall_s_reactive": float(stall_reactive),
+            "stall_s_prefetch": float(stall_spec),
+            "stall_reduced": bool(stall_spec < stall_reactive),
+            "placements_identical": identical,
+            "speculative_bytes": int(pipe.prefetch_bytes),
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="dump metrics for CI")
+    args = ap.parse_args()
+    csv = Csv("prefetch")
+    results: dict = {}
+    run(csv, results)
+    csv.emit()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

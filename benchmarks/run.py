@@ -9,8 +9,14 @@
   serving    tiered-KV engine vs dense decode on a real model
   migration  batched cohort executor vs per-page loop (dispatches + time)
   media      async media pipeline: decode/migration overlap + device charges
+  prefetch   speculative readahead: hit rate + swap-in stall reduction
   multitenant  N tenants sharing pools under the BudgetArbiter (6T vs 2T)
   roofline   per-(arch x shape x mesh) dry-run roofline summary
+
+``--check-baselines`` runs the consolidated perf-guard matrix instead
+(``benchmarks/baseline_guard.py``): every registered benchmark is compared
+against its committed baseline under ``benchmarks/baselines/`` and the
+process exits non-zero on any regression — the single CI perf-guard step.
 """
 
 from __future__ import annotations
@@ -27,6 +33,7 @@ from benchmarks import (
     media_pipeline,
     migration_batch,
     multitenant,
+    prefetch_hitrate,
     roofline_report,
     serving_tiered,
 )
@@ -40,6 +47,7 @@ TABLES = {
     "serving": serving_tiered.run,
     "migration": migration_batch.run,
     "media": media_pipeline.run,
+    "prefetch": prefetch_hitrate.run,
     "multitenant": multitenant.run,
     "roofline": roofline_report.run,
 }
@@ -48,7 +56,27 @@ TABLES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated table names")
+    ap.add_argument(
+        "--check-baselines", action="store_true",
+        help="run the consolidated perf-guard matrix vs benchmarks/baselines/ "
+             "and exit non-zero on regression",
+    )
+    ap.add_argument(
+        "--baseline-dir", default="benchmarks/baselines",
+        help="baseline directory for --check-baselines",
+    )
+    ap.add_argument(
+        "--guard-out", default=None,
+        help="with --check-baselines: dump each guard's current metrics "
+             "as <name>.json into this directory (the CI artifact)",
+    )
     args = ap.parse_args()
+    if args.check_baselines:
+        from benchmarks.baseline_guard import check_baselines
+
+        raise SystemExit(
+            check_baselines(baseline_dir=args.baseline_dir, out_dir=args.guard_out)
+        )
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived")
     for name in names:

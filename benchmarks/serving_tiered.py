@@ -35,6 +35,10 @@ def run(csv: Csv) -> None:
     csv.add("dense-decode", dense_us, f"kv_bytes={dense_bytes}")
 
     for alpha in (0.5, 0.1):
+        # Runs the async-migration default: window boundaries submit cohorts
+        # and return, decode steps tick them, and run() drains stragglers —
+        # so decode_s/steps prices the overlapped path, not a blocked
+        # boundary, and stats.migrations still counts every page moved.
         eng = TieredEngine(
             model, params, batch_slots=1, page_tokens=8, max_seq_len=96,
             recent_window=16,

@@ -33,13 +33,19 @@ def main() -> None:
     ap.add_argument("--policy", default="analytical",
                     choices=["analytical", "waterfall"])
     ap.add_argument("--slots", type=int, default=2)
-    ap.add_argument("--async-migration", action="store_true",
-                    help="overlap migration cohorts with decode steps via "
-                         "the backing-media pipeline (non-blocking window "
-                         "boundaries)")
+    ap.add_argument("--serial-migration", action="store_true",
+                    help="opt back into blocking window boundaries (async "
+                         "overlapped migration is the default; this runs "
+                         "the serial equivalence oracle instead)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="speculatively stage warming host pages mid-window "
+                         "so boundary promotions skip the swap-in read "
+                         "(async path only)")
     ap.add_argument("--vary-prompts", action="store_true",
                     help="submit unequal prompt lengths (per-slot decode)")
     args = ap.parse_args()
+    if args.prefetch and args.serial_migration:
+        ap.error("--prefetch requires the async path; drop --serial-migration")
 
     cfg = configs.get_smoke(args.arch)
     model = Model(cfg)
@@ -51,7 +57,8 @@ def main() -> None:
         recent_window=16,
         ts=TierScapeRunConfig(enabled=True, policy=args.policy,
                               alpha=args.alpha, window_steps=8,
-                              async_migration=args.async_migration),
+                              async_migration=not args.serial_migration,
+                              prefetch=args.prefetch),
     )
 
     rng = np.random.default_rng(0)
@@ -72,6 +79,9 @@ def main() -> None:
           f"{stats.steps} engine steps ({wall:.1f}s wall)")
     print(f"windows={stats.windows} migrations={stats.migrations} "
           f"daemon_s={stats.daemon_s:.2f} overlapped_steps={stats.overlapped_steps}")
+    if args.prefetch:
+        print(f"prefetch: staged={stats.prefetch_staged} "
+              f"hits={stats.prefetch_hits} misses={stats.prefetch_misses}")
     busy = {d: round(s * 1e6, 2)
             for d, s in eng.cache.pipeline.media_busy_s().items() if s > 0}
     if busy:

@@ -9,7 +9,18 @@ parallelism and TierScape settings) on top.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional, Tuple
+
+
+def _default_async_migration() -> bool:
+    """Default for ``TierScapeRunConfig.async_migration``: True (the async
+    media pipeline, equivalence-tested and perf-guarded since PR 3, is now
+    the default path). ``REPRO_ASYNC_MIGRATION=0`` is the escape hatch back
+    to the blocking window-boundary oracle; the nightly soak job exports
+    ``REPRO_ASYNC_MIGRATION=1`` to force the async path explicitly."""
+    v = os.environ.get("REPRO_ASYNC_MIGRATION", "1").strip().lower()
+    return v not in ("0", "false", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,7 +200,18 @@ class TierScapeRunConfig:
     cold_tier: str = "C9"
     # Backing-media subsystem: route window migration plans through the
     # async double-buffered pipeline (non-blocking window boundaries) and
-    # size its pinned staging ring. Off = blocking migrate_batch (the
+    # size its pinned staging ring. Defaults on (env-overridable, see
+    # ``_default_async_migration``); off = blocking migrate_batch (the
     # equivalence oracle).
-    async_migration: bool = False
+    async_migration: bool = dataclasses.field(
+        default_factory=_default_async_migration
+    )
     media_ring_slots: int = 64
+    # Speculative prefetch/readahead on the media pipeline: mid-window,
+    # host-resident pages whose access rate is rising toward the promotion
+    # frontier are staged through a reserved slice of the pinned ring so a
+    # window-boundary promotion commits without paying the swap-in read.
+    # Requires the async pipeline; placements stay bit-identical to a
+    # prefetch-free run (speculation hides latency, never changes policy).
+    prefetch: bool = False
+    prefetch_max_pages: int = 8

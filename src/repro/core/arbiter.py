@@ -92,6 +92,11 @@ class ArbiterWindowStats:
     # and moves deferred because a device's window budget was exhausted.
     media_bytes_by_device: Dict[str, float] = dataclasses.field(default_factory=dict)
     deferred_migrations: int = 0
+    # Speculative prefetch traffic recorded mid-window: already moved, so it
+    # consumed the device budgets before any demand move was considered.
+    speculative_bytes_by_device: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
 
 
 class BudgetArbiter:
@@ -134,6 +139,17 @@ class BudgetArbiter:
         self.ledger = TenantLedger([s.name for s in specs], cap)
         self.history: List[ArbiterWindowStats] = []
         self._window = 0
+        self._spec_bytes: Dict[str, float] = {}
+
+    def record_speculative_bytes(self, bytes_by_device: Dict[str, float]) -> None:
+        """Bill mid-window speculative prefetch traffic against the shared
+        per-device bandwidth budgets. The bytes were already moved by the
+        time the window closes, so the upcoming reconcile has that much
+        less headroom for demand migrations on the same device —
+        mispredicted speculation consumes real budget and shows up as
+        deferred demand moves rather than disappearing."""
+        for dev, b in bytes_by_device.items():
+            self._spec_bytes[dev] = self._spec_bytes.get(dev, 0.0) + float(b)
 
     # ----------------------------------------------------------------- window
     def global_budget_usd(self) -> float:
@@ -220,8 +236,10 @@ class BudgetArbiter:
                 tenants=tenant_stats,
                 media_bytes_by_device=media_bytes,
                 deferred_migrations=deferred,
+                speculative_bytes_by_device=dict(self._spec_bytes),
             )
         )
+        self._spec_bytes = {}
         self._window += 1
         return plans
 
@@ -384,6 +402,9 @@ class BudgetArbiter:
         alive = np.ones(tenants.size, bool)
         order = np.lexsort((regions, tenants, keys))  # coldest weighted first
         for dev, budget in self.media_bw_budget_bytes.items():
+            # Speculative prefetch already spent part of this device's
+            # window budget; only the remainder is available to demand moves.
+            budget = max(budget - self._spec_bytes.get(dev, 0.0), 0.0)
             if spend.get(dev, 0.0) <= budget:
                 continue
             for i in order:

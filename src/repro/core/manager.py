@@ -175,6 +175,12 @@ class TierScapeManager:
         self.placement[region_ids[move]] = 0
         return np.where(faulted, lat, 0.0)
 
+    def discount_fault_overhead(self, seconds: float) -> None:
+        """Refund fault latency that was hidden (not avoided): a prefetched
+        region's swap-in happened ahead of its first touch, so the fault's
+        bookkeeping (counts, refault move) stands but its stall does not."""
+        self._fault_overhead_s = max(self._fault_overhead_s - float(seconds), 0.0)
+
     def access_latency_s(self, region_ids: np.ndarray) -> np.ndarray:
         """Latency to access each region under the current placement."""
         src = self.placement[np.atleast_1d(region_ids)]
@@ -189,6 +195,43 @@ class TierScapeManager:
         """Feed back actually-achieved compressibility for tier (1-based)."""
         i = tier_index - 1
         self.measured_ratios[i] = (1 - ema) * self.measured_ratios[i] + ema * ratio
+
+    # ------------------------------------------------------------- prefetch
+    def prefetch_candidates(
+        self, eligible: np.ndarray, top_k: int, max_regions: int
+    ) -> np.ndarray:
+        """Warming-page predictor for speculative prefetch (readahead).
+
+        Mid-window trend detection: a region is a candidate when its access
+        rate in the *accumulating* profile window already exceeds its last
+        closed window (``delta > 0`` — it is warming right now) and its
+        projected hotness (``accum + delta``) ranks within the global
+        top-``top_k`` — i.e. it is rising toward the promotion frontier and
+        this window's placement model will plausibly pull it up-tier.
+        Purely a read of telemetry: calling this never perturbs placement,
+        so a speculative consumer stays bit-identical to a non-speculative
+        run by construction.
+
+        Returns up to ``max_regions`` region ids, hottest-projected first
+        (deterministic: ties broken by region id). Empty until one window
+        has closed — there is no baseline to rise from before that.
+        """
+        if self.telemetry._windows_closed < 1 or max_regions <= 0:
+            return np.empty(0, np.int64)
+        h_now = self.telemetry._accum
+        h_prev = self.telemetry.history[0]
+        delta = h_now - h_prev
+        projected = h_now + np.maximum(delta, 0.0)
+        mask = np.asarray(eligible, bool) & (delta > 0)
+        if not mask.any():
+            return np.empty(0, np.int64)
+        k = int(min(max(top_k, 1), self.n_regions))
+        frontier = np.partition(projected, self.n_regions - k)[self.n_regions - k]
+        cand = np.where(mask & (projected >= frontier))[0]
+        if cand.size == 0:
+            return cand.astype(np.int64)
+        order = np.lexsort((cand, -projected[cand]))
+        return cand[order][:max_regions].astype(np.int64)
 
     # --------------------------------------------------------------- media
     def note_media_charges(

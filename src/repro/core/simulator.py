@@ -189,10 +189,16 @@ class SimResult:
     per_window_slowdown: np.ndarray
     placement_hists: np.ndarray  # (W, N+1)
     fault_hists: np.ndarray  # (W, N+1) faults per source placement
+    # Speculative prefetch replay (``simulate(prefetch=True)``): regions
+    # staged ahead that were / were not touched next window, and the
+    # speculative bytes billed to the media queues (mispredictions included).
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    prefetch_bytes: int = 0
 
 
 def charge_window_faults(
-    manager: TierScapeManager, counts: np.ndarray
+    manager: TierScapeManager, counts: np.ndarray, free_mask=None
 ) -> tuple[float, np.ndarray, np.ndarray]:
     """Ground-truth fault accounting for one window (engine side).
 
@@ -200,6 +206,12 @@ def charge_window_faults(
     demand: E[distinct blocks among k uniform accesses of B blocks] =
     B * (1 - (1 - 1/B)^k)  (4KB-page faults within the 2MB region).
     Returns (fault_overhead_s, per-placement fault histogram, n_blocks).
+
+    ``free_mask`` marks regions whose fault *latency* was hidden (their
+    swap-in was prefetched ahead of the first touch): every piece of fault
+    bookkeeping — counts, histogram, the refault move back to DRAM — runs
+    identically to a prefetch-free window, so placement trajectories and
+    migration billing never diverge; only the stall is refunded.
     """
     bpr = manager.blocks_per_region
     placement_before = manager.placement.copy()
@@ -211,7 +223,12 @@ def charge_window_faults(
     fault_lat_s = manager.fault_back(fault_ids, n_blocks)
     fault_hist = np.zeros(manager.tierset.n_tiers + 1)
     np.add.at(fault_hist, fault_src, n_blocks)
-    return float(fault_lat_s.sum()), fault_hist, n_blocks
+    overhead = float(fault_lat_s.sum())
+    if free_mask is not None:
+        hidden = float(fault_lat_s[free_mask[fault_ids]].sum())
+        manager.discount_fault_overhead(hidden)
+        overhead -= hidden
+    return overhead, fault_hist, n_blocks
 
 
 def replay_plan_media(
@@ -237,6 +254,50 @@ def replay_plan_media(
         manager.note_media_charges(ws.media_s_by_device, window_s)
 
 
+def _prefetch_consume(staged: np.ndarray, counts: np.ndarray):
+    """Window start: resolve last window's speculative staging against the
+    ground-truth accesses. Clears ``staged`` and returns (free_mask for
+    ``charge_window_faults`` — hits whose fault latency was hidden —
+    n_hits, n_misses)."""
+    hit = staged & (counts > 0)
+    hits = int(hit.sum())
+    misses = int((staged & ~hit).sum())
+    staged[:] = False
+    return hit, hits, misses
+
+
+def _prefetch_stage(
+    manager: TierScapeManager,
+    staged: np.ndarray,
+    media_queues: Dict[str, "MediaQueue"],
+    now_s: float,
+    max_regions: int,
+) -> Dict[str, float]:
+    """Mid-window (telemetry recorded, window not yet closed): flag warming
+    compressed regions and bill their speculative reads to each region's
+    backing device immediately — spent whether or not the prediction lands,
+    so mispredictions cannot vanish from the report. The frontier is the
+    current uncompressed (fast) set's size: a region qualifies when its
+    projected hotness would rank it inside that set next window. Returns
+    the per-device speculative bytes billed."""
+    cand = manager.prefetch_candidates(
+        manager.placement > 0,
+        top_k=max(int((manager.placement == 0).sum()), 1),
+        max_regions=max_regions,
+    )
+    out: Dict[str, float] = {}
+    if cand.size:
+        staged[cand] = True
+        src = manager.placement[cand]
+        for lvl in np.unique(src):
+            sel = src == lvl
+            nb = int(manager._stored_bytes[lvl]) * int(sel.sum())
+            dev = manager._dev_names[lvl]
+            media_queues[dev].submit(nb, now=now_s, ops=int(sel.sum()))
+            out[dev] = out.get(dev, 0.0) + nb
+    return out
+
+
 def simulate(
     workload: Workload,
     manager: TierScapeManager,
@@ -244,7 +305,17 @@ def simulate(
     warmup_windows: int = 2,
     seed: int = 0,
     price_media_contention: bool = False,
+    prefetch: bool = False,
+    prefetch_max_regions: int = 64,
 ) -> SimResult:
+    """``prefetch=True`` replays speculative readahead: mid-window, the
+    warming-page predictor flags compressed regions and their speculative
+    reads are billed to the media queues immediately (mispredictions
+    included). A staged region touched next window pays no fault *latency*
+    — the swap-in already happened — but every piece of fault bookkeeping
+    runs unchanged, so placement trajectories, plans and migration billing
+    are identical to a prefetch-free run; only the stall disappears and the
+    speculative read traffic appears."""
     from repro.media.devices import make_queues
 
     rng = np.random.default_rng(seed)
@@ -252,6 +323,8 @@ def simulate(
     assert manager.n_regions == n
     # Backing-media replay: one queue per distinct device in the tierset.
     media_queues = make_queues(d.name for d in manager.tierset.media_devices())
+    staged = np.zeros(n, bool)
+    prefetch_hits = prefetch_misses = prefetch_bytes = 0
 
     slowdowns, savings = [], []
     placement_hists, fault_hists = [], []
@@ -263,7 +336,18 @@ def simulate(
 
     for w in range(windows):
         counts = workload.sample_window(w, rng)
-        fault_overhead_s, fault_hist, n_blocks = charge_window_faults(manager, counts)
+        free_mask = None
+        if prefetch and staged.any():
+            # A hit's swap-in was prefetched mid-window: its fault latency
+            # is hidden, but all fault bookkeeping (and so the placement
+            # trajectory and migration billing) stays bit-identical to a
+            # prefetch-free run.
+            free_mask, h, m_ = _prefetch_consume(staged, counts)
+            prefetch_hits += h
+            prefetch_misses += m_
+        fault_overhead_s, fault_hist, n_blocks = charge_window_faults(
+            manager, counts, free_mask=free_mask
+        )
 
         # Latency distribution: each faulted block pays its tier's fault
         # latency; every other access is a DRAM hit.
@@ -272,10 +356,17 @@ def simulate(
         fault_hists.append(fault_hist)
 
         # --- telemetry + model ---------------------------------------------
+        base_s = workload.compute_s_per_window + counts.sum() * DRAM_ACCESS_US * 1e-6
         manager.record_access_counts(counts)
+        if prefetch:
+            prefetch_bytes += int(sum(
+                _prefetch_stage(
+                    manager, staged, media_queues, w * base_s,
+                    prefetch_max_regions,
+                ).values()
+            ))
         manager.end_window()
 
-        base_s = workload.compute_s_per_window + counts.sum() * DRAM_ACCESS_US * 1e-6
         replay_plan_media(
             manager, media_queues, now_s=w * base_s,
             price_contention=price_media_contention, window_s=base_s,
@@ -323,6 +414,9 @@ def simulate(
         per_window_slowdown=np.array(slowdowns),
         placement_hists=np.stack(placement_hists),
         fault_hists=np.stack(fault_hists),
+        prefetch_hits=prefetch_hits,
+        prefetch_misses=prefetch_misses,
+        prefetch_bytes=prefetch_bytes,
     )
 
 
@@ -361,6 +455,12 @@ class MultiTenantSimResult:
     media_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
     media_busy_s_by_device: Dict[str, float] = dataclasses.field(default_factory=dict)
     media_queue_wait_s: float = 0.0
+    # Fleet-wide speculative prefetch replay (``prefetch=True``): the bytes
+    # are also reported to the arbiter per window, consuming its per-device
+    # bandwidth budgets before demand moves are considered.
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    prefetch_bytes: int = 0
 
 
 def simulate_multitenant(
@@ -369,6 +469,8 @@ def simulate_multitenant(
     windows: int = 40,
     warmup_windows: int = 2,
     seed: int = 0,
+    prefetch: bool = False,
+    prefetch_max_regions: int = 64,
 ) -> MultiTenantSimResult:
     """Drive N tenant workloads against one BudgetArbiter.
 
@@ -376,6 +478,12 @@ def simulate_multitenant(
     manager and records telemetry; the arbiter then closes every tenant's
     window at once — waterfilling budgets, reconciling shared-pool capacity
     and committing every placement.
+
+    ``prefetch=True`` replays per-tenant speculative readahead with the same
+    placement-neutral semantics as ``simulate``; the fleet's speculative
+    bytes are additionally reported to the arbiter via
+    ``record_speculative_bytes`` each window, so speculation consumes the
+    shared per-device bandwidth budgets before demand moves are considered.
     """
     from repro.media.devices import make_queues
 
@@ -395,15 +503,33 @@ def simulate_multitenant(
     t_fast: List[List[int]] = [[] for _ in workloads]
     t_budget: List[List[float]] = [[] for _ in workloads]
     fleet_save: List[float] = []
+    staged = [np.zeros(wl.n_regions, bool) for wl in workloads]
+    prefetch_hits = prefetch_misses = prefetch_bytes = 0
 
     for w in range(windows):
         overheads = []
+        spec_bytes: Dict[str, float] = {}
         for t, (wl, m) in enumerate(zip(workloads, managers)):
             counts = wl.sample_window(w, rngs[t])
-            fault_overhead_s, _, _ = charge_window_faults(m, counts)
+            free_mask = None
+            if prefetch and staged[t].any():
+                free_mask, h, m_ = _prefetch_consume(staged[t], counts)
+                prefetch_hits += h
+                prefetch_misses += m_
+            fault_overhead_s, _, _ = charge_window_faults(
+                m, counts, free_mask=free_mask
+            )
             m.record_access_counts(counts)
             base_s = wl.compute_s_per_window + counts.sum() * DRAM_ACCESS_US * 1e-6
             overheads.append(100.0 * fault_overhead_s / base_s)
+            if prefetch:
+                for dev, nb in _prefetch_stage(
+                    m, staged[t], media_queues, float(w), prefetch_max_regions
+                ).items():
+                    spec_bytes[dev] = spec_bytes.get(dev, 0.0) + nb
+                    prefetch_bytes += int(nb)
+        if spec_bytes:
+            arbiter.record_speculative_bytes(spec_bytes)
         arbiter.end_window()
         for m in managers:
             replay_plan_media(m, media_queues, now_s=float(w))
@@ -451,6 +577,9 @@ def simulate_multitenant(
             n_: q.busy_s for n_, q in media_queues.items() if q.ops
         },
         media_queue_wait_s=float(sum(q.queue_wait_s for q in media_queues.values())),
+        prefetch_hits=prefetch_hits,
+        prefetch_misses=prefetch_misses,
+        prefetch_bytes=prefetch_bytes,
     )
 
 

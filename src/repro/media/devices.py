@@ -46,6 +46,16 @@ class MediaDevice:
         bw = self.write_bw if write else self.read_bw
         return self.fixed_latency_s + n_bytes / bw
 
+    def batch_service_time_s(
+        self, n_bytes: int, ops: int = 1, write: bool = False
+    ) -> float:
+        """Uncontended transfer time for an aggregate of ``ops`` operations
+        totalling ``n_bytes`` (each op pays the fixed setup cost) — the same
+        formula ``MediaQueue.submit`` charges, exposed for callers that need
+        the service time without touching queue state (stall accounting)."""
+        bw = self.write_bw if write else self.read_bw
+        return ops * self.fixed_latency_s + n_bytes / bw
+
 
 # ---------------------------------------------------------------------------
 # Catalog. HBM and host-DRAM-over-PCIe reuse the hw.py constants so the
@@ -110,10 +120,7 @@ class MediaQueue:
     ) -> Tuple[float, float]:
         """Charge one aggregate transfer of ``n_bytes`` spanning ``ops``
         device operations (each op pays the fixed setup cost)."""
-        svc = (
-            ops * self.device.fixed_latency_s
-            + n_bytes / (self.device.write_bw if write else self.device.read_bw)
-        )
+        svc = self.device.batch_service_time_s(n_bytes, ops=ops, write=write)
         ch = min(range(len(self._channels)), key=lambda i: self._channels[i])
         start = max(now, self._channels[ch])
         done = start + svc

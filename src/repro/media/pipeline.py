@@ -20,9 +20,28 @@ next cohort while the head is mid-flight, so at most two cohorts hold
 staging resources and a cohort commits every other tick in steady state.
 Ring-credit shortage stalls the stage phase (counted, never dropped).
 
+Speculative prefetch (the readahead path): ``submit_prefetch`` queues
+low-priority cohorts that stage *shadow copies* of warming pages — the
+source copy stays resident and readable, exactly like OS readahead into the
+page cache. Speculative cohorts only advance on ticks where no demand work
+exists, acquire ring credits from the reserved speculative slice (so they
+can never starve a demand migration), pay their source-device read
+mid-window (the latency being hidden), and park the page's *raw
+source-codec bytes* in a held store — deliberately untranscoded, so a held
+page serves any destination the boundary plan later picks. At the window
+boundary the executor ``claim``s held pages the plan decided to move —
+those ride their demand cohort as ``prestaged`` rows, merged back into the
+cohort's payload at stage time so the transcode input batch is exactly the
+no-prefetch oracle's (bit-identity by construction) while skipping the
+source re-read — and ``discard``s the rest (mispredictions: credits return,
+but the speculative bandwidth was genuinely spent and stays billed on the
+device queues).
+
 The executor contract (implemented by ``serving.kv_cache.TieredKVCache``):
 
   stage_cohort(rids, src) -> {k_pay, k_sc, v_pay, v_sc} numpy arrays
+  peek_cohort(rids, src) -> payload       # non-destructive speculative read
+  drop_source_copies(rids, src) -> None   # retire sources of prestaged pages
   transcode_cohort(payload, src, dst) -> payload
   commit_cohort(rids, payload, src, dst) -> per-rid landed levels
   page_stored_bytes(level) -> int        # media bytes of one page at level
@@ -38,7 +57,8 @@ instead.
 ``serial=True`` is the equivalence oracle: ``submit`` runs every phase to
 completion inline (the blocking window-boundary semantics), through the very
 same phase callbacks — final placements must be bit-identical to the async
-schedule, which the media tests assert.
+schedule, which the media tests assert. Prefetch is async-only (the serial
+oracle has no mid-window steps to hide latency behind).
 """
 
 from __future__ import annotations
@@ -65,6 +85,12 @@ class _Cohort:
     payload: Optional[Dict[str, np.ndarray]] = None  # device staging hold
     ring_slots: Optional[List[int]] = None  # host staging (pinned ring)
     meta: Optional[List[Tuple[Tuple[int, ...], np.dtype]]] = None  # per-key
+    speculative: bool = False
+    # Demand cohorts only: positions in ``rids`` whose payload was prefetched
+    # (source read already paid mid-window) and the raw source-codec rows for
+    # them — merged back into the cohort's payload at stage time.
+    pre_idx: Optional[np.ndarray] = None
+    pre_payload: Optional[Dict[str, np.ndarray]] = None
 
 
 class MigrationPipeline:
@@ -83,43 +109,96 @@ class MigrationPipeline:
         self.serial = serial
         self._queue: Deque[_Cohort] = deque()
         self._step = 0
+        # Speculative prefetch state: queued staging cohorts + the held
+        # store of fully-transcoded pages awaiting the window boundary.
+        self._spec: Deque[_Cohort] = deque()
+        # rid -> (src, ring slot, per-key meta of the source-codec bytes,
+        #         this page's share of the speculative read service time)
+        self._held: Dict[int, Tuple[int, int, list, float]] = {}
         # Stats the overlap benchmark and tests consume.
         self.cohorts_done = 0
         self.pages_moved = 0
         self.busy_ticks = 0
         self.stall_ticks = 0
+        # Prefetch stats (hit-rate benchmark + mispredict billing report).
+        self.prefetch_staged = 0  # pages that reached the held store
+        self.prefetch_hits = 0  # held pages claimed by a boundary plan
+        self.prefetch_misses = 0  # held pages the plan contradicted
+        self.prefetch_cancelled = 0  # invalidated / dropped before staging
+        self.prefetch_bytes = 0  # speculative source-read bytes (billed)
+        self.prefetch_read_s = 0.0  # speculative source-read service time
+        # Gross per-device speculative charges (never decremented — the
+        # report view; hits and misses alike).
+        self.prefetch_bytes_by_device: Dict[str, int] = {}
+        self.prefetch_read_s_by_device: Dict[str, float] = {}
+        # Per-device speculative busy time: billed on the shared queues (so
+        # it appears in the TCO/media report and consumes arbiter budget).
+        # A *claimed* page's share is transferred back out of this dict —
+        # its read was demand work shifted earlier in the window — so the
+        # contention feedback that shapes placement sees the same work a
+        # prefetch-free run would; only mispredicted reads stay excluded
+        # (they are overhead the oracle never paid, reported but not
+        # allowed to perturb placement).
+        self.prefetch_busy_by_device: Dict[str, float] = {}
+        # Decode-visible swap-in stall proxy: source-read service time paid
+        # at the window boundary for off-device (host-media) demand stages.
+        self.demand_swapin_s = 0.0
 
     # ------------------------------------------------------------------ API
     @property
     def busy(self) -> bool:
         return bool(self._queue)
 
-    def submit(self, cohorts: Sequence[Tuple[np.ndarray, int, int]]) -> int:
+    def submit(
+        self,
+        cohorts: Sequence[Tuple[np.ndarray, int, int]],
+        prestaged: Optional[Dict[int, Dict[str, np.ndarray]]] = None,
+    ) -> int:
         """Enqueue phase-ordered (rids, src, dst) cohorts; returns pages
         queued. Cohorts larger than half the staging ring are chunked so two
         chunks can be in flight at once (the double buffer) and a single
-        cohort can never wedge the ring."""
+        cohort can never wedge the ring. ``prestaged`` maps rid -> raw
+        source-codec payload row for pages whose bytes were already
+        prefetched (claimed from the held store) — those skip the source
+        read at stage time."""
         chunk = max(self.ring.n_slots // 2, 1)
         n = 0
         for rids, src, dst in cohorts:
             rids = np.asarray(rids, np.int64)
             for lo in range(0, rids.size, chunk):
                 part = rids[lo : lo + chunk]
-                if part.size:
-                    self._queue.append(_Cohort(part, int(src), int(dst)))
-                    n += int(part.size)
+                if not part.size:
+                    continue
+                c = _Cohort(part, int(src), int(dst))
+                if prestaged:
+                    idx = np.array(
+                        [i for i, r in enumerate(part) if int(r) in prestaged],
+                        np.int64,
+                    )
+                    if idx.size:
+                        rows = [prestaged[int(part[i])] for i in idx]
+                        c.pre_idx = idx
+                        c.pre_payload = {
+                            k: np.stack([r[k] for r in rows]) for k in _PAYLOAD_KEYS
+                        }
+                self._queue.append(c)
+                n += int(part.size)
         if self.serial:
             self.drain()
         return n
 
     def tick(self) -> bool:
-        """Advance one decode step's worth of migration work. Returns True
-        if any phase progressed (False = idle or stalled on ring credits)."""
+        """Advance one decode step's worth of migration work. Demand cohorts
+        take absolute priority; speculative staging only advances on ticks
+        where no demand work exists. Returns True if any phase progressed
+        (False = idle or stalled on ring credits)."""
         self._step += 1
+        now = self._step * self.step_period_s
         if not self._queue:
+            if self._spec:
+                return self._tick_spec(now)
             return False
         self.busy_ticks += 1
-        now = self._step * self.step_period_s
         head = self._queue[0]
         progressed = False
         if head.phase == "transcoded":
@@ -147,8 +226,9 @@ class MigrationPipeline:
         return progressed
 
     def drain(self) -> int:
-        """Run the queue to completion (the blocking fallback). Returns
-        pages committed."""
+        """Run the demand queue to completion (the blocking fallback).
+        Returns pages committed. Speculative cohorts are untouched — they
+        belong to the window boundary's claim/discard pass."""
         budget = 4 * len(self._queue) + 8
         before = self.pages_moved
         while self._queue:
@@ -170,20 +250,53 @@ class MigrationPipeline:
         )
 
     def _stage(self, c: _Cohort, now: float) -> bool:
+        """Gather the cohort's payload (source codec). Prefetched rows —
+        their source read already paid mid-window — are merged back into the
+        payload at their original positions, so everything downstream
+        (transcode input batch, commit order, ring residency) is exactly the
+        no-prefetch oracle's; only the boundary's source read shrinks."""
         use_ring = self._uses_ring(c)
         slots = None
         if use_ring:
             slots = self.ring.try_acquire(int(c.rids.size))
             if slots is None:
                 return False  # backpressured: retry next tick
-        payload = self.executor.stage_cohort(c.rids, c.src)
-        src_dev = self.queues[self.executor.device_of(c.src)]
-        src_dev.submit(
-            self.executor.page_stored_bytes(c.src) * int(c.rids.size),
-            now=now,
-            write=False,
-            ops=int(c.rids.size),
-        )
+        if c.pre_idx is not None and c.pre_idx.size:
+            fresh_mask = np.ones(c.rids.size, bool)
+            fresh_mask[c.pre_idx] = False
+            fresh_idx = np.where(fresh_mask)[0]
+            # Prefetched rows: retire the now-stale source copies without
+            # re-reading them (the zero-cost part of the commit).
+            self.executor.drop_source_copies(c.rids[c.pre_idx], c.src)
+            fresh_payload = (
+                self.executor.stage_cohort(c.rids[fresh_idx], c.src)
+                if fresh_idx.size
+                else None
+            )
+            payload = {}
+            n = int(c.rids.size)
+            for k in _PAYLOAD_KEYS:
+                ref = c.pre_payload[k]
+                arr = np.zeros((n,) + ref.shape[1:], ref.dtype)
+                arr[c.pre_idx] = ref
+                if fresh_payload is not None:
+                    arr[fresh_idx] = fresh_payload[k]
+                payload[k] = arr
+            c.pre_payload = None
+            n_read = int(fresh_idx.size)
+        else:
+            payload = self.executor.stage_cohort(c.rids, c.src)
+            n_read = int(c.rids.size)
+        if n_read:
+            src_dev = self.queues[self.executor.device_of(c.src)]
+            nb = self.executor.page_stored_bytes(c.src) * n_read
+            src_dev.submit(nb, now=now, write=False, ops=n_read)
+            if self.executor.device_of(c.src) != self.executor.device_of(0):
+                # Off-device source read paid at the boundary: the decode-
+                # visible swap-in stall prefetch exists to hide.
+                self.demand_swapin_s += src_dev.device.batch_service_time_s(
+                    nb, ops=n_read
+                )
         if use_ring:
             c.ring_slots = slots
             c.meta = self._pack(payload, slots)
@@ -223,6 +336,156 @@ class MigrationPipeline:
         self.cohorts_done += 1
         self.pages_moved += int(c.rids.size)
 
+    # ------------------------------------------------- speculative prefetch
+    def submit_prefetch(self, cohorts: Sequence[Tuple[np.ndarray, int]]) -> int:
+        """Queue speculative (rids, src) staging cohorts. The bytes stay in
+        source codec — a held page serves whatever destination the boundary
+        plan later picks. Chunked to the ring's reserved speculative slice;
+        pages that cannot stage before the boundary are simply dropped
+        (best-effort). No-op in serial mode — there are no mid-window steps
+        to hide latency behind."""
+        if self.serial:
+            return 0
+        chunk = max(self.ring.spec_slots, 1)
+        n = 0
+        for rids, src in cohorts:
+            rids = np.asarray(rids, np.int64)
+            for lo in range(0, rids.size, chunk):
+                part = rids[lo : lo + chunk]
+                if part.size:
+                    self._spec.append(
+                        _Cohort(part, int(src), int(src), speculative=True)
+                    )
+                    n += int(part.size)
+        return n
+
+    def _tick_spec(self, now: float) -> bool:
+        """Advance the oldest speculative cohort by one phase (only called
+        when the demand queue is idle)."""
+        c = self._spec[0]
+        if c.phase == "pending":
+            slots = self.ring.try_acquire(int(c.rids.size), speculative=True)
+            if slots is None:
+                return False  # reserved slice busy: retry on a later tick
+            payload = self.executor.peek_cohort(c.rids, c.src)
+            dev_name = self.executor.device_of(c.src)
+            dev = self.queues[dev_name]
+            nb = self.executor.page_stored_bytes(c.src) * int(c.rids.size)
+            dev.submit(nb, now=now, write=False, ops=int(c.rids.size))
+            svc = dev.device.batch_service_time_s(nb, ops=int(c.rids.size))
+            self.prefetch_read_s += svc
+            self.prefetch_bytes += nb
+            self.prefetch_busy_by_device[dev_name] = (
+                self.prefetch_busy_by_device.get(dev_name, 0.0) + svc
+            )
+            self.prefetch_bytes_by_device[dev_name] = (
+                self.prefetch_bytes_by_device.get(dev_name, 0) + nb
+            )
+            self.prefetch_read_s_by_device[dev_name] = (
+                self.prefetch_read_s_by_device.get(dev_name, 0.0) + svc
+            )
+            c.ring_slots = slots
+            c.meta = self._pack(payload, slots)
+            c.phase = "staged"
+            return True
+        # staged -> held: park per-page entries for the boundary claim.
+        self._spec.popleft()
+        dev = self.queues[self.executor.device_of(c.src)].device
+        svc_page = dev.batch_service_time_s(self.executor.page_stored_bytes(c.src))
+        for i, rid in enumerate(c.rids):
+            self._held[int(rid)] = (c.src, c.ring_slots[i], c.meta, svc_page)
+        self.prefetch_staged += int(c.rids.size)
+        return True
+
+    def finish_speculative(self) -> None:
+        """Window boundary: run staged speculative cohorts to the held store.
+        Cohorts that never acquired credits are dropped — staging them now
+        would pay the read synchronously, defeating the point."""
+        budget = 4 * len(self._spec) + 8
+        while self._spec:
+            c = self._spec[0]
+            if c.phase == "pending":
+                self._spec.popleft()
+                self.prefetch_cancelled += int(c.rids.size)
+                continue
+            budget -= 1
+            if budget < 0:
+                raise RuntimeError("speculative staging failed to finish")
+            self._tick_spec(self._step * self.step_period_s)
+
+    def claim_prefetched(
+        self, rids: np.ndarray, src: int
+    ) -> Dict[int, Dict[str, np.ndarray]]:
+        """Hand over held pages the boundary plan decided to move out of
+        ``src``: returns rid -> raw source-codec payload row and releases
+        the ring credits (the demand cohort re-pins the full payload, so
+        ring residency matches the oracle). Claimed pages are prefetch hits
+        — their demand stage pays no source read."""
+        out: Dict[int, Dict[str, np.ndarray]] = {}
+        for rid in np.asarray(rids, np.int64):
+            ent = self._held.get(int(rid))
+            if ent is None or ent[0] != int(src):
+                continue
+            _, slot, meta, svc_page = self._held.pop(int(rid))
+            out[int(rid)] = self._unpack_slot(slot, meta)
+            self.ring.release([slot])
+            # A claimed read was demand work shifted earlier: hand its busy
+            # share back so the contention feedback sees the same total work
+            # a prefetch-free run would.
+            dev_name = self.executor.device_of(int(src))
+            self.prefetch_busy_by_device[dev_name] = (
+                self.prefetch_busy_by_device.get(dev_name, 0.0) - svc_page
+            )
+            self.prefetch_hits += 1
+        return out
+
+    def discard_speculative(self, rids=None, cancelled: bool = False) -> int:
+        """Discard held prefetched pages (all of them when ``rids`` is None),
+        returning their ring credits. Boundary discards are mispredictions
+        (``prefetch_misses``); invalidations — the source page moved or was
+        freed out from under the shadow copy — count as cancelled. The
+        speculative read bandwidth stays billed either way: mispredictions
+        show up in the media report, they do not disappear."""
+        if rids is None:
+            targets = list(self._held)
+        else:
+            targets = [int(r) for r in np.atleast_1d(np.asarray(rids, np.int64))]
+        n = 0
+        for rid in targets:
+            ent = self._held.pop(rid, None)
+            if ent is None:
+                continue
+            self.ring.release([ent[1]])  # credits return; busy stays billed
+            n += 1
+        if cancelled:
+            self.prefetch_cancelled += n
+        else:
+            self.prefetch_misses += n
+        # Invalidation must also reach queued speculative cohorts, or a
+        # recycled rid could later claim a stale shadow copy.
+        if rids is not None and self._spec:
+            rset = set(targets)
+            for c in list(self._spec):
+                keep = np.array([int(r) not in rset for r in c.rids], bool)
+                if keep.all():
+                    continue
+                if c.ring_slots is not None:
+                    drop_slots = [s for s, k in zip(c.ring_slots, keep) if not k]
+                    self.ring.release(drop_slots)
+                    c.ring_slots = [s for s, k in zip(c.ring_slots, keep) if k]
+                self.prefetch_cancelled += int((~keep).sum())
+                c.rids = c.rids[keep]
+                if c.rids.size == 0:
+                    self._spec.remove(c)
+        return n
+
+    def speculative_rids(self) -> set:
+        """Rids currently held or queued on the speculative path."""
+        out = set(self._held)
+        for c in self._spec:
+            out.update(int(r) for r in c.rids)
+        return out
+
     # ------------------------------------------------------- ring transit
     def _pack(
         self, payload: Dict[str, np.ndarray], slots: List[int]
@@ -234,18 +497,24 @@ class MigrationPipeline:
             self.ring.stage(slot, b"".join(a[i].tobytes() for a in arrs))
         return meta
 
+    def _unpack_slot(self, slot: int, meta) -> Dict[str, np.ndarray]:
+        """Deserialize one page's four arrays out of its ring slot."""
+        raw = self.ring.read(slot)
+        off = 0
+        out: Dict[str, np.ndarray] = {}
+        for key, (shape, dtype) in zip(_PAYLOAD_KEYS, meta):
+            nb = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+            out[key] = np.frombuffer(raw[off : off + nb], dtype=dtype).reshape(shape)
+            off += nb
+        return out
+
     def _unpack(self, c: _Cohort) -> Dict[str, np.ndarray]:
         out: Dict[str, List[np.ndarray]] = {k: [] for k in _PAYLOAD_KEYS}
         assert c.meta is not None and c.ring_slots is not None
         for slot in c.ring_slots:
-            raw = self.ring.read(slot)
-            off = 0
-            for key, (shape, dtype) in zip(_PAYLOAD_KEYS, c.meta):
-                nb = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
-                out[key].append(
-                    np.frombuffer(raw[off : off + nb], dtype=dtype).reshape(shape)
-                )
-                off += nb
+            row = self._unpack_slot(slot, c.meta)
+            for k in _PAYLOAD_KEYS:
+                out[k].append(row[k])
         return {k: np.stack(v) for k, v in out.items()}
 
     # ---------------------------------------------------------------- views
@@ -254,3 +523,9 @@ class MigrationPipeline:
 
     def media_bytes(self) -> Dict[str, int]:
         return {name: q.bytes_total for name, q in self.queues.items()}
+
+    def prefetch_hit_rate(self) -> float:
+        """Hits / (hits + misses) over everything that reached the held
+        store and met a window boundary."""
+        denom = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / denom if denom else 0.0

@@ -15,10 +15,20 @@ overrunning the arena. This module models exactly that, deterministically:
     until frees climb back above the high watermark — the classic
     stop/resume protocol that avoids thrashing around a single threshold.
 
+Credit classes: ``try_acquire`` serves two producers. *Demand* credits (the
+default) follow the watermark protocol above. *Speculative* credits — used
+by the prefetch/readahead path — are capped to a reserved slice of the ring
+(``spec_reserve``) and are additionally refused whenever granting them would
+drop free credits to the high watermark: speculation can therefore never
+push the ring into backpressure, so it can never starve a demand migration.
+A speculative producer that is refused simply retries later (prefetch is
+best-effort by construction).
+
 Invariants (tested):
   free + held == n_slots at all times; a slot is never handed out twice;
   double-release raises; backpressure engages at ``low_watermark`` and
-  clears only at ``high_watermark``.
+  clears only at ``high_watermark``; speculative holds never exceed the
+  reserved slice and never engage backpressure.
 """
 
 from __future__ import annotations
@@ -35,11 +45,14 @@ class PinnedRing:
         slot_bytes: int,
         low_watermark: float = 0.125,
         high_watermark: float = 0.5,
+        spec_reserve: float = 0.25,
     ):
         if n_slots < 1 or slot_bytes < 1:
             raise ValueError("ring needs at least one slot of at least one byte")
         if not 0.0 <= low_watermark < high_watermark <= 1.0:
             raise ValueError("need 0 <= low_watermark < high_watermark <= 1")
+        if not 0.0 <= spec_reserve <= 1.0:
+            raise ValueError("need 0 <= spec_reserve <= 1")
         self.n_slots = n_slots
         self.slot_bytes = slot_bytes
         # The pinned arena. One allocation, slot-strided — the layout a
@@ -52,9 +65,15 @@ class PinnedRing:
         self.low_slots = int(np.floor(low_watermark * n_slots))
         self.high_slots = max(int(np.ceil(high_watermark * n_slots)), self.low_slots + 1)
         self.backpressured = False
+        # Speculative credit class: the prefetch path may hold at most this
+        # many slots concurrently (the reserved slice).
+        self.spec_slots = int(np.floor(spec_reserve * n_slots))
+        self._spec_held: set = set()
         # Telemetry for the pipeline's stall accounting.
         self.acquires = 0
         self.stalls = 0
+        self.spec_acquires = 0
+        self.spec_rejects = 0
 
     # ------------------------------------------------------------- credits
     @property
@@ -70,14 +89,36 @@ class PinnedRing:
             return False
         return n <= len(self._free)
 
-    def try_acquire(self, n: int) -> Optional[List[int]]:
+    @property
+    def spec_held_slots(self) -> int:
+        return len(self._spec_held)
+
+    def try_acquire(self, n: int, speculative: bool = False) -> Optional[List[int]]:
         """Claim ``n`` slot credits, or None under backpressure / shortage.
 
-        A failed acquire that found the ring short engages backpressure (the
-        producer must wait for the consumer to drain past the high
-        watermark); a successful acquire that lands free credits at or below
-        the low watermark engages it for the *next* producer.
+        Demand class: a failed acquire that found the ring short engages
+        backpressure (the producer must wait for the consumer to drain past
+        the high watermark); a successful acquire that lands free credits at
+        or below the low watermark engages it for the *next* producer.
+
+        Speculative class: refused (without engaging backpressure) when the
+        ring is already backpressured, when the reserved slice is full, or
+        when granting would drop free credits to the high watermark — so
+        speculation can never starve a demand producer.
         """
+        if speculative:
+            self.spec_acquires += 1
+            if (
+                self.backpressured
+                or len(self._spec_held) + n > self.spec_slots
+                or len(self._free) - n < self.high_slots
+            ):
+                self.spec_rejects += 1
+                return None
+            slots = [self._free.pop() for _ in range(n)]
+            self._held.update(slots)
+            self._spec_held.update(slots)
+            return slots
         self.acquires += 1
         if self.backpressured or n > len(self._free):
             if n <= self.n_slots:  # a satisfiable request blocked on credits
@@ -96,6 +137,7 @@ class PinnedRing:
             if s not in self._held:
                 raise ValueError(f"slot {s} released without being held")
             self._held.discard(s)
+            self._spec_held.discard(s)
             self._fill[s] = 0
             self._free.append(s)
         if self.backpressured and len(self._free) >= self.high_slots:

@@ -44,6 +44,10 @@ class EngineStats:
     # Decode steps retired while a migration cohort was in flight (async
     # media pipeline) — the numerator of overlap efficiency.
     overlapped_steps: int = 0
+    # Speculative prefetch: pages staged ahead / confirmed / mispredicted.
+    prefetch_staged: int = 0
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
     decode_s: float = 0.0
     daemon_s: float = 0.0
     tco_savings_pct: float = 0.0
@@ -94,6 +98,8 @@ class TieredEngine:
             mgr_cfg,
             async_migration=ts.async_migration,
             ring_slots=ts.media_ring_slots,
+            prefetch=ts.prefetch,
+            prefetch_max_pages=ts.prefetch_max_pages,
         )
         from repro.launch.mesh import make_mesh
 
@@ -149,6 +155,10 @@ class TieredEngine:
         self.stats.tco_savings_pct = max(
             self.stats.tco_savings_pct, self.cache.tco_savings_pct()
         )
+        pipe = self.cache.pipeline
+        self.stats.prefetch_staged = pipe.prefetch_staged
+        self.stats.prefetch_hits = pipe.prefetch_hits
+        self.stats.prefetch_misses = pipe.prefetch_misses
         return self.stats
 
     # ------------------------------------------------------------ internals
@@ -234,6 +244,10 @@ class TieredEngine:
         if self.cache.pipeline.busy:
             self.cache.pipeline.tick()
             self.stats.overlapped_steps += 1
+        else:
+            # Idle media path: spend the step on speculative prefetch of
+            # warming host pages (no-op unless ts.prefetch enabled).
+            self.cache.prefetch_tick()
         self.stats.daemon_s += time.perf_counter() - t1
 
         next_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1))

@@ -134,6 +134,8 @@ class TieredKVCache:
         async_migration: bool = False,
         ring_slots: int = 64,
         media_step_s: float = 50e-6,
+        prefetch: bool = False,
+        prefetch_max_pages: int = 8,
     ):
         """``tenant_quota`` maps pool name ("warm"/"cold") -> {tenant id ->
         max concurrently held slots}. When a pool carries a quota, every
@@ -142,7 +144,10 @@ class TieredKVCache:
         tenant's pages down-tier instead of letting it drain the shared
         free list. ``async_migration`` routes window migration plans
         through the double-buffered media pipeline instead of the blocking
-        ``migrate_batch`` path."""
+        ``migrate_batch`` path. ``prefetch`` (async-only) speculatively
+        stages warming host pages through the ring's reserved slice so a
+        boundary promotion commits without paying the swap-in read;
+        placements stay bit-identical to a prefetch-free run."""
         self.cfg = cfg
         self.la = n_attn_layers
         self.bs = batch_slots
@@ -225,6 +230,12 @@ class TieredKVCache:
         )
         self._pending_reconcile: List[np.ndarray] = []
         self._media_busy_snapshot: Dict[str, float] = {}
+        # Speculative prefetch: only meaningful on the async path (there are
+        # no mid-window decode steps to hide the swap-in read behind in
+        # serial mode). At most one cohort emission per profile window.
+        self.prefetch_enabled = bool(prefetch and async_migration)
+        self.prefetch_max_pages = prefetch_max_pages
+        self._prefetch_window_emitted = False
 
     # ------------------------------------------------------------- helpers
     def rid(self, layer: int, slot: int, page: int) -> int:
@@ -299,6 +310,13 @@ class TieredKVCache:
     def _set_placement(self, rids, level) -> None:
         self.physical[rids] = level
         self.manager.placement[rids] = level
+
+    def _invalidate_prefetch(self, rids) -> None:
+        """A host page moved or was freed out from under its speculative
+        shadow copy: the staged bytes are stale and must never be claimed
+        (rids get recycled). Ring credits return; counts as cancelled."""
+        if self.prefetch_enabled:
+            self.pipeline.discard_speculative(rids, cancelled=True)
 
     # -------------------------------------------------- page ingestion path
     def append_page(self, layer: int, slot: int, page: int, kpage, vpage) -> None:
@@ -613,6 +631,7 @@ class TieredKVCache:
             for x in ps:
                 self._free_slot(pool, int(x))
         else:
+            self._invalidate_prefetch(rids)
             hp = [self.host_pages.pop(int(r)) for r in rids]
             k_pay = jnp.asarray(np.stack([h[0] for h in hp]))
             k_sc = jnp.asarray(np.stack([h[1] for h in hp]))
@@ -685,6 +704,7 @@ class TieredKVCache:
             for x in ps:
                 self._free_slot(pool, int(x))
         else:
+            self._invalidate_prefetch(rids)
             hp = [self.host_pages.pop(int(r)) for r in rids]
             payload = {
                 "k_pay": np.stack([h[0] for h in hp]),
@@ -695,6 +715,32 @@ class TieredKVCache:
         self.physical[rids] = INFLIGHT
         self._pool_slot[rids] = -3
         return payload
+
+    def peek_cohort(self, rids: np.ndarray, src: int) -> Dict[str, np.ndarray]:
+        """Non-destructive gather for speculative staging: the source copy
+        stays resident and readable — prefetch is a shadow copy, exactly
+        like OS readahead into the page cache. Host tiers only (the swap-in
+        latency being hidden is the host-media round trip)."""
+        assert src not in _DEVICE, "prefetch sources are host tiers"
+        rids = np.asarray(rids, np.int64)
+        hp = [self.host_pages[int(r)] for r in rids]
+        return {
+            "k_pay": np.stack([h[0] for h in hp]),
+            "k_sc": np.stack([h[1] for h in hp]),
+            "v_pay": np.stack([h[2] for h in hp]),
+            "v_sc": np.stack([h[3] for h in hp]),
+        }
+
+    def drop_source_copies(self, rids: np.ndarray, src: int) -> None:
+        """Retire the source copies of prestaged (prefetched) pages at
+        commit time: their shadow copy — already read and transcoded
+        mid-window — replaces the boundary's source read entirely."""
+        assert src not in _DEVICE, "prefetch sources are host tiers"
+        rids = np.asarray(rids, np.int64)
+        for r in rids:
+            self.host_pages.pop(int(r), None)
+        self.physical[rids] = INFLIGHT
+        self._pool_slot[rids] = -3
 
     def transcode_cohort(
         self, payload: Dict[str, np.ndarray], src: int, dst: int
@@ -790,7 +836,14 @@ class TieredKVCache:
             ex = rids[self._page_exists[rids] & (self.physical[rids] != INFLIGHT)]
             self.manager.placement[ex] = self.physical[ex]
         self._pending_reconcile.clear()
-        busy = {n: q.busy_s for n, q in self.media_queues.items()}
+        # Speculative traffic is billed on the queues (TCO/media report,
+        # arbiter budgets) but excluded from the contention feedback that
+        # shapes placement: prefetch must never change where pages land,
+        # only when their bytes move.
+        spec = self.pipeline.prefetch_busy_by_device
+        busy = {
+            n: q.busy_s - spec.get(n, 0.0) for n, q in self.media_queues.items()
+        }
         delta = {
             n: busy[n] - self._media_busy_snapshot.get(n, 0.0) for n in busy
         }
@@ -803,6 +856,46 @@ class TieredKVCache:
         if self.pipeline.busy:
             return self.pipeline.drain()
         return 0
+
+    # ------------------------------------------------ speculative prefetch
+    def prefetch_tick(self) -> bool:
+        """One decode step's worth of speculative work: emit this window's
+        warming-page cohort (at most one non-empty emission per window) and
+        advance speculative staging by one phase. Strictly lower priority
+        than demand migration: a no-op while demand cohorts are in flight."""
+        if not self.prefetch_enabled or self.pipeline.busy:
+            return False
+        if not self._prefetch_window_emitted:
+            # Retry until the accumulating window shows a rising cohort
+            # (telemetry grows step by step); one emission per window.
+            if self._emit_prefetch():
+                self._prefetch_window_emitted = True
+        return self.pipeline.tick()
+
+    def _emit_prefetch(self) -> int:
+        """Ask the predictor for warming host pages and queue their raw
+        bytes for speculative staging. No destination is predicted — the
+        staged copy is source-codec, so it serves whatever tier the
+        boundary plan picks (promotion, demotion or retranscode)."""
+        eligible = (
+            ((self.physical == HOST8) | (self.physical == HOST4)) & self._page_exists
+        )
+        for rid in self.pipeline.speculative_rids():
+            eligible[rid] = False
+        if not eligible.any():
+            return 0
+        fast = int((((self.physical == WARM) | (self.physical == COLD))).sum())
+        cand = self.manager.prefetch_candidates(
+            eligible, top_k=max(fast, 1), max_regions=self.prefetch_max_pages
+        )
+        if cand.size == 0:
+            return 0
+        cohorts = [
+            (cand[self.physical[cand] == s], int(s))
+            for s in (HOST8, HOST4)
+            if bool((self.physical[cand] == s).any())
+        ]
+        return self.pipeline.submit_prefetch(cohorts)
 
     # ------------------------------------------------- per-page migration
     def migrate(self, rid: int, dst: int) -> None:
@@ -845,6 +938,7 @@ class TieredKVCache:
             self._table_remove("cold", layer, slot, ps)
             self._free_slot("cold", ps)
         else:
+            self._invalidate_prefetch(np.array([rid], np.int64))
             self.host_pages.pop(rid, None)
         self._pool_slot[rid] = -1
 
@@ -930,6 +1024,7 @@ class TieredKVCache:
             np.int64,
         )
         rids = rids[self._page_exists[rids]]
+        self._invalidate_prefetch(rids)
         for r in rids:
             src = int(self.physical[r])
             ps = int(self._pool_slot[r])
@@ -1028,8 +1123,15 @@ class TieredKVCache:
         """
         if self.pipeline.busy:
             self.pipeline.drain()
+        if self.prefetch_enabled:
+            # Speculation meets reality: finish staged speculative cohorts
+            # into the held store before the plan is computed.
+            self.pipeline.finish_speculative()
         plan = self.manager.end_window()
+        self._prefetch_window_emitted = False
         if plan.regions.size == 0:
+            if self.prefetch_enabled:
+                self.pipeline.discard_speculative()  # nothing to claim: all misses
             return plan, 0
         # Manager may recommend DRAM(0) for hot pages; KV pages instead go
         # warm (the closest legal tier — recent window plays DRAM's role).
@@ -1037,8 +1139,17 @@ class TieredKVCache:
         dst[dst == 0] = WARM
         if self.async_migration:
             cohorts = self.plan_cohorts(plan.regions, dst)
+            prestaged: Dict[int, Dict[str, np.ndarray]] = {}
+            if self.prefetch_enabled:
+                # Claim held pages the plan confirmed (hits — their demand
+                # stage pays no source read); everything else was
+                # mispredicted and is discarded, returning the ring credits.
+                for crids, s, _d in cohorts:
+                    if s not in _DEVICE:
+                        prestaged.update(self.pipeline.claim_prefetched(crids, s))
+                self.pipeline.discard_speculative()
             self._pending_reconcile.append(np.asarray(plan.regions, np.int64))
-            queued = self.pipeline.submit(cohorts)
+            queued = self.pipeline.submit(cohorts, prestaged=prestaged or None)
             if not self.pipeline.busy:
                 # Empty plan after pre-passes: reconcile immediately.
                 self.on_pipeline_drained()

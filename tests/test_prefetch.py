@@ -1,0 +1,436 @@
+"""Speculative prefetch/readahead on the media pipeline: ring credit
+classes, the warming-page predictor, zero-read commits that stay
+bit-identical to the no-prefetch oracle, deterministic cancellation of
+mispredicted cohorts, invalidation on page release, the simulator's
+prefetch replay, the arbiter's speculative-bandwidth billing, and the
+async_migration default flip."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import TierScapeRunConfig
+from repro.core import simulator
+from repro.core.arbiter import BudgetArbiter, TenantSpec
+from repro.core.manager import ManagerConfig, make_manager
+from repro.media.ringbuf import PinnedRing
+from repro.serving.kv_cache import COLD, HOST4, HOST8, WARM, TieredKVCache
+
+from test_migration import CFG, assert_same_state, check_table_invariants, fill_cache
+
+
+def make_cache(prefetch=False, ring_slots=64, warm_frac=1.0, alpha=0.5):
+    return TieredKVCache(
+        CFG, 2, 2, 8, 64, recent_window=16,
+        manager_cfg=ManagerConfig(policy="analytical", alpha=alpha),
+        warm_frac=warm_frac, async_migration=True, ring_slots=ring_slots,
+        prefetch=prefetch, prefetch_max_pages=16,
+    )
+
+
+def _demote_half_to_host(c, fill_seed=5, n_pages=24):
+    """Fill an all-warm cache and demote the second half to the int4 host
+    tier; returns (device_rids, host_rids)."""
+    fill_cache(c, np.random.default_rng(fill_seed), n_pages)
+    live = np.where(c._page_exists)[0]
+    host = live[n_pages // 2:]
+    c.migrate_batch(host, np.full(host.size, HOST4, np.int64))
+    return live[: n_pages // 2], host
+
+
+# ---------------------------------------------------------------------------
+# ring: speculative credit class
+# ---------------------------------------------------------------------------
+
+
+def test_ring_speculative_class_capped_and_never_backpressures():
+    # 16 slots: low=2, high=8, speculative slice=4.
+    r = PinnedRing(16, 8)
+    s = r.try_acquire(4, speculative=True)
+    assert s is not None and r.spec_held_slots == 4
+    assert r.free_slots + r.held_slots == 16
+    # Slice cap: a fifth speculative slot is refused without backpressure.
+    assert r.try_acquire(1, speculative=True) is None
+    assert not r.backpressured
+    # Demand is untouched by speculative holds.
+    d = r.try_acquire(6)
+    assert d is not None and not r.backpressured
+    r.release(s)
+    assert r.spec_held_slots == 0
+    # 10 free: granting 3 would drop free below the high watermark (8) —
+    # refused; granting 2 lands exactly at it — allowed.
+    assert r.try_acquire(3, speculative=True) is None
+    assert r.try_acquire(2, speculative=True) is not None
+    assert r.spec_rejects >= 2
+    r.release(d)
+
+
+def test_ring_speculative_refused_under_backpressure():
+    r = PinnedRing(8, 8)  # low=1, high=4, spec=2
+    d = r.try_acquire(7)  # 1 free -> backpressured
+    assert d is not None and r.backpressured
+    assert r.try_acquire(1, speculative=True) is None
+    r.release(d)
+    assert not r.backpressured
+
+
+# ---------------------------------------------------------------------------
+# predictor
+# ---------------------------------------------------------------------------
+
+
+def test_predictor_flags_rising_regions_mid_window():
+    mgr = make_manager("6T-AM-0.5", 16)
+    eligible = np.ones(16, bool)
+    # No closed window yet: nothing to rise from.
+    assert mgr.prefetch_candidates(eligible, top_k=4, max_regions=8).size == 0
+    base = np.zeros(16)
+    base[3], base[5] = 10.0, 50.0
+    mgr.record_access_counts(base)
+    mgr.close_telemetry()
+    # Accumulating window: region 3 rises (10 -> 30), region 5 falls.
+    cur = np.zeros(16)
+    cur[3], cur[5] = 30.0, 20.0
+    mgr.record_access_counts(cur)
+    cand = mgr.prefetch_candidates(eligible, top_k=4, max_regions=8)
+    assert 3 in cand and 5 not in cand
+    # Pure read: identical repeated calls, no placement perturbation.
+    again = mgr.prefetch_candidates(eligible, top_k=4, max_regions=8)
+    np.testing.assert_array_equal(cand, again)
+    assert (mgr.placement == 0).all()
+    # Eligibility mask is honored.
+    not3 = eligible.copy()
+    not3[3] = False
+    assert 3 not in mgr.prefetch_candidates(not3, top_k=4, max_regions=8)
+
+
+# ---------------------------------------------------------------------------
+# hit path: staged pages commit without a boundary source read
+# ---------------------------------------------------------------------------
+
+
+def _steady_counts(c, device, host, hot_device=500.0, hot_host=0.0):
+    counts = np.zeros(c.n_regions)
+    counts[device] = hot_device
+    counts[host] = hot_host
+    return counts
+
+
+def _window(c, counts, ticks=8):
+    """One profile window the way the engine drives it: telemetry
+    accumulates, idle decode steps run speculation, the boundary plans."""
+    c.manager.record_access_counts(counts)
+    for _ in range(ticks):
+        if c.pipeline.busy:
+            c.pipeline.tick()
+        else:
+            c.prefetch_tick()
+    c.end_window()
+    c.drain_migrations()
+
+
+def test_prefetch_hit_skips_boundary_read_and_matches_oracle():
+    spec, oracle = make_cache(prefetch=True), make_cache(prefetch=False)
+    for c in (spec, oracle):
+        device, host = _demote_half_to_host(c)
+    # Window 0: steady state (device hot, host cold) — placement stable.
+    for c in (spec, oracle):
+        _window(c, _steady_counts(c, device, host))
+    assert spec.pipeline.prefetch_staged == 0  # nothing was rising
+    # Window 1: the host set warms up sharply; the predictor stages it
+    # mid-window, the boundary promotes it, the staged bytes are claimed.
+    for c in (spec, oracle):
+        _window(c, _steady_counts(c, device, host, hot_host=800.0))
+    assert spec.pipeline.prefetch_staged == len(host)
+    assert spec.pipeline.prefetch_hits == len(host)
+    assert spec.pipeline.prefetch_misses == 0
+    # Promotions really happened, identically in both runs.
+    assert (spec.physical[host] != HOST4).all()
+    assert_same_state(spec, oracle)
+    # The oracle paid the host read at the boundary; prefetch did not.
+    assert oracle.pipeline.demand_swapin_s > 0
+    assert spec.pipeline.demand_swapin_s < oracle.pipeline.demand_swapin_s
+    # The speculative read is still billed: same bytes, different timing.
+    assert spec.pipeline.prefetch_bytes > 0
+    assert spec.staging_ring.free_slots == spec.staging_ring.n_slots
+    check_table_invariants(spec)
+
+
+def test_prefetch_media_billing_excluded_from_contention_feedback():
+    """Speculative reads inflate the device queues (the TCO report) but not
+    the media-pressure feedback that shapes placement — otherwise prefetch
+    runs would plan differently from the oracle."""
+    spec, oracle = make_cache(prefetch=True), make_cache(prefetch=False)
+    for c in (spec, oracle):
+        device, host = _demote_half_to_host(c)
+        _window(c, _steady_counts(c, device, host))
+        _window(c, _steady_counts(c, device, host, hot_host=800.0))
+    assert spec.pipeline.prefetch_hits > 0
+    host_dev = "host_dram_pcie"
+    assert spec.pipeline.prefetch_read_s > 0
+    # Every staged page was claimed, so its busy share was handed back to
+    # the demand side and the residual speculative exclusion nets to zero.
+    assert spec.pipeline.prefetch_busy_by_device.get(host_dev, 0.0) == pytest.approx(
+        0.0, abs=1e-15
+    )
+    # Executed busy time includes the speculative read (total host read
+    # volume is the same work, just moved earlier in the window)...
+    assert spec.media_queues[host_dev].busy_s == pytest.approx(
+        oracle.media_queues[host_dev].busy_s, rel=1e-9
+    )
+    # ...and the manager's placement-shaping pressure matches the oracle:
+    # claimed reads are demand work shifted earlier (their busy share is
+    # handed back), so only mispredicted reads stay out of the feedback.
+    assert set(spec.manager.media_pressure) == set(oracle.manager.media_pressure)
+    for dev, rho in oracle.manager.media_pressure.items():
+        assert spec.manager.media_pressure[dev] == pytest.approx(rho, rel=1e-9, abs=1e-15)
+
+
+# ---------------------------------------------------------------------------
+# cancellation: mispredicted cohorts are discarded deterministically
+# ---------------------------------------------------------------------------
+
+
+def _run_mispredict_scenario():
+    """Stage a speculative cohort the boundary plan then contradicts (the
+    staged pages stay cold; only device pages are in the plan's interest).
+    Returns the cache for inspection."""
+    c = make_cache(prefetch=True)
+    device, host = _demote_half_to_host(c)
+    _window(c, _steady_counts(c, device, host))
+    # Machinery-level mispredict: stage host pages the plan will not touch.
+    target = host[:6]
+    queued = c.pipeline.submit_prefetch([(target, HOST4)])
+    assert queued == 6
+    for _ in range(4):
+        c.prefetch_tick()
+    assert c.pipeline.prefetch_staged == 6
+    assert set(c.pipeline.speculative_rids()) == set(int(r) for r in target)
+    held_before = c.staging_ring.held_slots
+    assert held_before >= 6
+    # Shadow copies: sources still resident and readable.
+    assert all(int(r) in c.host_pages for r in target)
+    # Boundary: device pages stay hot, staged pages stay cold -> the plan
+    # contradicts the speculation and the cohort is discarded.
+    _window(c, _steady_counts(c, device, host))
+    return c, target
+
+
+def test_mispredicted_prefetch_discarded_and_credits_returned():
+    c, target = _run_mispredict_scenario()
+    assert c.pipeline.prefetch_misses == 6
+    assert c.pipeline.prefetch_hits == 0
+    assert not c.pipeline.speculative_rids()
+    # Every ring credit came back.
+    assert c.staging_ring.free_slots == c.staging_ring.n_slots
+    # The mispredicted pages never moved and their payloads are intact.
+    assert (c.physical[target] == HOST4).all()
+    assert all(int(r) in c.host_pages for r in target)
+    check_table_invariants(c)
+    # The wasted speculative bandwidth stays billed (mispredictions show
+    # up in the report; they do not disappear).
+    assert c.pipeline.prefetch_bytes > 0
+    assert c.pipeline.prefetch_busy_by_device.get("host_dram_pcie", 0.0) > 0
+
+
+def test_mispredict_is_deterministic_and_placement_neutral():
+    a, _ = _run_mispredict_scenario()
+    b, _ = _run_mispredict_scenario()
+    assert_same_state(a, b)
+    assert a.pipeline.prefetch_misses == b.pipeline.prefetch_misses
+    assert a.pipeline.prefetch_bytes == b.pipeline.prefetch_bytes
+    # And the whole scenario with prefetch disabled lands identical pages.
+    c = make_cache(prefetch=False)
+    device, host = _demote_half_to_host(c)
+    _window(c, _steady_counts(c, device, host))
+    _window(c, _steady_counts(c, device, host))
+    assert_same_state(a, c)
+
+
+def test_release_slot_pages_invalidates_staged_prefetch():
+    c = make_cache(prefetch=True)
+    device, host = _demote_half_to_host(c)
+    _window(c, _steady_counts(c, device, host))
+    slot1 = host[((host // c.max_pages) % c.bs) == 1]
+    assert slot1.size > 0
+    c.pipeline.submit_prefetch([(slot1, HOST4)])
+    for _ in range(4):
+        c.prefetch_tick()
+    assert c.pipeline.prefetch_staged == slot1.size
+    c.release_slot_pages(1)
+    # Stale shadow copies were cancelled, credits returned, index clean.
+    assert c.pipeline.prefetch_cancelled >= slot1.size
+    assert not (set(int(r) for r in slot1) & c.pipeline.speculative_rids())
+    assert c.staging_ring.free_slots == c.staging_ring.n_slots
+    assert not any(int(r) in c.host_pages for r in slot1)
+
+
+# ---------------------------------------------------------------------------
+# engine integration (prefetch enabled end-to-end)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_runs_with_prefetch_enabled():
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models import Model
+    from repro.serving import TieredEngine
+
+    cfg = ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16,
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = TieredEngine(
+        model, params, batch_slots=2, page_tokens=8, max_seq_len=64,
+        recent_window=16,
+        ts=TierScapeRunConfig(enabled=True, policy="analytical",
+                              window_steps=4, async_migration=True,
+                              prefetch=True),
+    )
+    rng = np.random.default_rng(9)
+    for _ in range(2):
+        eng.submit(rng.integers(1, cfg.vocab_size, 48), max_new_tokens=12)
+    stats = eng.run(max_steps=200)
+    assert stats.completed == 2
+    assert stats.migrations > 0
+    assert not eng.cache.pipeline.busy
+    # Speculation left no residue: all ring credits are home.
+    assert not eng.cache.pipeline.speculative_rids()
+    assert stats.prefetch_staged == stats.prefetch_hits + stats.prefetch_misses
+
+
+# ---------------------------------------------------------------------------
+# simulator replay
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_prefetch_reduces_slowdown_and_bills_bytes():
+    def run(prefetch):
+        wl = simulator.gaussian_kv(
+            n_regions=256, accesses_per_window=20_000, drift_frac=0.05
+        )
+        m = make_manager("6T-AM-0.5", 256)
+        return simulator.simulate(wl, m, windows=10, seed=1, prefetch=prefetch)
+
+    base = run(False)
+    pre = run(True)
+    assert base.prefetch_hits == 0 and base.prefetch_bytes == 0
+    assert pre.prefetch_hits > 0
+    assert pre.prefetch_bytes > 0
+    # Hits hide first-touch fault latency...
+    assert pre.slowdown_pct < base.slowdown_pct
+    # ...but never fork the placement trajectory: fault bookkeeping, plans
+    # and TCO are bit-identical to the prefetch-free run.
+    np.testing.assert_array_equal(pre.placement_hists, base.placement_hists)
+    np.testing.assert_array_equal(pre.fault_hists, base.fault_hists)
+    assert pre.tco_savings_pct == base.tco_savings_pct
+    # Speculative traffic lands on the shared media queues on top of the
+    # (identical) demand migration traffic.
+    assert sum(pre.media_bytes_by_device.values()) == pytest.approx(
+        sum(base.media_bytes_by_device.values()) + pre.prefetch_bytes
+    )
+    # Deterministic replay.
+    again = run(True)
+    assert again.prefetch_hits == pre.prefetch_hits
+    assert again.prefetch_misses == pre.prefetch_misses
+    assert again.prefetch_bytes == pre.prefetch_bytes
+
+
+def test_simulate_multitenant_prefetch_reports_spec_bytes_to_arbiter():
+    def build():
+        managers = [make_manager("6T-AM-0.5", 128, seed=t) for t in range(2)]
+        arb = BudgetArbiter(
+            [TenantSpec("a", sla_weight=2.0), TenantSpec("b")], managers, alpha=0.5
+        )
+        wls = [
+            simulator.gaussian_kv(
+                n_regions=128, accesses_per_window=10_000, drift_frac=0.05
+            )
+            for _ in range(2)
+        ]
+        return wls, arb
+
+    wls, arb = build()
+    r = simulator.simulate_multitenant(wls, arb, windows=8, prefetch=True)
+    assert r.prefetch_hits > 0
+    assert r.prefetch_bytes > 0
+    # The arbiter was told about the fleet's speculative traffic.
+    assert any(ws.speculative_bytes_by_device for ws in arb.history)
+    total_reported = sum(
+        b for ws in arb.history for b in ws.speculative_bytes_by_device.values()
+    )
+    assert total_reported == pytest.approx(r.prefetch_bytes)
+    # Placement-neutral here too: the prefetch-free fleet commits the same
+    # placements window for window.
+    wls0, arb0 = build()
+    r0 = simulator.simulate_multitenant(wls0, arb0, windows=8, prefetch=False)
+    for ws, ws0 in zip(arb.history, arb0.history):
+        for ts, ts0 in zip(ws.tenants, ws0.tenants):
+            assert ts.fast_regions == ts0.fast_regions
+            assert ts.spent_usd == ts0.spent_usd
+
+
+# ---------------------------------------------------------------------------
+# arbiter: speculative bytes consume the shared bandwidth budget
+# ---------------------------------------------------------------------------
+
+
+def _drive_arbiter(budget, spec_bytes=None, windows=3, n_regions=64):
+    managers = [make_manager("6T-AM-0.5", n_regions) for _ in range(2)]
+    arb = BudgetArbiter(
+        [TenantSpec("a", sla_weight=2.0), TenantSpec("b")],
+        managers, alpha=0.5, media_bw_budget_bytes=budget,
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(windows):
+        for m in managers:
+            counts = np.zeros(n_regions)
+            hot = rng.choice(n_regions, size=8, replace=False)
+            counts[hot] = rng.integers(100, 1000, 8)
+            m.record_access_counts(counts)
+        if spec_bytes:
+            arb.record_speculative_bytes(spec_bytes)
+        arb.end_window()
+    return arb
+
+
+def test_arbiter_speculative_bytes_consume_bandwidth_budget():
+    free = _drive_arbiter(budget=None)
+    peak = max(
+        ws.media_bytes_by_device.get("host_dram_pcie", 0) for ws in free.history
+    )
+    assert peak > 0
+    # Budget sized to the unconstrained peak: no demand move is deferred.
+    roomy = _drive_arbiter(budget={"host_dram_pcie": peak * 1.01})
+    assert all(ws.deferred_migrations == 0 for ws in roomy.history)
+    # Same budget, but speculation ate 90% of it mid-window: demand moves
+    # touching the device must now be deferred, and the stats say why.
+    spec = _drive_arbiter(
+        budget={"host_dram_pcie": peak * 1.01},
+        spec_bytes={"host_dram_pcie": peak * 0.9},
+    )
+    assert any(ws.deferred_migrations > 0 for ws in spec.history)
+    for ws in spec.history:
+        assert ws.speculative_bytes_by_device == {"host_dram_pcie": peak * 0.9}
+
+
+# ---------------------------------------------------------------------------
+# config: async default flipped (ROADMAP soak item)
+# ---------------------------------------------------------------------------
+
+
+def test_async_migration_defaults_true_with_env_escape(monkeypatch):
+    monkeypatch.delenv("REPRO_ASYNC_MIGRATION", raising=False)
+    assert TierScapeRunConfig().async_migration is True
+    monkeypatch.setenv("REPRO_ASYNC_MIGRATION", "0")
+    assert TierScapeRunConfig().async_migration is False
+    monkeypatch.setenv("REPRO_ASYNC_MIGRATION", "1")
+    assert TierScapeRunConfig().async_migration is True
+    # Prefetch is an explicit opt-in and requires the async path.
+    assert TierScapeRunConfig().prefetch is False
+    c = make_cache(prefetch=True)
+    assert c.prefetch_enabled
