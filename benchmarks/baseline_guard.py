@@ -22,6 +22,12 @@ Check semantics per guard:
     no-prefetch oracle, decode-visible swap-in stalls must be reduced, at
     least one page must be prefetched, and the hit rate must stay >= 0.5
     and within ``HIT_RATE_BAND`` of the baseline.
+  decode_fused — launch structure is deterministic, so the comparison is
+    exact: the fused megakernel must issue EXACTLY one Pallas launch per
+    decode step at every tier count, the per-pool oracle's launch count
+    must not shrink (it is the O(tiers) contrast), and fused outputs +
+    normalized hotness must match the oracle to fp32 tolerance
+    (``outputs_match``). Tier counts are the baseline's own keys.
 
 Refresh any baseline by re-running its benchmark with ``--json`` and
 committing the result.
@@ -86,6 +92,33 @@ def check_media(current: dict, baseline: dict) -> List[str]:
     return errors
 
 
+def check_decode_fused(current: dict, baseline: dict) -> List[str]:
+    errors = []
+    for n, base in sorted(baseline.items()):
+        cur = current.get(n)
+        if cur is None:
+            errors.append(f"{n} tiers: missing from current results")
+            continue
+        if cur["launches_fused"] != 1:
+            errors.append(
+                f"{n} tiers: fused path issued {cur['launches_fused']} "
+                f"launches/step (must be exactly 1)"
+            )
+        if cur["launches_per_pool"] < base["launches_per_pool"]:
+            errors.append(
+                f"{n} tiers: per-pool oracle launch count shrank "
+                f"{base['launches_per_pool']} -> {cur['launches_per_pool']} "
+                f"(oracle no longer O(tiers)?)"
+            )
+        if not cur.get("outputs_match", False):
+            errors.append(
+                f"{n} tiers: fused outputs/hotness diverged from the "
+                f"per-pool oracle (out_err={cur.get('out_max_err')}, "
+                f"hot_err={cur.get('hot_max_err')})"
+            )
+    return errors
+
+
 def check_prefetch(current: dict, baseline: dict) -> List[str]:
     errors = []
     cur = current.get("prefetch")
@@ -131,6 +164,13 @@ def _run_prefetch(results: dict, baseline: dict) -> None:
     prefetch_hitrate.run(Csv("prefetch"), results)
 
 
+def _run_decode_fused(results: dict, baseline: dict) -> None:
+    from benchmarks import decode_fused
+
+    tiers = tuple(sorted(int(k) for k in baseline))
+    decode_fused.run(Csv("decode_fused"), tier_counts=tiers, results=results)
+
+
 @dataclasses.dataclass(frozen=True)
 class Guard:
     name: str
@@ -143,6 +183,7 @@ GUARDS = (
     Guard("migration_dispatch", "migration_dispatch.json", _run_dispatch, check_dispatch),
     Guard("media_overlap", "media_overlap.json", _run_media, check_media),
     Guard("prefetch_hitrate", "prefetch_hitrate.json", _run_prefetch, check_prefetch),
+    Guard("decode_fused", "decode_fused.json", _run_decode_fused, check_decode_fused),
 )
 
 

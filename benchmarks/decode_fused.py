@@ -1,0 +1,129 @@
+"""Single-launch fused decode attention vs the per-pool launch loop.
+
+The paper's trade-off only holds if the compressed-tier access path stays
+cheap as tiers are added; the per-pool path pays one Pallas launch per tier
+pool per decode step, so tier count taxes decode latency. The fused
+megakernel walks a unified page table in ONE launch regardless of tier
+count (host sentinel rows ride along for free).
+
+Rows: ``decode_fused/<n>t-{fused|perpool}`` with us_per_call = eager step
+wall time (interpret-mode Pallas; directional), derived = launches/step +
+max |fused - oracle| over outputs and normalized hotness.
+
+``--json PATH`` dumps {n_tiers: {launches_fused, launches_per_pool,
+out_max_err, hot_max_err, outputs_match}} for the perf-guard baseline
+(``benchmarks/baseline_guard.py``: fused launches/step must be exactly 1
+at every tier count and outputs must match the per-pool oracle).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_us
+from repro.kernels import ops, ref
+
+B, H, KV, HD, T, MP, R = 2, 8, 2, 32, 8, 4, 8
+# Tier pools alternate codec widths so every fused launch exercises both
+# in-kernel dequant paths once >= 2 tiers are present.
+TIER_BITS = (8, 4, 8, 4)
+FP32_TOL = 2e-4
+
+
+def _make_pools(n_tiers: int, rng: np.random.Generator):
+    pools = {}
+    for i in range(n_tiers):
+        bits = TIER_BITS[i]
+        pages = jnp.asarray(rng.normal(0, 1, (MP * B, T, KV, HD)), jnp.bfloat16)
+        kp, ks = ref.quant_kv_page(pages, bits)
+        vp, vs = ref.quant_kv_page(pages * 0.5, bits)
+        table = jnp.asarray(rng.integers(0, MP * B, (B, MP)), jnp.int32)
+        pools[f"tier{i}"] = dict(
+            k_pages=kp, k_scales=ks, v_pages=vp, v_scales=vs,
+            page_table=table,
+            n_pages=jnp.asarray(rng.integers(1, MP + 1, B), jnp.int32),
+            bits=bits,
+        )
+    return pools
+
+
+def _make_host(rng: np.random.Generator):
+    hs = 6
+    return dict(
+        summary=jnp.asarray(rng.normal(0, 1, (hs, KV, HD)), jnp.float32),
+        table=jnp.asarray(rng.integers(0, hs, (B, MP)), jnp.int32),
+        n=jnp.asarray(rng.integers(1, MP + 1, B), jnp.int32),
+        page_tokens=T,
+    )
+
+
+def run(csv: Csv, tier_counts=(2, 3, 4), results: dict | None = None) -> None:
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, HD)), jnp.float32)
+    recent_k = jnp.asarray(rng.normal(0, 1, (B, R, KV, HD)), jnp.bfloat16)
+    recent_v = jnp.asarray(rng.normal(0, 1, (B, R, KV, HD)), jnp.bfloat16)
+    rlen = jnp.asarray([R, R // 2], jnp.int32)
+
+    for n in tier_counts:
+        pools = _make_pools(n, rng)
+        host = _make_host(rng)
+
+        def step(telemetry=True):
+            return ops.tiered_decode_attention(
+                q, pools, recent_k, recent_v, rlen,
+                with_telemetry=telemetry, host=host,
+            )
+
+        ops.use_fused(True)
+        ops.reset_launch_count()
+        out_f, hot_f = step()
+        launches_fused = ops.launch_count()
+        fused_us = time_us(lambda: step(False).block_until_ready(), iters=3, warmup=1)
+
+        ops.use_fused(False)
+        ops.reset_launch_count()
+        out_p, hot_p = step()
+        launches_pp = ops.launch_count()
+        pp_us = time_us(lambda: step(False).block_until_ready(), iters=3, warmup=1)
+        ops.use_fused(True)
+
+        out_err = float(jnp.max(jnp.abs(out_f - out_p)))
+        hot_err = max(
+            float(jnp.max(jnp.abs(hot_f[k] - hot_p[k]))) for k in hot_f
+        )
+        match = out_err <= FP32_TOL and hot_err <= FP32_TOL
+        csv.add(
+            f"{n}t-fused", fused_us,
+            f"launches={launches_fused};out_err={out_err:.1e};hot_err={hot_err:.1e}",
+        )
+        csv.add(f"{n}t-perpool", pp_us, f"launches={launches_pp}")
+        if results is not None:
+            results[str(n)] = {
+                "launches_fused": launches_fused,
+                "launches_per_pool": launches_pp,
+                "out_max_err": out_err,
+                "hot_max_err": hot_err,
+                "outputs_match": match,
+            }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiers", default="2,3,4", help="comma-separated tier counts")
+    ap.add_argument("--json", default=None, help="dump guard metrics to PATH")
+    args = ap.parse_args()
+    csv = Csv("decode_fused")
+    results: dict = {}
+    run(csv, tier_counts=tuple(int(x) for x in args.tiers.split(",")), results=results)
+    csv.emit()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -49,8 +49,17 @@ def _run(model, params, async_migration: bool) -> TieredEngine:
         model, params, batch_slots=2, page_tokens=8, max_seq_len=128,
         recent_window=32,
         ts=TierScapeRunConfig(
-            enabled=True, policy="analytical", alpha=0.3,
+            # alpha=0 (max TCO savings) guarantees the plan demotes through
+            # the host swap device: the decode step now emits LIVE hotness
+            # (fused-attention telemetry), so a mid-alpha model keeps this
+            # tiny hot working set device-resident and would give the
+            # pipeline nothing to overlap.
+            enabled=True, policy="analytical", alpha=0.0,
             window_steps=WINDOW_STEPS, async_migration=async_migration,
+            # This benchmark isolates demand-path overlap; speculative
+            # prefetch (on by default elsewhere) would bill extra reads on
+            # the queues being measured. prefetch_hitrate covers it.
+            prefetch=False,
         ),
     )
     rng = np.random.default_rng(0)

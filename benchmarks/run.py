@@ -7,6 +7,7 @@
   fig12      tail latency (mean + p99)
   fig13      daemon tax
   serving    tiered-KV engine vs dense decode on a real model
+  decode_fused  single-launch fused attention vs per-pool loop (launches/step)
   migration  batched cohort executor vs per-page loop (dispatches + time)
   media      async media pipeline: decode/migration overlap + device charges
   prefetch   speculative readahead: hit rate + swap-in stall reduction
@@ -25,6 +26,7 @@ import argparse
 
 from benchmarks.common import Csv
 from benchmarks import (
+    decode_fused,
     fig3_characterization,
     fig8_frontier,
     fig9_placement,
@@ -45,6 +47,7 @@ TABLES = {
     "fig12": fig12_tail_latency.run,
     "fig13": fig13_daemon_tax.run,
     "serving": serving_tiered.run,
+    "decode_fused": decode_fused.run,
     "migration": migration_batch.run,
     "media": media_pipeline.run,
     "prefetch": prefetch_hitrate.run,

@@ -52,7 +52,8 @@ def run(csv: Csv) -> None:
             stats.decode_s / max(stats.steps, 1) * 1e6,
             f"peak_tco_savings_pct={stats.tco_savings_pct:.1f};"
             f"hbm_bytes={eng.cache.hbm_bytes()};migrations={stats.migrations};"
-            f"daemon_s={stats.daemon_s:.2f}",
+            f"daemon_s={stats.daemon_s:.2f};"
+            f"attn_launches_per_step={stats.attn_launches / max(stats.steps, 1):.0f}",
         )
 
 

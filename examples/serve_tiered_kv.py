@@ -37,15 +37,15 @@ def main() -> None:
                     help="opt back into blocking window boundaries (async "
                          "overlapped migration is the default; this runs "
                          "the serial equivalence oracle instead)")
-    ap.add_argument("--prefetch", action="store_true",
-                    help="speculatively stage warming host pages mid-window "
-                         "so boundary promotions skip the swap-in read "
-                         "(async path only)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable speculative staging of warming host pages "
+                         "(prefetch is the default now that the fused decode "
+                         "kernel feeds the predictor in-engine; it is a "
+                         "no-op anyway with --serial-migration)")
     ap.add_argument("--vary-prompts", action="store_true",
                     help="submit unequal prompt lengths (per-slot decode)")
     args = ap.parse_args()
-    if args.prefetch and args.serial_migration:
-        ap.error("--prefetch requires the async path; drop --serial-migration")
+    prefetch = not args.no_prefetch and not args.serial_migration
 
     cfg = configs.get_smoke(args.arch)
     model = Model(cfg)
@@ -58,7 +58,7 @@ def main() -> None:
         ts=TierScapeRunConfig(enabled=True, policy=args.policy,
                               alpha=args.alpha, window_steps=8,
                               async_migration=not args.serial_migration,
-                              prefetch=args.prefetch),
+                              prefetch=prefetch),
     )
 
     rng = np.random.default_rng(0)
@@ -79,9 +79,11 @@ def main() -> None:
           f"{stats.steps} engine steps ({wall:.1f}s wall)")
     print(f"windows={stats.windows} migrations={stats.migrations} "
           f"daemon_s={stats.daemon_s:.2f} overlapped_steps={stats.overlapped_steps}")
-    if args.prefetch:
+    if prefetch:
         print(f"prefetch: staged={stats.prefetch_staged} "
               f"hits={stats.prefetch_hits} misses={stats.prefetch_misses}")
+    print(f"attn launches: {stats.attn_launches} "
+          f"({stats.attn_launches / max(stats.steps, 1):.0f}/step, fused)")
     busy = {d: round(s * 1e6, 2)
             for d, s in eng.cache.pipeline.media_busy_s().items() if s > 0}
     if busy:

@@ -23,6 +23,19 @@ def _default_async_migration() -> bool:
     return v not in ("0", "false", "off")
 
 
+def _default_prefetch() -> bool:
+    """Default for ``TierScapeRunConfig.prefetch``: True — the predictor is
+    now fed in-engine (the fused decode kernel's host-page would-have-
+    touched mass flows straight into ``prefetch_candidates``), closing the
+    ROADMAP soak condition; placements stay bit-identical to a prefetch-free
+    run by construction, so the flip is purely a latency win.
+    ``REPRO_PREFETCH=0`` is the escape hatch, mirroring
+    ``REPRO_ASYNC_MIGRATION``. Prefetch still requires the async path: with
+    ``async_migration`` disabled the cache quietly ignores it."""
+    v = os.environ.get("REPRO_PREFETCH", "1").strip().lower()
+    return v not in ("0", "false", "off")
+
+
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
     n_experts: int
@@ -213,5 +226,7 @@ class TierScapeRunConfig:
     # window-boundary promotion commits without paying the swap-in read.
     # Requires the async pipeline; placements stay bit-identical to a
     # prefetch-free run (speculation hides latency, never changes policy).
-    prefetch: bool = False
+    # Defaults on now that the fused decode kernel feeds the predictor
+    # in-engine (env-overridable, see ``_default_prefetch``).
+    prefetch: bool = dataclasses.field(default_factory=_default_prefetch)
     prefetch_max_pages: int = 8

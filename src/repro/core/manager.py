@@ -140,6 +140,11 @@ class TierScapeManager:
         self._dev_fixed_s = np.array([d.fixed_latency_s for d in self._devices])
         self.media_pressure: Dict[str, float] = {}
         self._window = 0
+        # In-engine would-have-touched mass for host-resident regions (the
+        # fused decode kernel's sentinel telemetry). Accumulates within the
+        # profile window, feeds ONLY the prefetch predictor — never the
+        # placement-driving access counts — and resets at window close.
+        self.host_mass = np.zeros(n_regions, dtype=np.float64)
         self._fault_counts = np.zeros(n_regions, dtype=np.int64)
         self._fault_overhead_s = 0.0
         self.history: List[WindowStats] = []
@@ -152,6 +157,18 @@ class TierScapeManager:
 
     def record_access_indices(self, idx: np.ndarray, weights=None) -> None:
         self.telemetry.record_indices(idx, weights)
+
+    def record_host_mass(self, counts: np.ndarray) -> None:
+        """Ingest would-have-touched mass for host-resident regions.
+
+        The decode kernel's host sentinel rows score each host page's key
+        centroid against live queries — the softmax mass decode *would*
+        have spent on the page had it been device-resident. Telemetry for
+        the warming-page predictor only (``prefetch_candidates``): it never
+        enters ``telemetry``'s access counts, so placement decisions — and
+        therefore prefetch's oracle-identical-placement guarantee — are
+        untouched by construction."""
+        self.host_mass += counts
 
     def fault_back(self, region_ids: np.ndarray, n_blocks=1) -> np.ndarray:
         """Engine faulted ``n_blocks`` blocks of each region on access.
@@ -212,6 +229,13 @@ class TierScapeManager:
         so a speculative consumer stays bit-identical to a non-speculative
         run by construction.
 
+        Host-resident regions additionally qualify through their in-engine
+        would-have-touched mass (``record_host_mass``): live decode traffic
+        scoring a host page's sentinel IS the warming signal, so it joins
+        the trend term in the projection and makes a region a candidate
+        even when the PEBS-analogue feed never sampled it. With no host
+        mass recorded the predictor is exactly the trend detector above.
+
         Returns up to ``max_regions`` region ids, hottest-projected first
         (deterministic: ties broken by region id). Empty until one window
         has closed — there is no baseline to rise from before that.
@@ -221,8 +245,8 @@ class TierScapeManager:
         h_now = self.telemetry._accum
         h_prev = self.telemetry.history[0]
         delta = h_now - h_prev
-        projected = h_now + np.maximum(delta, 0.0)
-        mask = np.asarray(eligible, bool) & (delta > 0)
+        projected = h_now + np.maximum(delta, 0.0) + self.host_mass
+        mask = np.asarray(eligible, bool) & ((delta > 0) | (self.host_mass > 0))
         if not mask.any():
             return np.empty(0, np.int64)
         k = int(min(max(top_k, 1), self.n_regions))
@@ -275,6 +299,9 @@ class TierScapeManager:
         """Phase 1: close the profile window; returns the window's hotness."""
         t0 = time.perf_counter()
         hotness = self.telemetry.close_window()
+        # Would-have-touched mass is a within-window signal: the predictor
+        # reads it mid-window; the boundary starts a fresh accumulation.
+        self.host_mass[:] = 0.0
         self._pending_daemon_s += time.perf_counter() - t0
         return hotness
 

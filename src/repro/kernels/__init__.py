@@ -4,8 +4,11 @@
   * ``dequant_page``    — tier decompression (the fault path)
   * ``transcode_page``  — fused tier-to-tier requantization (the migration
                           path: int8 <-> int4 with no dense HBM round-trip)
-  * ``paged_attention`` — fused decode attention over a quantized tier pool
-                          (warm-data access without fault-and-decompress)
+  * ``paged_attention`` — decode attention over quantized tier pools
+                          (warm-data access without fault-and-decompress):
+                          the per-pool kernel plus the single-launch
+                          multi-tier megakernel (unified page table, host
+                          sentinel rows, in-VMEM logsumexp merge)
 
 ``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles every kernel
 is tested against (shape/dtype sweeps in tests/test_kernels.py).

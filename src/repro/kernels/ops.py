@@ -1,37 +1,96 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``tiered_decode_attention`` is the serving hot path: one paged-attention
-kernel launch per tier pool (each pool has its own codec width), one dense
-pass over the recent uncompressed window, and an exact logsumexp merge of
-the flash partials. ``page_hotness`` turns the kernels' per-page mass
-telemetry into the normalized hotness the TierScape manager consumes.
+``tiered_decode_attention`` is the serving hot path. Default mode is the
+single-launch megakernel (``paged_attention.fused_tiered_attention``): one
+unified page table walks every compressed page of a sequence regardless of
+codec, the dense recent window rides the final grid step, host-resident
+pages appear as sentinel rows emitting a "would-have-touched" mass, and the
+logsumexp merge happens in VMEM scratch — exactly one Pallas launch per
+decode step, O(1) in tier count.
 
-``use_pallas`` toggles kernel vs pure-jnp oracle (ref.py); kernels run in
-interpret mode on CPU (the TPU lowering is exercised by the dry-run).
+``use_fused(False)`` flips back to the legacy per-pool path (one kernel
+launch per tier pool + a dense recent pass + a post-hoc jnp merge) — kept
+as the equivalence oracle: outputs and normalized hotness must match the
+fused path to fp32 tolerance. ``use_pallas`` independently toggles kernel
+vs pure-jnp oracle (ref.py); kernels run in interpret mode on CPU (the TPU
+lowering is exercised by the dry-run).
+
+``page_hotness`` turns per-page mass telemetry into the normalized hotness
+the TierScape manager consumes. ``launch_count``/``reset_launch_count``
+count actual Pallas launches issued through this module (the benchmark /
+baseline-guard metric); ``decode_launches_per_step`` is the modeled
+launches-per-decode-step proxy the serving cache bills, valid on the ref
+path too.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.dequant_page import dequant_pages as dequant_pages_kernel
-from repro.kernels.paged_attention import paged_quant_attention as paged_attn_kernel
+from repro.kernels.paged_attention import (
+    TIER_HOST,
+    TIER_INT4,
+    TIER_INT8,
+    TIER_INVALID,
+    fused_tiered_attention as fused_attn_kernel,
+    paged_quant_attention as paged_attn_kernel,
+)
 from repro.kernels.quant_page import quant_pages as quant_pages_kernel
 from repro.kernels.transcode_page import transcode_pages as transcode_pages_kernel
 
 Array = jax.Array
 
 _USE_PALLAS = True
+_USE_FUSED = True
+
+# Pallas launches issued through this module since the last reset (trace-time
+# count; call the wrappers eagerly — as the benchmarks do — for a per-step
+# reading).
+_LAUNCHES = 0
 
 
 def use_pallas(flag: bool) -> None:
     global _USE_PALLAS
     _USE_PALLAS = flag
+
+
+def use_fused(flag: bool) -> None:
+    """Toggle the single-launch megakernel (True, default) vs the per-pool
+    launch loop (False — the equivalence oracle)."""
+    global _USE_FUSED
+    _USE_FUSED = flag
+
+
+def reset_launch_count() -> None:
+    global _LAUNCHES
+    _LAUNCHES = 0
+
+
+def launch_count() -> int:
+    return _LAUNCHES
+
+
+def _count_launch(n: int = 1) -> None:
+    global _LAUNCHES
+    if _USE_PALLAS:
+        _LAUNCHES += n
+
+
+def decode_launches_per_step(n_pools: int) -> int:
+    """Modeled attention launches per (layer, decode step): 1 on the fused
+    path regardless of tier count (host sentinels ride the same launch),
+    one per tier pool on the legacy path. Mode-dependent, backend-agnostic:
+    the jnp oracle mirrors the same launch structure, so the serving
+    cache's dispatch proxy bills it identically."""
+    if _USE_FUSED:
+        return 1
+    return int(n_pools)
 
 
 def quant_pages(pages: Array, bits: int) -> Tuple[Array, Array]:
@@ -62,6 +121,7 @@ def transcode_pages(
 
 def _pool_partials(q: Array, pool: Dict[str, Array]):
     fn = paged_attn_kernel if _USE_PALLAS else _ref.paged_quant_attention
+    _count_launch()
     return fn(
         q,
         pool["k_pages"],
@@ -74,6 +134,118 @@ def _pool_partials(q: Array, pool: Dict[str, Array]):
     )
 
 
+# ---------------------------------------------------------------------------
+# Unified-table construction (fused path)
+# ---------------------------------------------------------------------------
+
+
+def _unified_operands(q, pools, recent_k, host):
+    """Group N tier pools into the megakernel's two codec-class buffers and
+    build the unified page table.
+
+    Pools of the same codec width concatenate along the page axis (single
+    pool per class is the no-copy fast path — the serving engine's layout);
+    each pool's table columns shift by the preceding same-class pool sizes
+    so ``(pool_slot, tier_code)`` rows address the class buffer directly.
+    Host sentinel rows index the summary buffer. Returns the kernel
+    operands plus the {name: (col_lo, col_hi)} slot layout used to slice
+    per-pool hotness back out of the unified mass."""
+    b = q.shape[0]
+    hd = q.shape[-1]
+    kv = recent_k.shape[2]
+    names = sorted(pools)
+    if names:
+        t = int(pools[names[0]]["k_pages"].shape[1])
+    elif host is not None:
+        t = int(host["page_tokens"])
+    else:
+        t = 1
+
+    groups = {8: [], 4: []}
+    slot_cols, tier_cols = [], []
+    layout: Dict[str, Tuple[int, int]] = {}
+    off = {8: 0, 4: 0}
+    col = 0
+    for n in names:
+        p = pools[n]
+        bits = int(p["bits"])
+        mp = p["page_table"].shape[1]
+        code = TIER_INT8 if bits == 8 else TIER_INT4
+        slot_cols.append(p["page_table"].astype(jnp.int32) + off[bits])
+        valid = jnp.arange(mp, dtype=jnp.int32)[None] < p["n_pages"][:, None]
+        tier_cols.append(jnp.where(valid, code, TIER_INVALID).astype(jnp.int32))
+        groups[bits].append(p)
+        off[bits] += int(p["k_pages"].shape[0])
+        layout[n] = (col, col + mp)
+        col += mp
+    if host is not None:
+        mp = host["table"].shape[1]
+        slot_cols.append(host["table"].astype(jnp.int32))
+        valid = jnp.arange(mp, dtype=jnp.int32)[None] < host["n"][:, None]
+        tier_cols.append(jnp.where(valid, TIER_HOST, TIER_INVALID).astype(jnp.int32))
+        layout["host"] = (col, col + mp)
+        col += mp
+        summary = host["summary"].astype(jnp.float32)
+    else:
+        summary = jnp.zeros((1, kv, hd), jnp.float32)
+
+    if col == 0:  # no pools, no host rows: recent-window-only launch
+        uni_slot = jnp.zeros((b, 1), jnp.int32)
+        uni_tier = jnp.full((b, 1), TIER_INVALID, jnp.int32)
+    else:
+        uni_slot = jnp.concatenate(slot_cols, axis=1)
+        uni_tier = jnp.concatenate(tier_cols, axis=1)
+
+    def _cat(sel, dummy_dtype, last_dim):
+        if not sel:
+            pay = jnp.zeros((1, t, kv, last_dim), dummy_dtype)
+            sc = jnp.ones((1, t, kv), jnp.float32)
+            return pay, sc, pay, sc
+        if len(sel) == 1:
+            p = sel[0]
+            return p["k_pages"], p["k_scales"], p["v_pages"], p["v_scales"]
+        return (
+            jnp.concatenate([p["k_pages"] for p in sel]),
+            jnp.concatenate([p["k_scales"] for p in sel]),
+            jnp.concatenate([p["v_pages"] for p in sel]),
+            jnp.concatenate([p["v_scales"] for p in sel]),
+        )
+
+    k8, s8k, v8, s8v = _cat(groups[8], jnp.int8, hd)
+    k4, s4k, v4, s4v = _cat(groups[4], jnp.uint8, hd // 2)
+    return (k8, s8k, v8, s8v, k4, s4k, v4, s4v, summary, uni_slot, uni_tier, t, layout)
+
+
+def _fused_path(q, pools, recent_k, recent_v, recent_len, host, with_telemetry):
+    b = q.shape[0]
+    rlen = jnp.broadcast_to(jnp.asarray(recent_len, jnp.int32), (b,))
+    if _USE_PALLAS:
+        (k8, s8k, v8, s8v, k4, s4k, v4, s4v, summary,
+         uni_slot, uni_tier, t, layout) = _unified_operands(q, pools, recent_k, host)
+        # Sentinel mass multiplier follows the HOST pages' token count (the
+        # ref oracle's contract), not the device pools' page shape.
+        pt = int(host["page_tokens"]) if host is not None else t
+        _count_launch()
+        out, m, l, mass, base = fused_attn_kernel(
+            q, k8, s8k, v8, s8v, k4, s4k, v4, s4v, summary,
+            recent_k, recent_v, uni_slot, uni_tier, rlen, page_tokens=pt,
+        )
+        if not with_telemetry:
+            return out
+        hot = {
+            name: page_hotness(mass[:, lo:hi], base[:, lo:hi], m, l)
+            for name, (lo, hi) in layout.items()
+        }
+        return out, hot
+    out, m, l, masses = _ref.fused_tiered_attention(
+        q, pools, recent_k, recent_v, rlen, host=host
+    )
+    if not with_telemetry:
+        return out
+    hot = {name: page_hotness(ms, bs, m, l) for name, (ms, bs) in masses.items()}
+    return out, hot
+
+
 def tiered_decode_attention(
     q: Array,  # [B, H, hd]
     pools: Dict[str, Dict[str, Array]],
@@ -82,12 +254,23 @@ def tiered_decode_attention(
     recent_len,
     cfg=None,
     with_telemetry: bool = False,
+    host: Optional[Dict[str, Array]] = None,
 ):
     """Attention over tiered compressed KV pools + dense recent window.
 
     Returns out [B, H, hd] f32; with_telemetry=True also returns
-    {tier: normalized page hotness [B, MP]} (softmax mass per page).
+    {tier: normalized page hotness [B, MP]} (softmax mass per page). When
+    ``host`` is given (dict with ``summary`` [Hs, KV, hd], ``table``
+    [B, MPh], ``n`` [B], ``page_tokens``), the hotness dict additionally
+    carries "host": the normalized would-have-touched mass of host-resident
+    pages — telemetry for the prefetch predictor, never part of the output.
+
+    Fused mode (default): one Pallas launch per call, O(1) in tier count.
+    ``use_fused(False)``: one launch per pool + post-hoc merge (the
+    equivalence oracle; outputs/hotness match to fp32 tolerance).
     """
+    if _USE_FUSED:
+        return _fused_path(q, pools, recent_k, recent_v, recent_len, host, with_telemetry)
     parts = [_ref.dense_recent_attention(q, recent_k, recent_v, recent_len)]
     masses = {}
     for name in sorted(pools):
@@ -100,19 +283,22 @@ def tiered_decode_attention(
     # Global (m_tot, l_tot) for exact normalization of page masses.
     m_tot = jnp.max(jnp.stack([p[1] for p in parts]), axis=0)  # [B,H]
     l_tot = sum(p[2] * jnp.exp(p[1] - m_tot) for p in parts)  # [B,H]
-    # Heads were collapsed in the mass telemetry; normalize by the summed
-    # head partition function at the global max base.
-    z = jnp.sum(l_tot * jnp.exp(m_tot - jnp.max(m_tot, -1, keepdims=True)), -1)
-    mref = jnp.max(m_tot, -1)  # [B]
+    if host is not None:
+        masses["host"] = _ref.host_page_mass(
+            q, host["summary"], host["table"], host["n"], host["page_tokens"]
+        )
     hot = {
-        name: mass * jnp.exp(base - mref[:, None]) / jnp.maximum(z[:, None], 1e-30)
+        name: page_hotness(mass, base, m_tot, l_tot)
         for name, (mass, base) in masses.items()
     }
     return out, hot
 
 
 def page_hotness(mass: Array, base: Array, m_tot: Array, l_tot: Array) -> Array:
-    """Rebase per-page local-max masses to the merged global softmax."""
+    """Rebase per-page local-max masses to the merged global softmax.
+
+    Heads were collapsed in the mass telemetry; normalize by the summed
+    head partition function at the global max base."""
     z = jnp.sum(l_tot * jnp.exp(m_tot - jnp.max(m_tot, -1, keepdims=True)), -1)
     mref = jnp.max(m_tot, -1)
     return mass * jnp.exp(base - mref[:, None]) / jnp.maximum(z[:, None], 1e-30)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: paged decode attention over ONE quantized tier pool.
+"""Pallas TPU kernels: paged decode attention over quantized tier pools.
 
 This is the paper's warm-data access path made cheap: instead of fault-and-
 decompress (the 2-Tier cost model), the decode step *reads the compressed
@@ -7,15 +7,28 @@ the BlockSpec index_map via scalar prefetch), dequantized in registers, and
 consumed by an online-softmax accumulation. Per-page softmax mass is emitted
 as exact hotness telemetry for the TierScape manager.
 
-Mixed tiers are handled by running this kernel once per tier pool and
-merging the flash partials (exact logsumexp merge) together with the dense
-recent-window partial — see ``ops.tiered_decode_attention``.
+Two kernels live here:
 
-Grid: (batch, max_pages). The page axis is sequential ("arbitrary"): VMEM
-scratch carries (acc, m, l) across pages of one sequence; outputs are
-written at the last page step. Invalid table slots (>= n_pages[b]) are
-skipped with @pl.when, and their index_map clamps to page 0 so the pipeline
-still has a legal block to fetch.
+``paged_quant_attention`` — flash partials over ONE pool. Mixed tiers run it
+once per tier pool and merge the partials (exact logsumexp) together with
+the dense recent-window partial post-hoc — the per-pool oracle path in
+``ops.tiered_decode_attention``; one launch per tier.
+
+``fused_tiered_attention`` — the single-launch megakernel. One unified page
+table whose rows carry ``(pool_slot, tier_code)`` walks ALL compressed pages
+of a sequence regardless of codec: scalar-prefetched tier codes select the
+int8/int4 dequant path in-kernel, host-resident pages appear as sentinel
+rows that fetch only a tiny per-page key centroid (no payload) and emit a
+"would-have-touched" softmax mass as telemetry, the dense recent window runs
+as the final grid step of the same launch, and the (acc, m, l) logsumexp
+merge happens in VMEM scratch — one launch per decode step, O(1) in tier
+count.
+
+Grids: (batch, pages[, +1]). The page axis is sequential ("arbitrary"):
+VMEM scratch carries (acc, m, l) across pages of one sequence; outputs are
+written at the last page step. Invalid table slots are skipped with
+@pl.when, and their index_maps clamp/gate so the pipeline still has a legal
+block to fetch.
 """
 
 from __future__ import annotations
@@ -33,6 +46,15 @@ _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPa
 from repro.kernels.packing import unpack_int4 as _unpack_int4
 
 NEG_INF = -1e30
+
+# Tier codes carried by the unified page table (``fused_tiered_attention``).
+# Rows are (pool_slot, tier_code): the code picks the in-kernel dequant path
+# (int8 vs int4 group buffer), marks host sentinels (summary fetch only, no
+# payload), or invalidates the row entirely.
+TIER_INT8 = 0
+TIER_INT4 = 1
+TIER_HOST = 2
+TIER_INVALID = -1
 
 
 def _paged_attn_kernel(
@@ -173,4 +195,223 @@ def paged_quant_attention(
         ),
         interpret=interpret,
     )(page_table, n_pages, q, k_pages, k_scales, v_pages, v_scales)
+    return out, m, l, mass, base
+
+
+# ---------------------------------------------------------------------------
+# Single-launch multi-tier megakernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_attn_kernel(
+    # scalar-prefetch operands
+    slot_ref,  # [B, MS] int32 pool slot within its tier-class buffer
+    tier_ref,  # [B, MS] int32 TIER_* code per unified slot
+    rlen_ref,  # [B] int32 dense recent-window fill
+    # array operands (blocked)
+    q_ref,  # [1, H, hd]
+    k8_ref,  # [1, T, KV, hd] int8 group buffer
+    s8k_ref,  # [1, T, KV]
+    v8_ref,
+    s8v_ref,
+    k4_ref,  # [1, T, KV, hd//2] int4 group buffer
+    s4k_ref,
+    v4_ref,
+    s4v_ref,
+    sum_ref,  # [1, KV, hd] f32 host-page key centroid (sentinel rows)
+    rk_ref,  # [1, R, KV, hd] dense recent window
+    rv_ref,
+    # outputs
+    out_ref,  # [1, H, hd] f32 (NORMALIZED — merge happens in-kernel)
+    m_ref,  # [1, H] f32 merged running max
+    l_ref,  # [1, H] f32 merged partition mass
+    mass_ref,  # [1, 1] f32 per (b, slot): softmax mass at its local base
+    base_ref,  # [1, 1] f32 per (b, slot): the local base
+    # scratch
+    acc_ref,  # [KV, G, hd] f32
+    run_m_ref,  # [KV, G] f32
+    run_l_ref,  # [KV, G] f32
+    *,
+    kv: int,
+    group: int,
+    page_tokens: int,
+    ms: int,
+):
+    """One grid step = one unified-table slot; the final step (p == ms) is
+    the dense recent window + in-VMEM finalization. Pool rows accumulate
+    (acc, m, l) online exactly like the per-pool kernel; host sentinel rows
+    touch no payload — they score the page's key centroid against q and
+    emit ``page_tokens * sum(exp(s - max s))`` as the would-have-touched
+    mass (telemetry only, never accumulated)."""
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    hd = acc_ref.shape[-1]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        run_m_ref[...] = jnp.full_like(run_m_ref, NEG_INF)
+        run_l_ref[...] = jnp.zeros_like(run_l_ref)
+
+    q = q_ref[0].astype(jnp.float32).reshape(kv, group, hd) / (hd**0.5)
+    tid = tier_ref[b, jnp.minimum(p, ms - 1)]
+
+    def _accumulate(k, v):
+        # Online-softmax update over one full page ([T, KV, hd] f32 k/v).
+        scores = jnp.einsum("kgh,tkh->kgt", q, k)  # [KV, G, T]
+        page_max = jnp.max(scores, axis=-1)
+        m_old = run_m_ref[...]
+        m_new = jnp.maximum(m_old, page_max)
+        alpha = jnp.exp(m_old - m_new)
+        e = jnp.exp(scores - m_new[..., None])
+        run_l_ref[...] = run_l_ref[...] * alpha + jnp.sum(e, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum("kgt,tkh->kgh", e, v)
+        run_m_ref[...] = m_new
+        pbase = jnp.max(page_max)
+        mass_ref[0, 0] = jnp.sum(jnp.exp(scores - pbase))
+        base_ref[0, 0] = pbase
+
+    @pl.when((p < ms) & (tid == TIER_INT8))
+    def _pool8():
+        k = k8_ref[0].astype(jnp.float32) * s8k_ref[0][..., None]
+        v = v8_ref[0].astype(jnp.float32) * s8v_ref[0][..., None]
+        _accumulate(k, v)
+
+    @pl.when((p < ms) & (tid == TIER_INT4))
+    def _pool4():
+        k = _unpack_int4(k4_ref[0].astype(jnp.int32)) * s4k_ref[0][..., None]
+        v = _unpack_int4(v4_ref[0].astype(jnp.int32)) * s4v_ref[0][..., None]
+        _accumulate(k, v)
+
+    @pl.when((p < ms) & (tid == TIER_HOST))
+    def _host_sentinel():
+        kbar = sum_ref[0].astype(jnp.float32)  # [KV, hd]
+        s = jnp.einsum("kgh,kh->kg", q, kbar)  # [KV, G]
+        pbase = jnp.max(s)
+        mass_ref[0, 0] = page_tokens * jnp.sum(jnp.exp(s - pbase))
+        base_ref[0, 0] = pbase
+
+    @pl.when((p < ms) & (tid < 0))
+    def _skip():
+        mass_ref[0, 0] = 0.0
+        base_ref[0, 0] = NEG_INF
+
+    @pl.when(p == ms)
+    def _recent_and_finalize():
+        rk = rk_ref[0].astype(jnp.float32)  # [R, KV, hd]
+        rv = rv_ref[0].astype(jnp.float32)
+        r = rk.shape[0]
+        scores = jnp.einsum("kgh,rkh->kgr", q, rk)  # [KV, G, R]
+        valid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, r), 2) < rlen_ref[b]
+        scores = jnp.where(valid, scores, NEG_INF)
+        page_max = jnp.max(scores, axis=-1)
+        m_old = run_m_ref[...]
+        m_new = jnp.maximum(m_old, page_max)
+        # Safe shift: both the recent window (rlen may be 0) and the pools
+        # (all-host / empty) can be vacuous, so NEG_INF never enters exp.
+        shift = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+        e = jnp.where(valid, jnp.exp(scores - shift[..., None]), 0.0)
+        alpha = jnp.where(m_old > NEG_INF / 2, jnp.exp(m_old - shift), 0.0)
+        l_new = run_l_ref[...] * alpha + jnp.sum(e, axis=-1)
+        acc = acc_ref[...] * alpha[..., None] + jnp.einsum("kgt,tkh->kgh", e, rv)
+        out_ref[0] = (acc / jnp.maximum(l_new, 1e-30)[..., None]).reshape(kv * group, hd)
+        m_fin = jnp.where(l_new > 0.0, m_new, 0.0)
+        m_ref[0] = m_fin.reshape(kv * group)
+        l_ref[0] = l_new.reshape(kv * group)
+
+
+@functools.partial(jax.jit, static_argnames=("page_tokens", "interpret"))
+def fused_tiered_attention(
+    q: jax.Array,  # [B, H, hd]
+    k8: jax.Array,  # [P8, T, KV, hd] int8 (concat of all int8 pools)
+    s8k: jax.Array,  # [P8, T, KV] f32
+    v8: jax.Array,
+    s8v: jax.Array,
+    k4: jax.Array,  # [P4, T, KV, hd//2] uint8 (concat of all int4 pools)
+    s4k: jax.Array,
+    v4: jax.Array,
+    s4v: jax.Array,
+    host_summary: jax.Array,  # [Hs, KV, hd] f32 per-page key centroids
+    recent_k: jax.Array,  # [B, R, KV, hd]
+    recent_v: jax.Array,
+    uni_slot: jax.Array,  # [B, MS] int32
+    uni_tier: jax.Array,  # [B, MS] int32 TIER_* codes
+    recent_len: jax.Array,  # [B] int32
+    page_tokens: int,
+    interpret: bool = True,
+):
+    """Single launch over every tier + host sentinels + the recent window.
+
+    Returns (out [B,H,hd] NORMALIZED f32, m [B,H], l [B,H],
+             mass [B,MS], base [B,MS]) where (m, l) are the fully merged
+    logsumexp stats (for hotness normalization) and mass/base follow the
+    unified-table slot layout (pool pages: exact page mass at its local
+    base; host sentinels: would-have-touched mass; invalid: 0 / NEG_INF).
+    """
+    b, h, hd = q.shape
+    t = k8.shape[1]
+    kv = k8.shape[2]
+    ms = uni_slot.shape[1]
+    r = recent_k.shape[1]
+    group = h // kv
+    hd4 = k4.shape[-1]
+
+    def _gated(code, ndim):
+        # Fetch the row the table names only when this row's tier matches;
+        # otherwise clamp to row 0 so the pipeline has a legal block.
+        def index_map(bi, pi, slot, tier, rlen):
+            pp = jnp.minimum(pi, ms - 1)
+            row = jnp.where(tier[bi, pp] == code, slot[bi, pp], 0)
+            return (row,) + (0,) * (ndim - 1)
+
+        return index_map
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, ms + 1),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, pi, *_: (bi, 0, 0)),
+            pl.BlockSpec((1, t, kv, hd), _gated(TIER_INT8, 4)),
+            pl.BlockSpec((1, t, kv), _gated(TIER_INT8, 3)),
+            pl.BlockSpec((1, t, kv, hd), _gated(TIER_INT8, 4)),
+            pl.BlockSpec((1, t, kv), _gated(TIER_INT8, 3)),
+            pl.BlockSpec((1, t, kv, hd4), _gated(TIER_INT4, 4)),
+            pl.BlockSpec((1, t, kv), _gated(TIER_INT4, 3)),
+            pl.BlockSpec((1, t, kv, hd4), _gated(TIER_INT4, 4)),
+            pl.BlockSpec((1, t, kv), _gated(TIER_INT4, 3)),
+            pl.BlockSpec((1, kv, hd), _gated(TIER_HOST, 3)),
+            pl.BlockSpec((1, r, kv, hd), lambda bi, pi, *_: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, r, kv, hd), lambda bi, pi, *_: (bi, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, pi, *_: (bi, 0, 0)),
+            pl.BlockSpec((1, h), lambda bi, pi, *_: (bi, 0)),
+            pl.BlockSpec((1, h), lambda bi, pi, *_: (bi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, pi, *_: (bi, jnp.minimum(pi, ms - 1))),
+            pl.BlockSpec((1, 1), lambda bi, pi, *_: (bi, jnp.minimum(pi, ms - 1))),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kv, group, hd), jnp.float32),
+            pltpu.VMEM((kv, group), jnp.float32),
+            pltpu.VMEM((kv, group), jnp.float32),
+        ],
+    )
+    out, m, l, mass, base = pl.pallas_call(
+        functools.partial(
+            _fused_attn_kernel, kv=kv, group=group, page_tokens=page_tokens, ms=ms
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, ms), jnp.float32),
+            jax.ShapeDtypeStruct((b, ms), jnp.float32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(uni_slot, uni_tier, recent_len, q, k8, s8k, v8, s8v, k4, s4k, v4, s4v,
+      host_summary, recent_k, recent_v)
     return out, m, l, mass, base

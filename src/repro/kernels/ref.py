@@ -230,6 +230,81 @@ def tiered_decode_attention(
     return merge_partials(parts)
 
 
+def host_page_mass(
+    q: Array,  # [B, H, hd]
+    summaries: Array,  # [Hs, KV, hd] f32 per-page key centroids
+    table: Array,  # [B, MPh] int32 summary-slot ids (sentinel rows)
+    n_rows: Array,  # [B] int32 valid prefix length
+    page_tokens: int,
+) -> Tuple[Array, Array]:
+    """Would-have-touched softmax mass for host-resident pages.
+
+    Host pages are never read in-step (that access-skip is the best-TCO
+    tiers' quality cost), so their exact attention mass is unknowable
+    without paying the fetch. The sentinel proxy scores the page's stored
+    key centroid (mean over its T tokens, computed from the dequantized K
+    payload at evict time) against q and charges all ``page_tokens`` tokens
+    at that score:
+
+        mass = T * sum_{kv,g} exp(s - max s),   base = max s
+
+    This is exactly what the fused kernel's sentinel rows emit; normalize
+    with the merged (m, l) like any page mass (``ops.page_hotness``).
+    Telemetry only — sentinels never contribute to (acc, m, l).
+    """
+    b, h, hd = q.shape
+    kv = summaries.shape[1]
+    g = h // kv
+    mp = table.shape[1]
+    qf = q.astype(jnp.float32).reshape(b, kv, g, hd) / (hd**0.5)
+    kbar = summaries[table]  # [B, MPh, KV, hd]
+    s = jnp.einsum("bkgh,bpkh->bkgp", qf, kbar.astype(jnp.float32))  # [B,KV,G,P]
+    base = jnp.max(s, axis=(1, 2))  # [B, MPh]
+    mass = page_tokens * jnp.sum(jnp.exp(s - base[:, None, None, :]), axis=(1, 2))
+    valid = jnp.arange(mp, dtype=jnp.int32)[None] < n_rows[:, None]
+    return jnp.where(valid, mass, 0.0), jnp.where(valid, base, NEG_INF)
+
+
+def fused_tiered_attention(
+    q: Array,
+    pools: dict,
+    recent_k: Array,
+    recent_v: Array,
+    recent_len,
+    host: dict = None,
+):
+    """Oracle for the single-launch megakernel: attention over N quantized
+    tier pools + dense recent window with an exact merge, plus per-pool
+    page-mass telemetry and (when ``host`` is given) the would-have-touched
+    mass of host sentinel rows.
+
+    ``host`` is a dict with keys ``summary`` [Hs, KV, hd], ``table``
+    [B, MPh], ``n`` [B] and ``page_tokens``. Returns
+    (out [B,H,hd] normalized, m_tot [B,H], l_tot [B,H],
+     masses {name: (mass, base)} incl. "host").
+    """
+    b = q.shape[0]
+    rlen = jnp.broadcast_to(jnp.asarray(recent_len, jnp.int32), (b,))
+    parts = [dense_recent_attention(q, recent_k, recent_v, rlen)]
+    masses = {}
+    for name in sorted(pools):
+        p = pools[name]
+        out_u, m, l, mass, base = paged_quant_attention(
+            q, p["k_pages"], p["k_scales"], p["v_pages"], p["v_scales"],
+            p["page_table"], p["n_pages"], p["bits"],
+        )
+        parts.append((out_u, m, l))
+        masses[name] = (mass, base)
+    out = merge_partials(parts)
+    m_tot = jnp.max(jnp.stack([p[1] for p in parts]), axis=0)
+    l_tot = sum(p[2] * jnp.exp(p[1] - m_tot) for p in parts)
+    if host is not None:
+        masses["host"] = host_page_mass(
+            q, host["summary"], host["table"], host["n"], host["page_tokens"]
+        )
+    return out, m_tot, l_tot, masses
+
+
 def tiered_page_masses(q, pools) -> dict:
     """Per-tier (page_mass, page_base) telemetry; normalize with
     ops.page_hotness after merging."""

@@ -6,15 +6,18 @@ seq_len-long KV cache — the ``decode_32k`` / ``long_500k`` cells.
 
 ``make_tiered_decode_step`` is the paper's technique on the decode path:
 the KV cache's warm/cold pages live in two device-resident quantized pools
-(host tiers are engine-managed outside the step); attention runs per-pool
-with an exact flash merge plus a dense recent window. The per-page softmax
-mass comes back as telemetry for the TierScape manager.
+(host tiers are engine-managed outside the step, visible only as sentinel
+rows); attention runs as ONE fused pass over all pools + host sentinels +
+the dense recent window (the megakernel with ``use_kernels=True``, its
+jnp oracle otherwise). Per-page softmax mass — including the host pages'
+would-have-touched mass — comes back as telemetry for the TierScape
+manager and its prefetch predictor.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,7 +90,11 @@ class TieredKVState:
 
     Layer-stacked pools: warm (int8, SL-F8-HB-class tier) and cold (int4,
     PK-I4-HB-class tier). Host tiers (C2/C4/C12) hold evicted pages outside
-    the step; the engine swaps them through the warm pool.
+    the step; the engine swaps them through the warm pool. Host-resident
+    pages are still *visible* to the step as sentinel rows: a tiny per-page
+    key centroid (``host_summary``) + a sentinel table, which the fused
+    attention launch scores for would-have-touched hotness telemetry
+    without fetching any payload.
     """
 
     warm_k: jax.Array  # [L, Pw, T, KV, hd] int8
@@ -106,6 +113,9 @@ class TieredKVState:
     recent_v: jax.Array
     recent_len: jax.Array  # [B] int32 — per-slot dense-window fill
     total_len: jax.Array  # [B] int32 — per-slot sequence position
+    host_summary: jax.Array  # [L, Hs, KV, hd] f32 — host-page key centroids
+    host_table: jax.Array  # [L, B, MP] int32 — sentinel rows -> summary slot
+    host_n: jax.Array  # [L, B] int32
 
 
 def init_tiered_kv_state(
@@ -118,11 +128,13 @@ def init_tiered_kv_state(
     max_pages_per_seq: int,
     recent_window: int,
     n_attn_layers: int,
+    host_slots: Optional[int] = None,
 ) -> TieredKVState:
     hd = cfg.head_dim_()
     kv = cfg.n_kv_heads
     la = n_attn_layers
     t = page_tokens
+    hs = max(host_slots if host_slots is not None else cold_pages, 1)
     return TieredKVState(
         warm_k=jnp.zeros((la, warm_pages, t, kv, hd), jnp.int8),
         warm_k_scales=jnp.ones((la, warm_pages, t, kv), jnp.float32),
@@ -140,6 +152,9 @@ def init_tiered_kv_state(
         recent_v=jnp.zeros((la, batch, recent_window, kv, hd), jnp.bfloat16),
         recent_len=jnp.zeros((batch,), jnp.int32),
         total_len=jnp.zeros((batch,), jnp.int32),
+        host_summary=jnp.zeros((la, hs, kv, hd), jnp.float32),
+        host_table=jnp.zeros((la, batch, max_pages_per_seq), jnp.int32),
+        host_n=jnp.zeros((la, batch), jnp.int32),
     )
 
 
@@ -285,9 +300,20 @@ def make_tiered_decode_step(
                 "bits": 4,
             },
         }
+        # Host sentinel rows ride the same attention pass: no payload, just
+        # the per-page key centroid scored for would-have-touched mass.
+        host = {
+            "summary": layer_tkv["host_summary"],
+            "table": layer_tkv["host_table"],
+            "n": layer_tkv["host_n"],
+            "page_tokens": layer_tkv["warm_k"].shape[1],
+        }
         if use_kernels:
+            # Fused megakernel: ONE Pallas launch for all pools + host
+            # sentinels + the recent window (see kernels/ops.py).
             out, hot = kops.tiered_decode_attention(
-                q[:, 0], pools, recent_k, recent_v, recent_len + 1, cfg, with_telemetry=True
+                q[:, 0], pools, recent_k, recent_v, recent_len + 1, cfg,
+                with_telemetry=True, host=host,
             )
         elif use_sp:
             sp = _make_sp(b)
@@ -297,11 +323,20 @@ def make_tiered_decode_step(
                 out_u, m, l, mass, _base = sp(q[:, 0], pools[name], pools[name]["bits"])
                 parts.append((out_u, m, l))
                 hot[name] = mass  # unnormalized local masses (telemetry)
+            hot["host"], _ = kref.host_page_mass(
+                q[:, 0], host["summary"], host["table"], host["n"], host["page_tokens"]
+            )
             out = kref.merge_partials(parts)
         else:
-            out = kref.tiered_decode_attention(q[:, 0], pools, recent_k, recent_v, recent_len + 1, cfg)
-            hot = {"warm": jnp.zeros_like(layer_tkv["warm_table"], jnp.float32)[:, :],
-                   "cold": jnp.zeros_like(layer_tkv["cold_table"], jnp.float32)[:, :]}
+            # Pure-jnp fused oracle: same semantics as the megakernel
+            # (exact merge + live telemetry incl. host mass), XLA-fused.
+            out, m_tot, l_tot, masses = kref.fused_tiered_attention(
+                q[:, 0], pools, recent_k, recent_v, recent_len + 1, host=host
+            )
+            hot = {
+                name: kops.page_hotness(mass, base, m_tot, l_tot)
+                for name, (mass, base) in masses.items()
+            }
         y = jnp.einsum("bhk,hkd->bd", out.astype(x.dtype), blk["attn"]["wo"])[:, None]
         if cfg.attn_out_bias:
             y = y + blk["attn"]["bo"]
@@ -311,7 +346,7 @@ def make_tiered_decode_step(
         x = params["embed"][token]
         recent_len = tkv.recent_len
         total_len = tkv.total_len
-        telemetry = {"warm": [], "cold": []}
+        telemetry = {"warm": [], "cold": [], "host": []}
 
         new_recent_k, new_recent_v = [], []
         if cfg.family == "hybrid":
@@ -335,6 +370,7 @@ def make_tiered_decode_step(
                         "warm_table", "warm_n", "cold_k", "cold_k_scales",
                         "cold_v", "cold_v_scales", "cold_table", "cold_n",
                         "recent_k", "recent_v",
+                        "host_summary", "host_table", "host_n",
                     )
                 }
                 x, rk, rv, hot = attend_tiered(params["shared"], x, layer_tkv, total_len, recent_len)
@@ -344,6 +380,7 @@ def make_tiered_decode_step(
                 new_recent_v.append(rv)
                 telemetry["warm"].append(hot["warm"])
                 telemetry["cold"].append(hot["cold"])
+                telemetry["host"].append(hot["host"])
 
                 width = min(every, cfg.n_layers - done)
                 group = jax.tree.map(lambda a: a[done : done + width], params["blocks"])
@@ -365,6 +402,7 @@ def make_tiered_decode_step(
                         "warm_table", "warm_n", "cold_k", "cold_k_scales",
                         "cold_v", "cold_v_scales", "cold_table", "cold_n",
                         "recent_k", "recent_v",
+                        "host_summary", "host_table", "host_n",
                     )
                 }
                 x, rk, rv, hot = attend_tiered(blk, x, layer_tkv, total_len, recent_len)
@@ -378,6 +416,7 @@ def make_tiered_decode_step(
                 new_recent_v.append(rv)
                 telemetry["warm"].append(hot["warm"])
                 telemetry["cold"].append(hot["cold"])
+                telemetry["host"].append(hot["host"])
 
         tkv = dataclasses.replace(
             tkv,
@@ -431,4 +470,9 @@ def tiered_kv_state_specs(
         recent_v=P(None, bax, None, None, None),
         recent_len=P(bax),
         total_len=P(bax),
+        # Host sentinel summaries are tiny (one [KV, hd] vector per page);
+        # replicate them like the tables so sentinel gathers stay local.
+        host_summary=P(None, None, None, None),
+        host_table=P(None, bax, None),
+        host_n=P(None, bax),
     )

@@ -48,6 +48,10 @@ class EngineStats:
     prefetch_staged: int = 0
     prefetch_hits: int = 0
     prefetch_misses: int = 0
+    # Decode-attention Pallas launches billed by the cache's dispatch proxy
+    # (fused: n_layers per step, O(1) in tier count; per-pool oracle:
+    # n_layers * n_pools).
+    attn_launches: int = 0
     decode_s: float = 0.0
     daemon_s: float = 0.0
     tco_savings_pct: float = 0.0
@@ -159,6 +163,7 @@ class TieredEngine:
         self.stats.prefetch_staged = pipe.prefetch_staged
         self.stats.prefetch_hits = pipe.prefetch_hits
         self.stats.prefetch_misses = pipe.prefetch_misses
+        self.stats.attn_launches = self.cache.attn_launches
         return self.stats
 
     # ------------------------------------------------------------ internals

@@ -14,7 +14,13 @@ The KV cache is the serving analogue of the paper's application heap:
   per-page softmax mass — the hotness telemetry. Host pages are not read
   in-step (the access-skip is the "fault cost": quality + swap latency);
   the manager re-promotes them on waterfall/analytical recommendation and
-  the engine swaps payloads through the warm pool.
+  the engine swaps payloads through the warm pool. Host pages DO appear to
+  the decode step as *sentinel rows*: a per-page key centroid in
+  ``state.host_summary`` plus ``host_table``/``host_n``, which the fused
+  attention launch scores into a "would-have-touched" softmax mass — the
+  in-engine hotness signal that feeds the prefetch predictor directly
+  (``manager.record_host_mass``) without ever fetching a payload or
+  perturbing placement-driving telemetry.
 
 All placement state is host-side numpy (daemon side). Two placement vectors
 exist on purpose:
@@ -84,11 +90,14 @@ class _TableEditor:
 
     All table mutations of one migrate/append batch happen on numpy copies;
     ``commit`` writes each table back to the device exactly once, instead of
-    one ``.at[].set`` dispatch per page."""
+    one ``.at[].set`` dispatch per page. Covers the host sentinel table too
+    (it has the same row layout as the device pool tables)."""
+
+    _POOLS = ("warm", "cold", "host")
 
     def __init__(self, state: TieredKVState):
-        self.tables = {p: np.array(getattr(state, f"{p}_table")) for p in ("warm", "cold")}
-        self.counts = {p: np.array(getattr(state, f"{p}_n")) for p in ("warm", "cold")}
+        self.tables = {p: np.array(getattr(state, f"{p}_table")) for p in self._POOLS}
+        self.counts = {p: np.array(getattr(state, f"{p}_n")) for p in self._POOLS}
 
     def remove(self, pool: str, layers, slots, pool_slots) -> None:
         t, c = self.tables[pool], self.counts[pool]
@@ -108,13 +117,11 @@ class _TableEditor:
             c[la, sl] = n + 1
 
     def commit(self, state: TieredKVState) -> TieredKVState:
-        return dataclasses.replace(
-            state,
-            warm_table=jnp.asarray(self.tables["warm"]),
-            warm_n=jnp.asarray(self.counts["warm"]),
-            cold_table=jnp.asarray(self.tables["cold"]),
-            cold_n=jnp.asarray(self.counts["cold"]),
-        )
+        kw = {}
+        for p in self._POOLS:
+            kw[f"{p}_table"] = jnp.asarray(self.tables[p])
+            kw[f"{p}_n"] = jnp.asarray(self.counts[p])
+        return dataclasses.replace(state, **kw)
 
 
 class TieredKVCache:
@@ -170,6 +177,7 @@ class TieredKVCache:
             max_pages_per_seq=self.max_pages,
             recent_window=recent_window,
             n_attn_layers=n_attn_layers,
+            host_slots=self.bs * self.max_pages,
         )
         # Host tier pools: dict slot -> (k_pay, k_sc, v_pay, v_sc) numpy.
         self.host_pages: Dict[int, Tuple[np.ndarray, ...]] = {}
@@ -195,7 +203,18 @@ class TieredKVCache:
             "warm": SlotAllocator(warm_cap, tenant_quota.get("warm")),
             "cold": SlotAllocator(cold_cap, tenant_quota.get("cold")),
         }
+        # Host sentinel summary slots (device-side key centroids for the
+        # fused kernel's would-have-touched rows): PER-LAYER free lists —
+        # a layer can host at most bs*max_pages pages, so per-layer sizing
+        # keeps ``host_summary`` at [L, bs*max_pages, ...] instead of
+        # replicating the global slot space per layer. Allocation can
+        # never fail.
+        self._host_alloc = [
+            SlotAllocator(self.bs * self.max_pages) for _ in range(self.la)
+        ]
         self._pool_slot = np.full(self.n_regions, -1, np.int64)
+        # Summary slot of each host-resident page (-1 = no sentinel).
+        self._host_slot = np.full(self.n_regions, -1, np.int64)
         # Multi-tenancy: each batch slot is owned by one tenant; a page's
         # tenant is its slot's tenant (pages are keyed by (layer, slot, page),
         # so slot ownership is the isolation boundary).
@@ -205,6 +224,14 @@ class TieredKVCache:
         # Compute-kernel dispatch accounting for the migration/ingestion path
         # (quant / dequant / transcode launches — the daemon-tax proxy).
         self.kernel_dispatches = 0
+        # Decode-side attention launch accounting: ``record_telemetry`` is
+        # called once per decode step and bills the step's actual launch
+        # structure via ``kops.decode_launches_per_step`` — 1 launch/layer on
+        # the fused path regardless of tier count, O(tiers) on the per-pool
+        # oracle — so WindowStats/TCO reports stop billing O(tiers) launches
+        # once fusion is on.
+        self.attn_launches = 0
+        self.decode_steps_recorded = 0
 
         # --- backing-media subsystem -----------------------------------
         # One MediaQueue per distinct device (shared-bandwidth accounting),
@@ -318,6 +345,56 @@ class TieredKVCache:
         if self.prefetch_enabled:
             self.pipeline.discard_speculative(rids, cancelled=True)
 
+    # ------------------------------------------------- host sentinel rows
+    # Every page living on a host tier carries a sentinel: its key centroid
+    # (mean over the page's T tokens of the dequantized stored K payload —
+    # deterministic from the stored bytes) in ``state.host_summary`` plus a
+    # ``host_table`` row entry. The fused attention launch scores sentinels
+    # for would-have-touched mass without fetching any payload.
+    def _host_sentinel_insert(
+        self, rids, layers, slots, k_pay, k_sc, bits: int,
+        editor: Optional[_TableEditor] = None,
+    ) -> None:
+        rids = np.asarray(rids, np.int64)
+        if rids.size == 0:
+            return
+        # One dequant dispatch to derive the centroids (daemon-tax billed
+        # like every other quant/dequant on the migration path).
+        self.kernel_dispatches += 1
+        summ = np.asarray(
+            kref.dequant_kv_page(jnp.asarray(k_pay), jnp.asarray(k_sc), bits)
+        ).mean(axis=1)  # [P, KV, hd]
+        hs = np.array(
+            [self._host_alloc[int(la)].alloc(int(r)) for la, r in zip(layers, rids)],
+            np.int64,
+        )
+        st = self.state
+        self.state = dataclasses.replace(
+            st, host_summary=st.host_summary.at[layers, hs].set(jnp.asarray(summ))
+        )
+        own = editor is None
+        editor = editor or _TableEditor(self.state)
+        editor.insert("host", layers, slots, hs)
+        if own:
+            self.state = editor.commit(self.state)
+        self._host_slot[rids] = hs
+
+    def _host_sentinel_remove(
+        self, rids, layers, slots, editor: Optional[_TableEditor] = None
+    ) -> None:
+        rids = np.asarray(rids, np.int64)
+        if rids.size == 0:
+            return
+        hs = self._host_slot[rids]
+        own = editor is None
+        editor = editor or _TableEditor(self.state)
+        editor.remove("host", layers, slots, hs)
+        if own:
+            self.state = editor.commit(self.state)
+        for la, x in zip(layers, hs):
+            self._host_alloc[int(la)].free(int(x))
+        self._host_slot[rids] = -1
+
     # -------------------------------------------------- page ingestion path
     def append_page(self, layer: int, slot: int, page: int, kpage, vpage) -> None:
         """Single-page ingestion (the batched path is ``append_pages``).
@@ -429,6 +506,9 @@ class TieredKVCache:
                     self.host_pages[int(r)] = (kp[j], ks[j], vp[j], vs[j])
                 self._pool_slot[rids[sel]] = -2
                 self._set_placement(rids[sel], dst)
+                self._host_sentinel_insert(
+                    rids[sel], layers[sel], slots[sel], kp, ks, bits, editor
+                )
             if dst == WARM:
                 kp_sz = int(np.prod(pay[:p].shape))
                 sc_sz = int(np.prod(sc[:p].shape))
@@ -632,6 +712,7 @@ class TieredKVCache:
                 self._free_slot(pool, int(x))
         else:
             self._invalidate_prefetch(rids)
+            self._host_sentinel_remove(rids, layers, slots, editor)
             hp = [self.host_pages.pop(int(r)) for r in rids]
             k_pay = jnp.asarray(np.stack([h[0] for h in hp]))
             k_sc = jnp.asarray(np.stack([h[1] for h in hp]))
@@ -657,6 +738,7 @@ class TieredKVCache:
                 self.host_pages[int(r)] = (kp[i], ks[i], vp[i], vs[i])
             self._pool_slot[rids] = -2
             self._set_placement(rids, dst)
+            self._host_sentinel_insert(rids, layers, slots, kp, ks, _BITS[dst], editor)
 
     def _scatter_device(self, dst, rids, layers, slots, k_pay, k_sc, v_pay, v_sc, editor):
         pool = _POOL[dst]
@@ -705,6 +787,7 @@ class TieredKVCache:
                 self._free_slot(pool, int(x))
         else:
             self._invalidate_prefetch(rids)
+            self._host_sentinel_remove(rids, layers, slots)
             hp = [self.host_pages.pop(int(r)) for r in rids]
             payload = {
                 "k_pay": np.stack([h[0] for h in hp]),
@@ -737,6 +820,9 @@ class TieredKVCache:
         mid-window — replaces the boundary's source read entirely."""
         assert src not in _DEVICE, "prefetch sources are host tiers"
         rids = np.asarray(rids, np.int64)
+        layers = rids // (self.bs * self.max_pages)
+        slots = (rids // self.max_pages) % self.bs
+        self._host_sentinel_remove(rids, layers, slots)
         for r in rids:
             self.host_pages.pop(int(r), None)
         self.physical[rids] = INFLIGHT
@@ -817,6 +903,9 @@ class TieredKVCache:
             self.host_pages[int(r)] = (kp[i], ks[i], vp[i], vs[i])
         self._pool_slot[rids] = -2
         self._set_placement(rids, dst)
+        layers = rids // (self.bs * self.max_pages)
+        slots = (rids // self.max_pages) % self.bs
+        self._host_sentinel_insert(rids, layers, slots, kp, ks, _BITS[dst])
         return actual
 
     def device_of(self, level: int) -> str:
@@ -939,6 +1028,9 @@ class TieredKVCache:
             self._free_slot("cold", ps)
         else:
             self._invalidate_prefetch(np.array([rid], np.int64))
+            self._host_sentinel_remove(
+                np.array([rid], np.int64), np.array([layer]), np.array([slot])
+            )
             self.host_pages.pop(rid, None)
         self._pool_slot[rid] = -1
 
@@ -1007,6 +1099,11 @@ class TieredKVCache:
         self.state = st
         self._set_placement(rid, dst)
         self._pool_slot[rid] = ps
+        if dst not in _DEVICE:
+            self._host_sentinel_insert(
+                np.array([rid], np.int64), np.array([layer]), np.array([slot]),
+                np.asarray(kp)[None], np.asarray(ks)[None], bits,
+            )
 
     # ------------------------------------------------------------ release
     def release_slot_pages(self, slot: int) -> None:
@@ -1033,8 +1130,12 @@ class TieredKVCache:
             elif src == COLD:
                 self._free_slot("cold", ps)
             else:
+                if self._host_slot[r] >= 0:
+                    layer = int(r) // (self.bs * self.max_pages)
+                    self._host_alloc[layer].free(int(self._host_slot[r]))
                 self.host_pages.pop(int(r), None)
         self._pool_slot[rids] = -1
+        self._host_slot[rids] = -1
         self._page_exists[rids] = False
         self.physical[rids] = 0
         self.manager.placement[rids] = 0
@@ -1043,6 +1144,7 @@ class TieredKVCache:
             st,
             warm_n=st.warm_n.at[:, slot].set(0),
             cold_n=st.cold_n.at[:, slot].set(0),
+            host_n=st.host_n.at[:, slot].set(0),
         )
 
     # ------------------------------------------------------------ telemetry
@@ -1055,10 +1157,45 @@ class TieredKVCache:
         a (layer, pool_slot) -> rid lookup array turns the per-page python
         loop into one fancy-indexed gather + ``np.add.at`` per pool.
         ``_fold_telemetry_loop`` is the per-page equivalence oracle.
+
+        A "host" key (the fused kernel's would-have-touched sentinel mass)
+        routes to ``manager.record_host_mass`` — the prefetch predictor's
+        in-engine signal — NOT into the placement-driving access counts:
+        host pages are never read in-step, so their skipped mass is the
+        quality cost of the best-TCO tiers (tracked, reported) and feeding
+        it to the placement model would break oracle-identical placements.
         """
-        # Host pages are never read in-step: their skipped mass is the
-        # quality cost of the best-TCO tiers (tracked, reported).
         self.manager.record_access_counts(self._fold_telemetry(telemetry) * 1000.0)
+        host_mass = telemetry.get("host")
+        if host_mass is not None:
+            folded = self._fold_host_mass(host_mass)
+            self.quality_skipped_mass += float(folded.sum())
+            self.manager.record_host_mass(folded * 1000.0)
+        # Decode-side dispatch proxy: one fused launch per layer per step,
+        # O(tiers) only when the per-pool oracle path is toggled on.
+        self.attn_launches += self.la * kops.decode_launches_per_step(
+            n_pools=len(_POOL)
+        )
+        self.decode_steps_recorded += 1
+
+    def _fold_table_mass(self, counts, mass, table, nvec, cap, live, slot_of) -> None:
+        """Accumulate per-table-entry ``mass`` [L, B, M] onto region ids.
+
+        Builds the (layer, pool_slot) -> rid lookup from ``live`` rids and
+        their ``slot_of`` slots (slots come from one free list per layer
+        scope, so a slot maps to at most one live rid), then gathers +
+        ``np.add.at``s in one shot. The validity mask is threefold: prefix
+        count (entries past n are stale), mapped rid exists, and the rid
+        must belong to this (layer, slot) row (slot-identity guard)."""
+        rid_of = np.full((self.la, cap), -1, np.int64)
+        rid_of[live // (self.bs * self.max_pages), slot_of[live]] = live
+        m = min(mass.shape[2], table.shape[2])
+        entry = table[:, :, :m]  # [L,B,m]
+        cand = rid_of[np.arange(self.la)[:, None, None], entry]
+        valid = np.arange(m)[None, None, :] < nvec[..., None]
+        valid &= cand >= 0
+        valid &= ((cand // self.max_pages) % self.bs) == np.arange(self.bs)[None, :, None]
+        np.add.at(counts, cand[valid], mass[:, :, :m][valid])
 
     def _fold_telemetry(self, telemetry: Dict[str, jax.Array]) -> np.ndarray:
         counts = np.zeros(self.n_regions)
@@ -1067,23 +1204,32 @@ class TieredKVCache:
             live = np.where((self.physical == placement) & self._page_exists)[0]
             if live.size == 0:
                 continue
-            mass = np.asarray(telemetry[pool])  # [L,B,MP]
-            table = np.asarray(getattr(st, f"{pool}_table"))  # [L,B,MPT]
-            nvec = np.asarray(getattr(st, f"{pool}_n"))  # [L,B]
-            # (layer, pool_slot) -> rid. Pool slots come from one shared free
-            # list, so a slot maps to at most one live rid.
-            cap = getattr(st, f"{pool}_k").shape[1]
-            rid_of = np.full((self.la, cap), -1, np.int64)
-            rid_of[live // (self.bs * self.max_pages), self._pool_slot[live]] = live
-            m = min(mass.shape[2], table.shape[2])
-            entry = table[:, :, :m]  # [L,B,m]
-            cand = rid_of[np.arange(self.la)[:, None, None], entry]
-            valid = np.arange(m)[None, None, :] < nvec[..., None]
-            valid &= cand >= 0
-            # The rid must belong to this (layer, slot) row (stale table
-            # entries past n are already masked; this guards slot identity).
-            valid &= ((cand // self.max_pages) % self.bs) == np.arange(self.bs)[None, :, None]
-            np.add.at(counts, cand[valid], mass[:, :, :m][valid])
+            self._fold_table_mass(
+                counts,
+                np.asarray(telemetry[pool]),
+                np.asarray(getattr(st, f"{pool}_table")),
+                np.asarray(getattr(st, f"{pool}_n")),
+                getattr(st, f"{pool}_k").shape[1],
+                live,
+                self._pool_slot,
+            )
+        return counts
+
+    def _fold_host_mass(self, mass) -> np.ndarray:
+        """Fold sentinel would-have-touched masses [L, B, MPh] into region
+        counts — the same gather as ``_fold_telemetry``, against the host
+        sentinel table."""
+        counts = np.zeros(self.n_regions)
+        live = np.where(
+            ((self.physical == HOST8) | (self.physical == HOST4)) & self._page_exists
+        )[0]
+        if live.size:
+            st = self.state
+            self._fold_table_mass(
+                counts, np.asarray(mass), np.asarray(st.host_table),
+                np.asarray(st.host_n), st.host_summary.shape[1], live,
+                self._host_slot,
+            )
         return counts
 
     def _fold_telemetry_loop(self, telemetry: Dict[str, jax.Array]) -> np.ndarray:

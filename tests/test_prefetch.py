@@ -430,7 +430,16 @@ def test_async_migration_defaults_true_with_env_escape(monkeypatch):
     assert TierScapeRunConfig().async_migration is False
     monkeypatch.setenv("REPRO_ASYNC_MIGRATION", "1")
     assert TierScapeRunConfig().async_migration is True
-    # Prefetch is an explicit opt-in and requires the async path.
-    assert TierScapeRunConfig().prefetch is False
     c = make_cache(prefetch=True)
     assert c.prefetch_enabled
+
+
+def test_prefetch_defaults_true_with_env_escape(monkeypatch):
+    # Prefetch defaults on now that the fused decode kernel feeds the
+    # predictor in-engine; REPRO_PREFETCH=0 is the escape hatch.
+    monkeypatch.delenv("REPRO_PREFETCH", raising=False)
+    assert TierScapeRunConfig().prefetch is True
+    monkeypatch.setenv("REPRO_PREFETCH", "0")
+    assert TierScapeRunConfig().prefetch is False
+    monkeypatch.setenv("REPRO_PREFETCH", "1")
+    assert TierScapeRunConfig().prefetch is True
