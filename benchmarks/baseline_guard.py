@@ -22,11 +22,13 @@ Check semantics per guard:
     no-prefetch oracle, decode-visible swap-in stalls must be reduced, at
     least one page must be prefetched, and the hit rate must stay >= 0.5
     and within ``HIT_RATE_BAND`` of the baseline.
-  decode_fused — launch structure is deterministic, so the comparison is
-    exact: the fused megakernel must issue EXACTLY one Pallas launch per
-    decode step at every tier count, the per-pool oracle's launch count
-    must not shrink (it is the O(tiers) contrast), and fused outputs +
-    normalized hotness must match the oracle to fp32 tolerance
+  decode_fused — launch structure and operand assembly are deterministic,
+    so the comparison is exact: the fused megakernel must issue EXACTLY one
+    Pallas launch per decode step at every tier count, class-major operand
+    assembly must move EXACTLY zero concat copy-bytes per step (never more
+    than the committed baseline, which is 0), the per-pool oracle's launch
+    count must not shrink (it is the O(tiers) contrast), and fused outputs
+    + normalized hotness must match the oracle to fp32 tolerance
     (``outputs_match``). Tier counts are the baseline's own keys.
 
 Refresh any baseline by re-running its benchmark with ``--json`` and
@@ -103,6 +105,13 @@ def check_decode_fused(current: dict, baseline: dict) -> List[str]:
             errors.append(
                 f"{n} tiers: fused path issued {cur['launches_fused']} "
                 f"launches/step (must be exactly 1)"
+            )
+        if cur.get("concat_copy_bytes", 0) > base.get("concat_copy_bytes", 0):
+            errors.append(
+                f"{n} tiers: fused operand assembly copied "
+                f"{cur['concat_copy_bytes']} bytes/step (baseline "
+                f"{base.get('concat_copy_bytes', 0)} — class-major layout "
+                f"must concat nothing)"
             )
         if cur["launches_per_pool"] < base["launches_per_pool"]:
             errors.append(

@@ -6,14 +6,21 @@ pool per decode step, so tier count taxes decode latency. The fused
 megakernel walks a unified page table in ONE launch regardless of tier
 count (host sentinel rows ride along for free).
 
+Pools are laid out codec-class-major, mirroring ``TieredKVCache``: every
+pool of one codec width aliases ONE shared class buffer and its page table
+holds global class rows, so the fused operand assembly is pure table
+work — the per-step device-copy-bytes counter (``ops.concat_copy_bytes``)
+must read ZERO at every tier count.
+
 Rows: ``decode_fused/<n>t-{fused|perpool}`` with us_per_call = eager step
 wall time (interpret-mode Pallas; directional), derived = launches/step +
 max |fused - oracle| over outputs and normalized hotness.
 
 ``--json PATH`` dumps {n_tiers: {launches_fused, launches_per_pool,
-out_max_err, hot_max_err, outputs_match}} for the perf-guard baseline
-(``benchmarks/baseline_guard.py``: fused launches/step must be exactly 1
-at every tier count and outputs must match the per-pool oracle).
+out_max_err, hot_max_err, outputs_match, concat_copy_bytes}} for the
+perf-guard baseline (``benchmarks/baseline_guard.py``: fused launches/step
+must be exactly 1 and concat copy-bytes exactly 0 at every tier count, and
+outputs must match the per-pool oracle).
 """
 
 from __future__ import annotations
@@ -35,15 +42,27 @@ FP32_TOL = 2e-4
 
 
 def _make_pools(n_tiers: int, rng: np.random.Generator):
-    pools = {}
-    for i in range(n_tiers):
-        bits = TIER_BITS[i]
-        pages = jnp.asarray(rng.normal(0, 1, (MP * B, T, KV, HD)), jnp.bfloat16)
+    """Codec-class-major pools: one shared payload/scale buffer per codec
+    width; each tier owns a contiguous global-row range of its class buffer
+    and its page table addresses those global rows directly."""
+    bits_of = TIER_BITS[:n_tiers]
+    # One class buffer per codec width, tall enough for every tier's range.
+    buf = {}
+    for bits in sorted(set(bits_of)):
+        rows = MP * B * bits_of.count(bits)
+        pages = jnp.asarray(rng.normal(0, 1, (rows, T, KV, HD)), jnp.bfloat16)
         kp, ks = ref.quant_kv_page(pages, bits)
         vp, vs = ref.quant_kv_page(pages * 0.5, bits)
-        table = jnp.asarray(rng.integers(0, MP * B, (B, MP)), jnp.int32)
+        buf[bits] = dict(k_pages=kp, k_scales=ks, v_pages=vp, v_scales=vs)
+    pools = {}
+    base = {bits: 0 for bits in buf}
+    for i, bits in enumerate(bits_of):
+        table = jnp.asarray(
+            base[bits] + rng.integers(0, MP * B, (B, MP)), jnp.int32
+        )
+        base[bits] += MP * B
         pools[f"tier{i}"] = dict(
-            k_pages=kp, k_scales=ks, v_pages=vp, v_scales=vs,
+            **buf[bits],  # aliases the shared class buffer (zero-copy fuse)
             page_table=table,
             n_pages=jnp.asarray(rng.integers(1, MP + 1, B), jnp.int32),
             bits=bits,
@@ -80,8 +99,10 @@ def run(csv: Csv, tier_counts=(2, 3, 4), results: dict | None = None) -> None:
 
         ops.use_fused(True)
         ops.reset_launch_count()
+        ops.reset_copy_bytes()
         out_f, hot_f = step()
         launches_fused = ops.launch_count()
+        copy_bytes = ops.concat_copy_bytes()
         fused_us = time_us(lambda: step(False).block_until_ready(), iters=3, warmup=1)
 
         ops.use_fused(False)
@@ -98,7 +119,8 @@ def run(csv: Csv, tier_counts=(2, 3, 4), results: dict | None = None) -> None:
         match = out_err <= FP32_TOL and hot_err <= FP32_TOL
         csv.add(
             f"{n}t-fused", fused_us,
-            f"launches={launches_fused};out_err={out_err:.1e};hot_err={hot_err:.1e}",
+            f"launches={launches_fused};copy_bytes={copy_bytes};"
+            f"out_err={out_err:.1e};hot_err={hot_err:.1e}",
         )
         csv.add(f"{n}t-perpool", pp_us, f"launches={launches_pp}")
         if results is not None:
@@ -108,6 +130,7 @@ def run(csv: Csv, tier_counts=(2, 3, 4), results: dict | None = None) -> None:
                 "out_max_err": out_err,
                 "hot_max_err": hot_err,
                 "outputs_match": match,
+                "concat_copy_bytes": copy_bytes,
             }
 
 

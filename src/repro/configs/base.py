@@ -230,3 +230,10 @@ class TierScapeRunConfig:
     # in-engine (env-overridable, see ``_default_prefetch``).
     prefetch: bool = dataclasses.field(default_factory=_default_prefetch)
     prefetch_max_pages: int = 8
+    # Codec widths (8 or 4) of the device pools. Pools of equal width share
+    # one codec-class payload buffer (class-major storage): the fused decode
+    # step reads them with zero per-step concatenation and same-class
+    # migrations are pure page-table edits. The (8, 4) default reproduces
+    # the classic int8-warm / int4-cold split.
+    warm_bits: int = 8
+    cold_bits: int = 4

@@ -86,14 +86,27 @@ class SlotAllocator:
     In multi-tenant deploys the pool is shared: ``tenant_quota`` caps how many
     slots each tenant may hold concurrently (a hard per-tenant reservation,
     so one tenant cannot starve another's tier — the MaxMem failure mode).
+
+    ``base`` offsets the initial free list to ``[base, base + capacity)``:
+    under the codec-class-major layout slots are GLOBAL rows of the shared
+    class buffer, and each pool starts with its own contiguous row range of
+    the class partition. ``exchange_slots`` may interleave ranges over time
+    (same-class migrations transfer row ownership instead of copying
+    payloads); capacity accounting is unaffected.
     """
 
-    def __init__(self, capacity: int, tenant_quota: Optional[Dict[str, int]] = None):
+    def __init__(
+        self,
+        capacity: int,
+        tenant_quota: Optional[Dict[str, int]] = None,
+        base: int = 0,
+    ):
         self.capacity = capacity
+        self.base = base
         if tenant_quota is not None and sum(tenant_quota.values()) > capacity:
             raise ValueError("tenant quotas exceed pool capacity")
         self.tenant_quota = tenant_quota
-        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._free: List[int] = list(range(base + capacity - 1, base - 1, -1))
         self._owner: dict[int, int] = {}  # slot -> block_id
         self._slot_tenant: Dict[int, str] = {}
         self._tenant_used: Dict[str, int] = {}
@@ -118,12 +131,19 @@ class SlotAllocator:
         return slot
 
     def free(self, slot: int) -> None:
-        if slot in self._owner:
-            del self._owner[slot]
-            self._free.append(slot)
-            tenant = self._slot_tenant.pop(slot, None)
-            if tenant is not None:
-                self._tenant_used[tenant] -= 1
+        """Release an owned slot back to the free list. Freeing a slot this
+        allocator does not own raises: a silent no-op here masks double-free
+        and stale-page-table bugs, which global class-row addressing turns
+        from harmless accounting drift into cross-pool payload corruption."""
+        if slot not in self._owner:
+            raise KeyError(
+                f"free of unowned slot {slot} (double free or stale table?)"
+            )
+        del self._owner[slot]
+        self._free.append(slot)
+        tenant = self._slot_tenant.pop(slot, None)
+        if tenant is not None:
+            self._tenant_used[tenant] -= 1
 
     @property
     def used(self) -> int:
@@ -131,6 +151,84 @@ class SlotAllocator:
 
     def used_by(self, tenant: str) -> int:
         return self._tenant_used.get(tenant, 0)
+
+
+def exchange_slots(
+    src: "SlotAllocator",
+    dst: "SlotAllocator",
+    slot: int,
+    block_id: int,
+    tenant: Optional[str] = None,
+) -> int:
+    """Transfer ownership of physical row ``slot`` from ``src`` to ``dst``
+    without moving any payload — the class-major same-codec migration: the
+    page's bytes stay in place in the shared class buffer and only the
+    bookkeeping moves. ``dst`` hands one of its free rows back to ``src`` so
+    both allocators conserve (free + owned) == capacity; over time the
+    pools' row ranges interleave, which is fine — rows are global class
+    rows, not per-pool indices. ``dst`` tenant quota is enforced exactly
+    like ``alloc``. Returns ``slot`` (the page's row, unchanged)."""
+    if slot not in src._owner:
+        raise KeyError(f"exchange of slot {slot} not owned by source pool")
+    if not dst._free:
+        raise MemoryError("tier pool exhausted")
+    if dst.tenant_quota is not None:
+        if tenant is None:
+            raise ValueError("tenant required when tenant_quota is set")
+        if tenant not in dst.tenant_quota:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        if dst._tenant_used.get(tenant, 0) >= dst.tenant_quota[tenant]:
+            raise MemoryError(f"tenant {tenant!r} quota exhausted")
+    # Release on src, but route the row's free-list credit to dst's range:
+    # dst donates a free row to src in its place.
+    del src._owner[slot]
+    st = src._slot_tenant.pop(slot, None)
+    if st is not None:
+        src._tenant_used[st] -= 1
+    src._free.append(dst._free.pop())
+    dst._owner[slot] = block_id
+    if tenant is not None:
+        dst._slot_tenant[slot] = tenant
+        dst._tenant_used[tenant] = dst._tenant_used.get(tenant, 0) + 1
+    return slot
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolRange:
+    """One pool's initial slice of its codec class's shared row space."""
+
+    name: str
+    bits: int
+    base: int
+    capacity: int
+
+
+class ClassPartition:
+    """Codec-class-major row partition over an ordered set of tier pools.
+
+    ``specs`` is an ordered sequence of ``(name, bits, capacity)``; pools of
+    the same codec width stack into one shared class buffer, each owning the
+    contiguous global-row range ``[base, base + capacity)`` in spec order.
+    ``class_rows`` is the total buffer height per codec class (min 1 so an
+    empty class still materializes a dummy row for the kernel operands —
+    which ``TIER_INVALID`` masking guarantees is never addressed)."""
+
+    def __init__(self, specs: Sequence[Tuple[str, int, int]]):
+        self.ranges: Dict[str, PoolRange] = {}
+        off: Dict[int, int] = {}
+        for name, bits, cap in specs:
+            if name in self.ranges:
+                raise ValueError(f"duplicate pool name {name!r}")
+            b = off.get(int(bits), 0)
+            self.ranges[name] = PoolRange(name, int(bits), b, int(cap))
+            off[int(bits)] = b + int(cap)
+        self._rows = off
+
+    def base(self, name: str) -> int:
+        return self.ranges[name].base
+
+    def class_rows(self, bits: int) -> int:
+        return max(self._rows.get(int(bits), 0), 1)
 
 
 class TenantLedger:

@@ -30,6 +30,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref as _ref
 from repro.kernels.dequant_page import dequant_pages as dequant_pages_kernel
@@ -54,6 +55,15 @@ _USE_FUSED = True
 # reading).
 _LAUNCHES = 0
 
+# Device bytes materialized by per-step payload concatenation in
+# ``_unified_operands`` since the last reset (trace-time count, same caveat
+# as ``_LAUNCHES``). Zero on the class-major layout at ANY tier count —
+# same-class pools share one buffer and the unified table addresses it
+# directly. Non-zero only on the legacy standalone-buffer layout, which is
+# kept for back-compat and the equivalence tests; the ``decode_fused``
+# baseline guard pins this to 0.
+_COPY_BYTES = 0
+
 
 def use_pallas(flag: bool) -> None:
     global _USE_PALLAS
@@ -74,6 +84,16 @@ def reset_launch_count() -> None:
 
 def launch_count() -> int:
     return _LAUNCHES
+
+
+def reset_copy_bytes() -> None:
+    global _COPY_BYTES
+    _COPY_BYTES = 0
+
+
+def concat_copy_bytes() -> int:
+    """Device bytes copied by payload concatenation since the last reset."""
+    return _COPY_BYTES
 
 
 def _count_launch(n: int = 1) -> None:
@@ -139,50 +159,156 @@ def _pool_partials(q: Array, pool: Dict[str, Array]):
 # ---------------------------------------------------------------------------
 
 
-def _unified_operands(q, pools, recent_k, host):
-    """Group N tier pools into the megakernel's two codec-class buffers and
-    build the unified page table.
+_CLASS_KEYS = ("k_pages", "k_scales", "v_pages", "v_scales")
 
-    Pools of the same codec width concatenate along the page axis (single
-    pool per class is the no-copy fast path — the serving engine's layout);
-    each pool's table columns shift by the preceding same-class pool sizes
-    so ``(pool_slot, tier_code)`` rows address the class buffer directly.
-    Host sentinel rows index the summary buffer. Returns the kernel
-    operands plus the {name: (col_lo, col_hi)} slot layout used to slice
-    per-pool hotness back out of the unified mass."""
+
+def _validated_page_tokens(pools, host) -> int:
+    """THE page-tokens value of a fused launch: every device pool's page
+    shape and the host sentinels' ``page_tokens`` must agree, because one
+    unified table walks them all and the sentinel would-have-touched mass
+    multiplies by this count. A mismatch used to silently mis-scale
+    sentinel mass (the host value rode a separate kernel argument); now it
+    raises."""
+    t = None
+    src = None
+    for n in sorted(pools):
+        tn = int(pools[n]["k_pages"].shape[1])
+        if t is None:
+            t, src = tn, f"pool {n!r}"
+        elif tn != t:
+            raise ValueError(
+                f"mixed page_tokens in fused launch: {src} has {t} "
+                f"tokens/page but pool {n!r} has {tn} — every pool and the "
+                f"host sentinels must share one page size (deploy unequal "
+                f"page sizes as separate caches)"
+            )
+    if host is not None:
+        ht = int(host["page_tokens"])
+        if t is None:
+            t = ht
+        elif ht != t:
+            raise ValueError(
+                f"mixed page_tokens in fused launch: {src} has {t} "
+                f"tokens/page but host sentinels declare {ht} — sentinel "
+                f"would-have-touched mass would be mis-scaled"
+            )
+    return 1 if t is None else t
+
+
+def _tier_col(table, n_rows, code):
+    """Tier-code column for one table: entries past the valid prefix become
+    ``TIER_INVALID``. This is the SINGLE enforcement point that keeps stale
+    ``(slot, tier_code)`` rows — including rows whose slot would alias row 0
+    of an empty codec class's dummy buffer — out of the fused kernel: the
+    kernel contributes nothing for a row whose tier code matches no grid
+    step, regardless of the slot value riding next to it."""
+    mp = table.shape[1]
+    valid = jnp.arange(mp, dtype=jnp.int32)[None] < n_rows[:, None]
+    return jnp.where(valid, code, TIER_INVALID).astype(jnp.int32)
+
+
+def _class_operands(sel, t, kv, dummy_dtype, last_dim):
+    """One codec class's kernel operands + per-pool global-row offsets.
+
+    Class-major layout (all same-class pools alias ONE buffer object —
+    identity-checked): the shared buffer passes straight through with zero
+    offsets, zero copies, at any pool count. Single standalone pool: also
+    copy-free. Multiple standalone buffers: the legacy concat path, kept
+    for back-compat and as the equivalence oracle's input layout; its
+    copied bytes are counted in ``_COPY_BYTES`` (the baseline guard pins
+    the serving layout to 0). Mixing shared and standalone buffers within
+    a class is ambiguous (offsets would double-count pages) and raises."""
+    global _COPY_BYTES
+    if not sel:
+        pay = jnp.zeros((1, t, kv, last_dim), dummy_dtype)
+        sc = jnp.ones((1, t, kv), jnp.float32)
+        return (pay, sc, pay, sc), []
+    first = sel[0]
+    if all(all(p[k] is first[k] for k in _CLASS_KEYS) for p in sel):
+        return tuple(first[k] for k in _CLASS_KEYS), [0] * len(sel)
+    for i in range(len(sel)):
+        for j in range(i + 1, len(sel)):
+            if any(sel[i][k] is sel[j][k] for k in _CLASS_KEYS):
+                raise ValueError(
+                    "same-class pools mix shared and standalone payload "
+                    "buffers; either every pool of a codec class aliases "
+                    "one class buffer (class-major layout) or none do"
+                )
+    offs, off = [], 0
+    for p in sel:
+        offs.append(off)
+        off += int(p["k_pages"].shape[0])
+    cat = tuple(jnp.concatenate([p[k] for p in sel]) for k in _CLASS_KEYS)
+    _COPY_BYTES += sum(a.size * a.dtype.itemsize for a in cat)
+    return cat, offs
+
+
+def _check_class_bounds(uni_slot, uni_tier, rows8: int, rows4: int) -> None:
+    """Eager-path guard: every VALID unified-table row must address a real
+    class-buffer row. Stale rows are already ``TIER_INVALID`` (see
+    ``_tier_col``) and exempt — notably an empty class's 1-row dummy buffer
+    is unaddressable because no pool of that class exists to emit its tier
+    code. Slot values are data, so this cannot run under tracing; eager
+    callers (tests, benchmarks) get the hard check."""
+    if isinstance(uni_slot, jax.core.Tracer) or isinstance(uni_tier, jax.core.Tracer):
+        return
+    slot = np.asarray(uni_slot)
+    tier = np.asarray(uni_tier)
+    for code, rows, cls in ((TIER_INT8, rows8, "int8"), (TIER_INT4, rows4, "int4")):
+        sel = tier == code
+        if sel.any():
+            s = slot[sel]
+            if int(s.min()) < 0 or int(s.max()) >= rows:
+                raise IndexError(
+                    f"unified table addresses {cls} class row "
+                    f"{int(s.min())}..{int(s.max())} outside the class "
+                    f"buffer's {rows} rows (stale slot with a live tier code?)"
+                )
+
+
+def _unified_operands(q, pools, recent_k, host):
+    """Assemble the megakernel's operands from N tier pools: two codec-class
+    payload buffers plus the unified page table.
+
+    Class-major layout: same-class pools share one class buffer (identity-
+    aliased arrays) and their tables already hold global class-buffer rows,
+    so this reduces to pure table assembly — zero payload copies at any
+    tier count. Legacy standalone per-pool buffers still concatenate (the
+    counted back-compat path, see ``_class_operands``). Host sentinel rows
+    index the summary buffer. Returns the kernel operands plus the
+    {name: (col_lo, col_hi)} slot layout used to slice per-pool hotness
+    back out of the unified mass."""
     b = q.shape[0]
     hd = q.shape[-1]
     kv = recent_k.shape[2]
     names = sorted(pools)
-    if names:
-        t = int(pools[names[0]]["k_pages"].shape[1])
-    elif host is not None:
-        t = int(host["page_tokens"])
-    else:
-        t = 1
+    t = _validated_page_tokens(pools, host)
 
-    groups = {8: [], 4: []}
+    by_bits = {
+        bits: [n for n in names if int(pools[n]["bits"]) == bits] for bits in (8, 4)
+    }
+    ops8, offs8 = _class_operands([pools[n] for n in by_bits[8]], t, kv, jnp.int8, hd)
+    ops4, offs4 = _class_operands(
+        [pools[n] for n in by_bits[4]], t, kv, jnp.uint8, hd // 2
+    )
+    base = dict(zip(by_bits[8], offs8))
+    base.update(zip(by_bits[4], offs4))
+
     slot_cols, tier_cols = [], []
     layout: Dict[str, Tuple[int, int]] = {}
-    off = {8: 0, 4: 0}
     col = 0
     for n in names:
         p = pools[n]
-        bits = int(p["bits"])
         mp = p["page_table"].shape[1]
-        code = TIER_INT8 if bits == 8 else TIER_INT4
-        slot_cols.append(p["page_table"].astype(jnp.int32) + off[bits])
-        valid = jnp.arange(mp, dtype=jnp.int32)[None] < p["n_pages"][:, None]
-        tier_cols.append(jnp.where(valid, code, TIER_INVALID).astype(jnp.int32))
-        groups[bits].append(p)
-        off[bits] += int(p["k_pages"].shape[0])
+        code = TIER_INT8 if int(p["bits"]) == 8 else TIER_INT4
+        slot_cols.append(p["page_table"].astype(jnp.int32) + base[n])
+        tier_cols.append(_tier_col(p["page_table"], p["n_pages"], code))
         layout[n] = (col, col + mp)
         col += mp
     if host is not None:
         mp = host["table"].shape[1]
         slot_cols.append(host["table"].astype(jnp.int32))
-        valid = jnp.arange(mp, dtype=jnp.int32)[None] < host["n"][:, None]
-        tier_cols.append(jnp.where(valid, TIER_HOST, TIER_INVALID).astype(jnp.int32))
+        tier_cols.append(_tier_col(host["table"], host["n"], TIER_HOST))
         layout["host"] = (col, col + mp)
         col += mp
         summary = host["summary"].astype(jnp.float32)
@@ -196,23 +322,9 @@ def _unified_operands(q, pools, recent_k, host):
         uni_slot = jnp.concatenate(slot_cols, axis=1)
         uni_tier = jnp.concatenate(tier_cols, axis=1)
 
-    def _cat(sel, dummy_dtype, last_dim):
-        if not sel:
-            pay = jnp.zeros((1, t, kv, last_dim), dummy_dtype)
-            sc = jnp.ones((1, t, kv), jnp.float32)
-            return pay, sc, pay, sc
-        if len(sel) == 1:
-            p = sel[0]
-            return p["k_pages"], p["k_scales"], p["v_pages"], p["v_scales"]
-        return (
-            jnp.concatenate([p["k_pages"] for p in sel]),
-            jnp.concatenate([p["k_scales"] for p in sel]),
-            jnp.concatenate([p["v_pages"] for p in sel]),
-            jnp.concatenate([p["v_scales"] for p in sel]),
-        )
-
-    k8, s8k, v8, s8v = _cat(groups[8], jnp.int8, hd)
-    k4, s4k, v4, s4v = _cat(groups[4], jnp.uint8, hd // 2)
+    k8, s8k, v8, s8v = ops8
+    k4, s4k, v4, s4v = ops4
+    _check_class_bounds(uni_slot, uni_tier, int(k8.shape[0]), int(k4.shape[0]))
     return (k8, s8k, v8, s8v, k4, s4k, v4, s4v, summary, uni_slot, uni_tier, t, layout)
 
 
@@ -222,13 +334,13 @@ def _fused_path(q, pools, recent_k, recent_v, recent_len, host, with_telemetry):
     if _USE_PALLAS:
         (k8, s8k, v8, s8v, k4, s4k, v4, s4v, summary,
          uni_slot, uni_tier, t, layout) = _unified_operands(q, pools, recent_k, host)
-        # Sentinel mass multiplier follows the HOST pages' token count (the
-        # ref oracle's contract), not the device pools' page shape.
-        pt = int(host["page_tokens"]) if host is not None else t
         _count_launch()
+        # ``t`` is the launch's single validated page-tokens value — the
+        # sentinel mass multiplier and the device pools' page shape agree
+        # by construction (``_validated_page_tokens``).
         out, m, l, mass, base = fused_attn_kernel(
             q, k8, s8k, v8, s8v, k4, s4k, v4, s4v, summary,
-            recent_k, recent_v, uni_slot, uni_tier, rlen, page_tokens=pt,
+            recent_k, recent_v, uni_slot, uni_tier, rlen, page_tokens=t,
         )
         if not with_telemetry:
             return out
@@ -237,6 +349,7 @@ def _fused_path(q, pools, recent_k, recent_v, recent_len, host, with_telemetry):
             for name, (lo, hi) in layout.items()
         }
         return out, hot
+    _validated_page_tokens(pools, host)  # same contract as the kernel path
     out, m, l, masses = _ref.fused_tiered_attention(
         q, pools, recent_k, recent_v, rlen, host=host
     )

@@ -39,7 +39,11 @@ device queues).
 
 The executor contract (implemented by ``serving.kv_cache.TieredKVCache``):
 
-  stage_cohort(rids, src) -> {k_pay, k_sc, v_pay, v_sc} numpy arrays
+  stage_cohort(rids, src, dst=None) -> {k_pay, k_sc, v_pay, v_sc} numpy
+      arrays — or, for device moves within one codec class, a
+      ``{"class_rows": rows}`` marker: the payload never leaves the shared
+      class buffer, so the pipeline bills no read bytes for the stage and
+      no write bytes for the table-edit commit (real spills still bill)
   peek_cohort(rids, src) -> payload       # non-destructive speculative read
   drop_source_copies(rids, src) -> None   # retire sources of prestaged pages
   transcode_cohort(payload, src, dst) -> payload
@@ -285,8 +289,9 @@ class MigrationPipeline:
             c.pre_payload = None
             n_read = int(fresh_idx.size)
         else:
-            payload = self.executor.stage_cohort(c.rids, c.src)
-            n_read = int(c.rids.size)
+            payload = self.executor.stage_cohort(c.rids, c.src, c.dst)
+            # Same-class table-edit staging moves no payload bytes.
+            n_read = 0 if "class_rows" in payload else int(c.rids.size)
         if n_read:
             src_dev = self.queues[self.executor.device_of(c.src)]
             nb = self.executor.page_stored_bytes(c.src) * n_read
@@ -317,10 +322,14 @@ class MigrationPipeline:
 
     def _commit(self, c: _Cohort, now: float) -> None:
         payload = self._unpack(c) if c.ring_slots is not None else c.payload
+        marker = "class_rows" in payload
         actual = self.executor.commit_cohort(c.rids, payload, c.src, c.dst)
         # Bill the devices that really absorbed the writes — commit-time
         # spills may have landed pages below the planned destination.
         for level in np.unique(np.asarray(actual, np.int64)):
+            if marker and int(level) in (c.dst, c.src):
+                # Table-edit landing: row ownership moved, no bytes written.
+                continue
             n = int((np.asarray(actual) == level).sum())
             self.queues[self.executor.device_of(int(level))].submit(
                 self.executor.page_stored_bytes(int(level)) * n,

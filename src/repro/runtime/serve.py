@@ -88,25 +88,35 @@ def make_prefill_step(model: Model, mesh: Mesh, parallel: ParallelConfig):
 class TieredKVState:
     """Device-resident tiered KV state for the jitted decode step.
 
-    Layer-stacked pools: warm (int8, SL-F8-HB-class tier) and cold (int4,
-    PK-I4-HB-class tier). Host tiers (C2/C4/C12) hold evicted pages outside
-    the step; the engine swaps them through the warm pool. Host-resident
-    pages are still *visible* to the step as sentinel rows: a tiny per-page
-    key centroid (``host_summary``) + a sentinel table, which the fused
-    attention launch scores for would-have-touched hotness telemetry
-    without fetching any payload.
+    Payload storage is CODEC-CLASS-MAJOR: one shared int8-class buffer
+    (``c8_*``) and one int4-class buffer (``c4_*``), each holding the rows
+    of EVERY tier pool of that codec width. Per-pool page tables
+    (``warm_table``/``cold_table``) stay, but their entries are GLOBAL rows
+    of the pool's class buffer (``SlotAllocator`` row ranges carve the
+    buffer up per pool) — so N same-class tiers address one buffer with
+    zero per-step payload concatenation in the fused kernel, and same-class
+    migrations are pure table edits. With the default warm=int8/cold=int4
+    split each class holds exactly one pool and the layout degenerates to
+    the former per-pool buffers (bit-identical shapes and addressing).
+
+    Host tiers (C2/C4/C12) hold evicted pages outside the step; the engine
+    swaps them through the warm pool. Host-resident pages are still
+    *visible* to the step as sentinel rows: a tiny per-page key centroid
+    (``host_summary``) + a sentinel table, which the fused attention launch
+    scores for would-have-touched hotness telemetry without fetching any
+    payload.
     """
 
-    warm_k: jax.Array  # [L, Pw, T, KV, hd] int8
-    warm_k_scales: jax.Array  # [L, Pw, T, KV] f32
-    warm_v: jax.Array
-    warm_v_scales: jax.Array
-    warm_table: jax.Array  # [L, B, MPw] int32
+    c8_k: jax.Array  # [L, P8, T, KV, hd] int8 — shared int8-class rows
+    c8_k_scales: jax.Array  # [L, P8, T, KV] f32
+    c8_v: jax.Array
+    c8_v_scales: jax.Array
+    c4_k: jax.Array  # [L, P4, T, KV, hd//2] uint8 — shared int4-class rows
+    c4_k_scales: jax.Array
+    c4_v: jax.Array
+    c4_v_scales: jax.Array
+    warm_table: jax.Array  # [L, B, MPw] int32 — global class-buffer rows
     warm_n: jax.Array  # [L, B] int32
-    cold_k: jax.Array  # [L, Pc, T, KV, hd//2] uint8
-    cold_k_scales: jax.Array
-    cold_v: jax.Array
-    cold_v_scales: jax.Array
     cold_table: jax.Array
     cold_n: jax.Array
     recent_k: jax.Array  # [L, B, R, KV, hd] bf16
@@ -116,6 +126,23 @@ class TieredKVState:
     host_summary: jax.Array  # [L, Hs, KV, hd] f32 — host-page key centroids
     host_table: jax.Array  # [L, B, MP] int32 — sentinel rows -> summary slot
     host_n: jax.Array  # [L, B] int32
+
+
+# Class-buffer payload fields by codec width; ``class_field("c8", "k")`` etc.
+CLASS_FIELDS = ("k", "k_scales", "v", "v_scales")
+
+
+def class_rows_of(
+    warm_pages: int, cold_pages: int, warm_bits: int = 8, cold_bits: int = 4
+) -> Dict[int, int]:
+    """Rows per codec-class buffer for the (warm, cold) pool pair, warm
+    range first (the ``ClassPartition`` order the cache's allocators use).
+    An empty class keeps one dummy row so the kernel operands stay
+    non-degenerate; ``TIER_INVALID`` masking guarantees it is never read."""
+    rows = {8: 0, 4: 0}
+    rows[warm_bits] += warm_pages
+    rows[cold_bits] += cold_pages
+    return {b: max(r, 1) for b, r in rows.items()}
 
 
 def init_tiered_kv_state(
@@ -129,23 +156,27 @@ def init_tiered_kv_state(
     recent_window: int,
     n_attn_layers: int,
     host_slots: Optional[int] = None,
+    warm_bits: int = 8,
+    cold_bits: int = 4,
 ) -> TieredKVState:
     hd = cfg.head_dim_()
     kv = cfg.n_kv_heads
     la = n_attn_layers
     t = page_tokens
     hs = max(host_slots if host_slots is not None else cold_pages, 1)
+    rows = class_rows_of(warm_pages, cold_pages, warm_bits, cold_bits)
+    p8, p4 = rows[8], rows[4]
     return TieredKVState(
-        warm_k=jnp.zeros((la, warm_pages, t, kv, hd), jnp.int8),
-        warm_k_scales=jnp.ones((la, warm_pages, t, kv), jnp.float32),
-        warm_v=jnp.zeros((la, warm_pages, t, kv, hd), jnp.int8),
-        warm_v_scales=jnp.ones((la, warm_pages, t, kv), jnp.float32),
+        c8_k=jnp.zeros((la, p8, t, kv, hd), jnp.int8),
+        c8_k_scales=jnp.ones((la, p8, t, kv), jnp.float32),
+        c8_v=jnp.zeros((la, p8, t, kv, hd), jnp.int8),
+        c8_v_scales=jnp.ones((la, p8, t, kv), jnp.float32),
+        c4_k=jnp.zeros((la, p4, t, kv, hd // 2), jnp.uint8),
+        c4_k_scales=jnp.ones((la, p4, t, kv), jnp.float32),
+        c4_v=jnp.zeros((la, p4, t, kv, hd // 2), jnp.uint8),
+        c4_v_scales=jnp.ones((la, p4, t, kv), jnp.float32),
         warm_table=jnp.zeros((la, batch, max_pages_per_seq), jnp.int32),
         warm_n=jnp.zeros((la, batch), jnp.int32),
-        cold_k=jnp.zeros((la, cold_pages, t, kv, hd // 2), jnp.uint8),
-        cold_k_scales=jnp.ones((la, cold_pages, t, kv), jnp.float32),
-        cold_v=jnp.zeros((la, cold_pages, t, kv, hd // 2), jnp.uint8),
-        cold_v_scales=jnp.ones((la, cold_pages, t, kv), jnp.float32),
         cold_table=jnp.zeros((la, batch, max_pages_per_seq), jnp.int32),
         cold_n=jnp.zeros((la, batch), jnp.int32),
         recent_k=jnp.zeros((la, batch, recent_window, kv, hd), jnp.bfloat16),
@@ -255,6 +286,13 @@ def make_tiered_decode_step(
     use_sp = parallel.shard_kv_seq and tp > 1 and not use_kernels
     sp_attn = None
     _batch_axes_holder = []
+    # Device-pool codec widths (class-major: a pool's payload lives in its
+    # class's shared buffer). Defaults give the classic warm=int8/cold=int4
+    # split; same-width pairs share one buffer with zero per-step copies.
+    wb = int(getattr(ts_cfg, "warm_bits", 8))
+    cb = int(getattr(ts_cfg, "cold_bits", 4))
+    warm_cls = "c8" if wb == 8 else "c4"
+    cold_cls = "c8" if cb == 8 else "c4"
 
     def _make_sp(batch_size):
         return make_sp_pool_attention(mesh, shr.batch_axes_for(mesh, batch_size))
@@ -280,25 +318,24 @@ def make_tiered_decode_step(
         recent_v = jnp.where(
             at, v_new.astype(layer_tkv["recent_v"].dtype), layer_tkv["recent_v"]
         )
+        # Class-major pools: each pool's payload arrays ARE its codec
+        # class's shared buffer (same jax array object when two pools share
+        # a class — the zero-concat contract ``ops._unified_operands``
+        # detects by identity); tables hold global class-buffer rows.
+        def pool_of(cls, table, n, bits):
+            return {
+                "k_pages": layer_tkv[f"{cls}_k"],
+                "k_scales": layer_tkv[f"{cls}_k_scales"],
+                "v_pages": layer_tkv[f"{cls}_v"],
+                "v_scales": layer_tkv[f"{cls}_v_scales"],
+                "page_table": layer_tkv[table],
+                "n_pages": layer_tkv[n],
+                "bits": bits,
+            }
+
         pools = {
-            "warm": {
-                "k_pages": layer_tkv["warm_k"],
-                "k_scales": layer_tkv["warm_k_scales"],
-                "v_pages": layer_tkv["warm_v"],
-                "v_scales": layer_tkv["warm_v_scales"],
-                "page_table": layer_tkv["warm_table"],
-                "n_pages": layer_tkv["warm_n"],
-                "bits": 8,
-            },
-            "cold": {
-                "k_pages": layer_tkv["cold_k"],
-                "k_scales": layer_tkv["cold_k_scales"],
-                "v_pages": layer_tkv["cold_v"],
-                "v_scales": layer_tkv["cold_v_scales"],
-                "page_table": layer_tkv["cold_table"],
-                "n_pages": layer_tkv["cold_n"],
-                "bits": 4,
-            },
+            "warm": pool_of(warm_cls, "warm_table", "warm_n", wb),
+            "cold": pool_of(cold_cls, "cold_table", "cold_n", cb),
         }
         # Host sentinel rows ride the same attention pass: no payload, just
         # the per-page key centroid scored for would-have-touched mass.
@@ -306,7 +343,7 @@ def make_tiered_decode_step(
             "summary": layer_tkv["host_summary"],
             "table": layer_tkv["host_table"],
             "n": layer_tkv["host_n"],
-            "page_tokens": layer_tkv["warm_k"].shape[1],
+            "page_tokens": layer_tkv[f"{warm_cls}_k"].shape[1],
         }
         if use_kernels:
             # Fused megakernel: ONE Pallas launch for all pools + host
@@ -366,9 +403,9 @@ def make_tiered_decode_step(
                 layer_tkv = {
                     f: getattr(tkv, f)[g]
                     for f in (
-                        "warm_k", "warm_k_scales", "warm_v", "warm_v_scales",
-                        "warm_table", "warm_n", "cold_k", "cold_k_scales",
-                        "cold_v", "cold_v_scales", "cold_table", "cold_n",
+                        "c8_k", "c8_k_scales", "c8_v", "c8_v_scales",
+                        "c4_k", "c4_k_scales", "c4_v", "c4_v_scales",
+                        "warm_table", "warm_n", "cold_table", "cold_n",
                         "recent_k", "recent_v",
                         "host_summary", "host_table", "host_n",
                     )
@@ -398,9 +435,9 @@ def make_tiered_decode_step(
                 layer_tkv = {
                     f: getattr(tkv, f)[li]
                     for f in (
-                        "warm_k", "warm_k_scales", "warm_v", "warm_v_scales",
-                        "warm_table", "warm_n", "cold_k", "cold_k_scales",
-                        "cold_v", "cold_v_scales", "cold_table", "cold_n",
+                        "c8_k", "c8_k_scales", "c8_v", "c8_v_scales",
+                        "c4_k", "c4_k_scales", "c4_v", "c4_v_scales",
+                        "warm_table", "warm_n", "cold_table", "cold_n",
                         "recent_k", "recent_v",
                         "host_summary", "host_table", "host_n",
                     )
@@ -454,16 +491,16 @@ def tiered_kv_state_specs(
     # Table slots shard with the pages (sequence parallelism).
     table_ax = "model" if sp_on else None
     return TieredKVState(
-        warm_k=P(None, page_ax, None, None, None),
-        warm_k_scales=P(None, page_ax, None, None),
-        warm_v=P(None, page_ax, None, None, None),
-        warm_v_scales=P(None, page_ax, None, None),
+        c8_k=P(None, page_ax, None, None, None),
+        c8_k_scales=P(None, page_ax, None, None),
+        c8_v=P(None, page_ax, None, None, None),
+        c8_v_scales=P(None, page_ax, None, None),
+        c4_k=P(None, page_ax, None, None, None),
+        c4_k_scales=P(None, page_ax, None, None),
+        c4_v=P(None, page_ax, None, None, None),
+        c4_v_scales=P(None, page_ax, None, None),
         warm_table=P(None, bax, table_ax),
         warm_n=P(None, bax),
-        cold_k=P(None, page_ax, None, None, None),
-        cold_k_scales=P(None, page_ax, None, None),
-        cold_v=P(None, page_ax, None, None, None),
-        cold_v_scales=P(None, page_ax, None, None),
         cold_table=P(None, bax, table_ax),
         cold_n=P(None, bax),
         recent_k=P(None, bax, None, None, None),

@@ -104,6 +104,10 @@ class TieredEngine:
             ring_slots=ts.media_ring_slots,
             prefetch=ts.prefetch,
             prefetch_max_pages=ts.prefetch_max_pages,
+            pool_bits={
+                "warm": getattr(ts, "warm_bits", 8),
+                "cold": getattr(ts, "cold_bits", 4),
+            },
         )
         from repro.launch.mesh import make_mesh
 

@@ -8,6 +8,14 @@ The KV cache is the serving analogue of the paper's application heap:
     3 = host  int8 behind PCIe        (C7-class)
     4 = host  int4 behind PCIe        (C10/C12-class: best TCO)
 
+  Storage is codec-class-major: device payloads live in one shared buffer
+  per codec class (``c8_*`` int8, ``c4_*`` int4) and page tables hold GLOBAL
+  class-buffer rows, so N pools of the same class need zero per-step payload
+  concatenation and same-class migrations are pure table edits
+  (``exchange_slots`` moves row ownership, not bytes). Each pool's
+  ``SlotAllocator`` starts with a contiguous row range of its class
+  partition (``ClassPartition``); exchanges interleave the ranges over time.
+
   The dense *recent window* plays DRAM's role for the newest tokens and is
   hotness-exempt (always uncompressed). Pages in device pools are read by
   every decode step through the paged-attention kernel, which returns exact
@@ -50,7 +58,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import tco
 from repro.core.manager import ManagerConfig, TierScapeManager
-from repro.core.pools import SlotAllocator
+from repro.core.pools import ClassPartition, SlotAllocator, exchange_slots
 from repro.core.tiers import TierSet, get as get_tier
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -62,10 +70,20 @@ from repro.runtime.serve import TieredKVState, init_tiered_kv_state
 # Placement indices (0 stays "uncompressed DRAM" for cost-model parity with
 # the paper; KV pages never occupy it — the recent window does).
 WARM, COLD, HOST8, HOST4 = 1, 2, 3, 4
-KV_TIER_IDS = ("C5", "C9", "C7", "C10")  # int8-HBM, int4-HBM, int8-host, int4-host
+KV_TIER_IDS = ("C5", "C9", "C7", "C10")  # default: int8-HBM, int4-HBM, int8-host, int4-host
+# Codec widths of the default pool split; instance widths live in
+# ``self._bits`` (``pool_bits`` can make both device pools share a codec
+# class, in which case they share one class buffer).
 _BITS = {WARM: 8, COLD: 4, HOST8: 8, HOST4: 4}
 _DEVICE = (WARM, COLD)
 _POOL = {WARM: "warm", COLD: "cold"}
+# Characterized tier ids by (pool, codec width) for the device pools.
+_DEVICE_TIER_IDS = {
+    ("warm", 8): "C5",  # SL-I8-HB
+    ("warm", 4): "C8",  # SL-I4-HB
+    ("cold", 8): "C6",  # PK-I8-HB
+    ("cold", 4): "C9",  # PK-I4-HB
+}
 # A page staged out of its source tier but not yet committed to its
 # destination by the async migration pipeline. Every placement mask in this
 # module is a positive-level comparison, so in-flight pages drop out of
@@ -73,8 +91,18 @@ _POOL = {WARM: "warm", COLD: "cold"}
 INFLIGHT = -1
 
 
-def kv_tierset(page_elems: int) -> TierSet:
-    return TierSet(tiers=tuple(get_tier(t) for t in KV_TIER_IDS), block_elems=page_elems)
+def kv_tierset(page_elems: int, warm_bits: int = 8, cold_bits: int = 4) -> TierSet:
+    """TierSet for a device-pool codec split. Defaults reproduce
+    ``KV_TIER_IDS``; same-width splits (e.g. warm_bits=cold_bits=8) pick the
+    matching characterized tiers so byte/latency accounting follows the
+    deployed codecs."""
+    ids = (
+        _DEVICE_TIER_IDS[("warm", int(warm_bits))],
+        _DEVICE_TIER_IDS[("cold", int(cold_bits))],
+        "C7",
+        "C10",
+    )
+    return TierSet(tiers=tuple(get_tier(t) for t in ids), block_elems=page_elems)
 
 
 @dataclasses.dataclass
@@ -143,6 +171,7 @@ class TieredKVCache:
         media_step_s: float = 50e-6,
         prefetch: bool = False,
         prefetch_max_pages: int = 8,
+        pool_bits: Optional[Dict[str, int]] = None,
     ):
         """``tenant_quota`` maps pool name ("warm"/"cold") -> {tenant id ->
         max concurrently held slots}. When a pool carries a quota, every
@@ -154,7 +183,11 @@ class TieredKVCache:
         ``migrate_batch`` path. ``prefetch`` (async-only) speculatively
         stages warming host pages through the ring's reserved slice so a
         boundary promotion commits without paying the swap-in read;
-        placements stay bit-identical to a prefetch-free run."""
+        placements stay bit-identical to a prefetch-free run. ``pool_bits``
+        maps pool name -> codec width (8 or 4) for the device pools,
+        default ``{"warm": 8, "cold": 4}``; pools of the same width share
+        one codec-class buffer and same-class migrations move no payload
+        bytes."""
         self.cfg = cfg
         self.la = n_attn_layers
         self.bs = batch_slots
@@ -168,6 +201,22 @@ class TieredKVCache:
         warm_cap = max(int(total_pages * warm_frac), 8)
         cold_cap = max(total_pages, 8)
 
+        # Codec-class-major storage: each device pool is a codec width over a
+        # shared class buffer. ``self._cls[pool]`` names the class fields the
+        # pool's pages live in; ``self._bits[level]`` the codec width per
+        # placement level. The default (8, 4) split keeps both pools alone in
+        # their class, so buffers, row numbering and allocation order are
+        # identical to the pre-class-major layout.
+        pool_bits = dict(pool_bits or {})
+        wb = int(pool_bits.get("warm", 8))
+        cb = int(pool_bits.get("cold", 4))
+        if wb not in (8, 4) or cb not in (8, 4):
+            raise ValueError(f"pool_bits must be 8 or 4, got warm={wb} cold={cb}")
+        self._pool_bits = {"warm": wb, "cold": cb}
+        self._cls = {"warm": "c8" if wb == 8 else "c4", "cold": "c8" if cb == 8 else "c4"}
+        self._bits = {WARM: wb, COLD: cb, HOST8: 8, HOST4: 4}
+        part = ClassPartition([("warm", wb, warm_cap), ("cold", cb, cold_cap)])
+
         self.state = init_tiered_kv_state(
             cfg,
             batch_slots,
@@ -178,6 +227,8 @@ class TieredKVCache:
             recent_window=recent_window,
             n_attn_layers=n_attn_layers,
             host_slots=self.bs * self.max_pages,
+            warm_bits=wb,
+            cold_bits=cb,
         )
         # Host tier pools: dict slot -> (k_pay, k_sc, v_pay, v_sc) numpy.
         self.host_pages: Dict[int, Tuple[np.ndarray, ...]] = {}
@@ -185,7 +236,7 @@ class TieredKVCache:
         # Region space: (layer, slot, page) flattened.
         self.n_regions = total_pages
         self.manager = TierScapeManager(
-            kv_tierset(self.page_elems),
+            kv_tierset(self.page_elems, wb, cb),
             self.n_regions,
             region_bytes=self.page_elems * 2,
             cfg=manager_cfg,
@@ -198,10 +249,13 @@ class TieredKVCache:
         # Device-pool slot management. SlotAllocators (daemon side) own the
         # free lists; ``tenant_quota`` caps per-tenant residency so one
         # tenant cannot exhaust a shared pool (the MaxMem failure mode).
+        # Slots are GLOBAL class-buffer rows: each pool's allocator starts
+        # with its contiguous ``ClassPartition`` range (base offset); with
+        # the default split both bases are 0, reproducing per-pool numbering.
         tenant_quota = tenant_quota or {}
         self._alloc = {
-            "warm": SlotAllocator(warm_cap, tenant_quota.get("warm")),
-            "cold": SlotAllocator(cold_cap, tenant_quota.get("cold")),
+            "warm": SlotAllocator(warm_cap, tenant_quota.get("warm"), base=part.base("warm")),
+            "cold": SlotAllocator(cold_cap, tenant_quota.get("cold"), base=part.base("cold")),
         }
         # Host sentinel summary slots (device-side key centroids for the
         # fused kernel's would-have-touched rows): PER-LAYER free lists —
@@ -328,6 +382,49 @@ class TieredKVCache:
     def _free_slot(self, pool: str, pool_slot: int) -> None:
         self._alloc[pool].free(int(pool_slot))
 
+    # ------------------------------------------------ class-major addressing
+    def _same_class(self, src: int, dst: int) -> bool:
+        """Device->device move within one codec class: payload bytes stay in
+        place in the shared class buffer; only row ownership moves."""
+        return src in _DEVICE and dst in _DEVICE and self._bits[src] == self._bits[dst]
+
+    def _gather_rows(self, pool: str, layers, ps):
+        """Gather a pool cohort's payload/scale rows from its class buffer."""
+        st = self.state
+        cls = self._cls[pool]
+        return (
+            getattr(st, f"{cls}_k")[layers, ps],
+            getattr(st, f"{cls}_k_scales")[layers, ps],
+            getattr(st, f"{cls}_v")[layers, ps],
+            getattr(st, f"{cls}_v_scales")[layers, ps],
+        )
+
+    def _scatter_rows(self, pool: str, layers, ps, k_pay, k_sc, v_pay, v_sc) -> None:
+        st = self.state
+        cls = self._cls[pool]
+        self.state = dataclasses.replace(
+            st,
+            **{
+                f"{cls}_k": getattr(st, f"{cls}_k").at[layers, ps].set(k_pay),
+                f"{cls}_k_scales": getattr(st, f"{cls}_k_scales").at[layers, ps].set(k_sc),
+                f"{cls}_v": getattr(st, f"{cls}_v").at[layers, ps].set(v_pay),
+                f"{cls}_v_scales": getattr(st, f"{cls}_v_scales").at[layers, ps].set(v_sc),
+            },
+        )
+
+    def _exchange_rows(self, src: int, dst: int, rids, ps) -> None:
+        """Transfer class-row ownership for a same-class cohort: each page's
+        row leaves the src allocator and joins the dst allocator (which
+        donates a free row back), enforcing dst tenant quota like alloc.
+        ``_pool_slot`` is untouched — the rows are global, the page stays
+        physically where it is."""
+        sa, da = self._alloc[_POOL[src]], self._alloc[_POOL[dst]]
+        for r, x in zip(rids, ps):
+            tenant = (
+                self._tenant_of_rid(int(r)) if da.tenant_quota is not None else None
+            )
+            exchange_slots(sa, da, int(x), int(r), tenant)
+
     def _quant_page(self, kpage, vpage, bits: int):
         self.kernel_dispatches += 2
         kp, ks = kref.quant_kv_page(kpage, bits)
@@ -414,22 +511,15 @@ class TieredKVCache:
             self._insert(rid, layer, slot, page, kpage, vpage, COLD)
             return
         ps = self._alloc_slot("warm", rid)
-        kp, ks, vp, vs = self._quant_page(kpage, vpage, 8)
+        kp, ks, vp, vs = self._quant_page(kpage, vpage, self._bits[WARM])
+        self._scatter_rows("warm", layer, ps, kp, ks, vp, vs)
         st = self.state
-        st = dataclasses.replace(
-            st,
-            warm_k=st.warm_k.at[layer, ps].set(kp),
-            warm_k_scales=st.warm_k_scales.at[layer, ps].set(ks),
-            warm_v=st.warm_v.at[layer, ps].set(vp),
-            warm_v_scales=st.warm_v_scales.at[layer, ps].set(vs),
-        )
         n = int(st.warm_n[layer, slot])
-        st = dataclasses.replace(
+        self.state = dataclasses.replace(
             st,
             warm_table=st.warm_table.at[layer, slot, n].set(ps),
             warm_n=st.warm_n.at[layer, slot].set(n + 1),
         )
-        self.state = st
         self._set_placement(rid, WARM)
         self._page_exists[rid] = True
         self._pool_slot[rid] = ps
@@ -491,7 +581,7 @@ class TieredKVCache:
             if sel.size == 0:
                 continue
             p = sel.size
-            bits = _BITS[dst]
+            bits = self._bits[dst]
             pay, sc = kops.quant_pages(jnp.concatenate([kpages[sel], vpages[sel]]), bits)
             self.kernel_dispatches += 1
             if dst in _DEVICE:
@@ -692,21 +782,28 @@ class TieredKVCache:
         return moved
 
     def _exec_cohort(self, rids: np.ndarray, src: int, dst: int, editor: _TableEditor) -> None:
-        """Move one (src, dst) cohort: gather -> (transcode | copy) -> scatter."""
+        """Move one (src, dst) cohort: gather -> (transcode | copy) -> scatter.
+        Same-class device moves skip all three: row ownership transfers
+        between the pools' allocators and the page tables are re-pointed —
+        zero payload bytes move."""
         p = rids.size
         layers = rids // (self.bs * self.max_pages)
         slots = (rids // self.max_pages) % self.bs
-        st = self.state
+
+        if self._same_class(src, dst):
+            ps = self._pool_slot[rids]
+            editor.remove(_POOL[src], layers, slots, ps)
+            self._exchange_rows(src, dst, rids, ps)
+            editor.insert(_POOL[dst], layers, slots, ps)
+            self._set_placement(rids, dst)
+            return
 
         # Gather all pages of the cohort into one [2P, T, KV, hd'] batch
         # (K pages then V pages, so one kernel dispatch covers both).
         if src in _DEVICE:
             pool = _POOL[src]
             ps = self._pool_slot[rids]
-            k_pay = getattr(st, f"{pool}_k")[layers, ps]
-            k_sc = getattr(st, f"{pool}_k_scales")[layers, ps]
-            v_pay = getattr(st, f"{pool}_v")[layers, ps]
-            v_sc = getattr(st, f"{pool}_v_scales")[layers, ps]
+            k_pay, k_sc, v_pay, v_sc = self._gather_rows(pool, layers, ps)
             editor.remove(pool, layers, slots, ps)
             for x in ps:
                 self._free_slot(pool, int(x))
@@ -719,10 +816,10 @@ class TieredKVCache:
             v_pay = jnp.asarray(np.stack([h[2] for h in hp]))
             v_sc = jnp.asarray(np.stack([h[3] for h in hp]))
 
-        if _BITS[src] != _BITS[dst]:
+        if self._bits[src] != self._bits[dst]:
             pay, sc = kops.transcode_pages(
                 jnp.concatenate([k_pay, v_pay]), jnp.concatenate([k_sc, v_sc]),
-                _BITS[src], _BITS[dst],
+                self._bits[src], self._bits[dst],
             )
             self.kernel_dispatches += 1
             k_pay, v_pay = pay[:p], pay[p:]
@@ -738,19 +835,12 @@ class TieredKVCache:
                 self.host_pages[int(r)] = (kp[i], ks[i], vp[i], vs[i])
             self._pool_slot[rids] = -2
             self._set_placement(rids, dst)
-            self._host_sentinel_insert(rids, layers, slots, kp, ks, _BITS[dst], editor)
+            self._host_sentinel_insert(rids, layers, slots, kp, ks, self._bits[dst], editor)
 
     def _scatter_device(self, dst, rids, layers, slots, k_pay, k_sc, v_pay, v_sc, editor):
         pool = _POOL[dst]
         new_ps = np.array([self._alloc_slot(pool, int(r)) for r in rids], np.int64)
-        st = self.state
-        kw = {
-            f"{pool}_k": getattr(st, f"{pool}_k").at[layers, new_ps].set(k_pay),
-            f"{pool}_k_scales": getattr(st, f"{pool}_k_scales").at[layers, new_ps].set(k_sc),
-            f"{pool}_v": getattr(st, f"{pool}_v").at[layers, new_ps].set(v_pay),
-            f"{pool}_v_scales": getattr(st, f"{pool}_v_scales").at[layers, new_ps].set(v_sc),
-        }
-        self.state = dataclasses.replace(st, **kw)
+        self._scatter_rows(pool, layers, new_ps, k_pay, k_sc, v_pay, v_sc)
         editor.insert(pool, layers, slots, new_ps)
         self._pool_slot[rids] = new_ps
         self._set_placement(rids, dst)
@@ -760,25 +850,42 @@ class TieredKVCache:
     # callbacks across successive engine decode steps. Payloads cross the
     # phase boundaries as numpy dicts so host-media cohorts can round-trip
     # through the pinned staging ring bit-exactly.
-    def stage_cohort(self, rids: np.ndarray, src: int) -> Dict[str, np.ndarray]:
+    def stage_cohort(
+        self, rids: np.ndarray, src: int, dst: Optional[int] = None
+    ) -> Dict[str, np.ndarray]:
         """Phase 1: gather the cohort's payloads and retire them from the
         source tier. Pages go in-flight: out of every placement mask until
         ``commit_cohort`` lands them, and — like host-tier pages always are
         — unreadable by decode steps for those few ticks. That bounded
         access-skip is the async pipeline's quality cost; the serial oracle
-        pays a blocked window boundary instead."""
+        pays a blocked window boundary instead.
+
+        When ``dst`` is known and shares the source's codec class, staging
+        degenerates to a table edit: the payload rows stay in place (and
+        allocated to src) in the shared class buffer and a ``class_rows``
+        marker rides the pipeline instead of bytes."""
         rids = np.asarray(rids, np.int64)
         layers = rids // (self.bs * self.max_pages)
         slots = (rids // self.max_pages) % self.bs
         st = self.state
+        if dst is not None and self._same_class(src, dst):
+            ps = self._pool_slot[rids]
+            editor = _TableEditor(st)
+            editor.remove(_POOL[src], layers, slots, ps)
+            self.state = editor.commit(st)
+            # Rows remain owned by src's allocator until commit exchanges
+            # them; ``_pool_slot`` keeps pointing at the resident rows.
+            self.physical[rids] = INFLIGHT
+            return {"class_rows": ps.copy()}
         if src in _DEVICE:
             pool = _POOL[src]
             ps = self._pool_slot[rids]
+            kp, ks, vp, vs = self._gather_rows(pool, layers, ps)
             payload = {
-                "k_pay": np.asarray(getattr(st, f"{pool}_k")[layers, ps]),
-                "k_sc": np.asarray(getattr(st, f"{pool}_k_scales")[layers, ps]),
-                "v_pay": np.asarray(getattr(st, f"{pool}_v")[layers, ps]),
-                "v_sc": np.asarray(getattr(st, f"{pool}_v_scales")[layers, ps]),
+                "k_pay": np.asarray(kp),
+                "k_sc": np.asarray(ks),
+                "v_pay": np.asarray(vp),
+                "v_sc": np.asarray(vs),
             }
             editor = _TableEditor(st)
             editor.remove(pool, layers, slots, ps)
@@ -832,14 +939,18 @@ class TieredKVCache:
         self, payload: Dict[str, np.ndarray], src: int, dst: int
     ) -> Dict[str, np.ndarray]:
         """Phase 2: one fused transcode dispatch for the whole cohort (K and
-        V stacked); the same-codec fast path is a raw media copy."""
-        if _BITS[src] == _BITS[dst]:
+        V stacked); the same-codec fast path is a raw media copy, and a
+        same-class ``class_rows`` marker passes through untouched (the
+        payload never left the class buffer)."""
+        if "class_rows" in payload:
+            return payload
+        if self._bits[src] == self._bits[dst]:
             return payload
         p = payload["k_pay"].shape[0]
         pay, sc = kops.transcode_pages(
             jnp.concatenate([jnp.asarray(payload["k_pay"]), jnp.asarray(payload["v_pay"])]),
             jnp.concatenate([jnp.asarray(payload["k_sc"]), jnp.asarray(payload["v_sc"])]),
-            _BITS[src], _BITS[dst],
+            self._bits[src], self._bits[dst],
         )
         self.kernel_dispatches += 1
         return {
@@ -875,6 +986,8 @@ class TieredKVCache:
         per-rid level actually landed (spills included) so the pipeline can
         bill the devices that really absorbed the writes."""
         rids = np.asarray(rids, np.int64)
+        if "class_rows" in payload:
+            return self._commit_class_rows(rids, payload["class_rows"], src, dst)
         actual = np.full(rids.size, dst, np.int64)
         if dst in _DEVICE:
             fits = self._claim_fits(_POOL[dst], rids)
@@ -905,7 +1018,58 @@ class TieredKVCache:
         self._set_placement(rids, dst)
         layers = rids // (self.bs * self.max_pages)
         slots = (rids // self.max_pages) % self.bs
-        self._host_sentinel_insert(rids, layers, slots, kp, ks, _BITS[dst])
+        self._host_sentinel_insert(rids, layers, slots, kp, ks, self._bits[dst])
+        return actual
+
+    def _commit_class_rows(
+        self, rids: np.ndarray, ps: np.ndarray, src: int, dst: int
+    ) -> np.ndarray:
+        """Commit a same-class marker cohort: exchange row ownership into the
+        destination pool and re-point the page tables — zero payload motion.
+        Pages that no longer fit at commit time (appends raced the cohort)
+        fall back to the byte-moving path: their rows are gathered, freed
+        from src and the sub-batch spills down-tier exactly like a regular
+        commit overflow."""
+        ps = np.asarray(ps, np.int64)
+        actual = np.full(rids.size, dst, np.int64)
+        fits = self._claim_fits(_POOL[dst], rids)
+        fi = np.where(fits)[0]
+        if fi.size:
+            frids, fps = rids[fi], ps[fi]
+            layers = frids // (self.bs * self.max_pages)
+            slots = (frids // self.max_pages) % self.bs
+            editor = _TableEditor(self.state)
+            self._exchange_rows(src, dst, frids, fps)
+            editor.insert(_POOL[dst], layers, slots, fps)
+            self.state = editor.commit(self.state)
+            self._set_placement(frids, dst)
+        sp = np.where(~fits)[0]
+        if sp.size:
+            srids, sps = rids[sp], ps[sp]
+            spill_dst = COLD if dst == WARM else HOST4
+            if spill_dst == src:
+                # Spilling back into the source pool: the rows never left it;
+                # reinsert the table entries and the move becomes a no-op.
+                layers = srids // (self.bs * self.max_pages)
+                slots = (srids // self.max_pages) % self.bs
+                editor = _TableEditor(self.state)
+                editor.insert(_POOL[src], layers, slots, sps)
+                self.state = editor.commit(self.state)
+                self._set_placement(srids, src)
+                actual[sp] = src
+            else:
+                layers = srids // (self.bs * self.max_pages)
+                slots = (srids // self.max_pages) % self.bs
+                kp, ks, vp, vs = self._gather_rows(_POOL[src], layers, sps)
+                sub = {
+                    "k_pay": np.asarray(kp), "k_sc": np.asarray(ks),
+                    "v_pay": np.asarray(vp), "v_sc": np.asarray(vs),
+                }
+                for x in sps:
+                    self._free_slot(_POOL[src], int(x))
+                self._pool_slot[srids] = -3
+                sub = self.transcode_cohort(sub, src, spill_dst)
+                actual[sp] = self.commit_cohort(srids, sub, src, spill_dst)
         return actual
 
     def device_of(self, level: int) -> str:
@@ -1003,12 +1167,16 @@ class TieredKVCache:
         ps = int(self._pool_slot[rid])
         st = self.state
         self.kernel_dispatches += 2
-        if src == WARM:
-            k = kref.dequant_kv_page(st.warm_k[layer, ps], st.warm_k_scales[layer, ps], 8)
-            v = kref.dequant_kv_page(st.warm_v[layer, ps], st.warm_v_scales[layer, ps], 8)
-        elif src == COLD:
-            k = kref.dequant_kv_page(st.cold_k[layer, ps], st.cold_k_scales[layer, ps], 4)
-            v = kref.dequant_kv_page(st.cold_v[layer, ps], st.cold_v_scales[layer, ps], 4)
+        if src in _DEVICE:
+            cls, bits = self._cls[_POOL[src]], self._bits[src]
+            k = kref.dequant_kv_page(
+                getattr(st, f"{cls}_k")[layer, ps],
+                getattr(st, f"{cls}_k_scales")[layer, ps], bits,
+            )
+            v = kref.dequant_kv_page(
+                getattr(st, f"{cls}_v")[layer, ps],
+                getattr(st, f"{cls}_v_scales")[layer, ps], bits,
+            )
         else:
             kp, ks, vp, vs = self.host_pages[rid]
             bits = 8 if src == HOST8 else 4
@@ -1059,40 +1227,22 @@ class TieredKVCache:
             st = self.state
         if dst == COLD and self._pool_headroom("cold", tenant) == 0:
             dst = HOST4  # cold quota exhausted; spill to the host tier
-        if dst == WARM:
-            ps = self._alloc_slot("warm", rid)
-            kp, ks, vp, vs = self._quant_page(k, v, 8)
+        if dst in _DEVICE:
+            pool = _POOL[dst]
+            ps = self._alloc_slot(pool, rid)
+            kp, ks, vp, vs = self._quant_page(k, v, self._bits[dst])
+            self._scatter_rows(pool, layer, ps, kp, ks, vp, vs)
+            st = self.state
+            n = int(getattr(st, f"{pool}_n")[layer, slot])
             st = dataclasses.replace(
                 st,
-                warm_k=st.warm_k.at[layer, ps].set(kp),
-                warm_k_scales=st.warm_k_scales.at[layer, ps].set(ks),
-                warm_v=st.warm_v.at[layer, ps].set(vp),
-                warm_v_scales=st.warm_v_scales.at[layer, ps].set(vs),
-            )
-            n = int(st.warm_n[layer, slot])
-            st = dataclasses.replace(
-                st,
-                warm_table=st.warm_table.at[layer, slot, n].set(ps),
-                warm_n=st.warm_n.at[layer, slot].set(n + 1),
-            )
-        elif dst == COLD:
-            ps = self._alloc_slot("cold", rid)
-            kp, ks, vp, vs = self._quant_page(k, v, 4)
-            st = dataclasses.replace(
-                st,
-                cold_k=st.cold_k.at[layer, ps].set(kp),
-                cold_k_scales=st.cold_k_scales.at[layer, ps].set(ks),
-                cold_v=st.cold_v.at[layer, ps].set(vp),
-                cold_v_scales=st.cold_v_scales.at[layer, ps].set(vs),
-            )
-            n = int(st.cold_n[layer, slot])
-            st = dataclasses.replace(
-                st,
-                cold_table=st.cold_table.at[layer, slot, n].set(ps),
-                cold_n=st.cold_n.at[layer, slot].set(n + 1),
+                **{
+                    f"{pool}_table": getattr(st, f"{pool}_table").at[layer, slot, n].set(ps),
+                    f"{pool}_n": getattr(st, f"{pool}_n").at[layer, slot].set(n + 1),
+                },
             )
         else:
-            bits = 8 if dst == HOST8 else 4
+            bits = self._bits[dst]
             kp, ks, vp, vs = self._quant_page(k, v, bits)
             self.host_pages[rid] = tuple(np.asarray(x) for x in (kp, ks, vp, vs))
             ps = -2
@@ -1209,7 +1359,9 @@ class TieredKVCache:
                 np.asarray(telemetry[pool]),
                 np.asarray(getattr(st, f"{pool}_table")),
                 np.asarray(getattr(st, f"{pool}_n")),
-                getattr(st, f"{pool}_k").shape[1],
+                # Slots are global class-buffer rows; the lookup spans the
+                # whole class buffer (ranges interleave after exchanges).
+                getattr(st, f"{self._cls[pool]}_k").shape[1],
                 live,
                 self._pool_slot,
             )
@@ -1312,8 +1464,8 @@ class TieredKVCache:
     def hbm_bytes(self) -> int:
         st = self.state
         tot = 0
-        for name in ("warm_k", "warm_k_scales", "warm_v", "warm_v_scales",
-                     "cold_k", "cold_k_scales", "cold_v", "cold_v_scales",
+        for name in ("c8_k", "c8_k_scales", "c8_v", "c8_v_scales",
+                     "c4_k", "c4_k_scales", "c4_v", "c4_v_scales",
                      "recent_k", "recent_v"):
             a = getattr(st, name)
             tot += a.size * a.dtype.itemsize

@@ -153,9 +153,9 @@ def test_host_mass_matches_ref_oracle():
     by the same merged (m, l) normalization as real page masses."""
     rng = np.random.default_rng(5)
     pools = {"warm": _mk_pool(rng, 4, 8, 3, [3, 2])}
-    # Host page_tokens deliberately differs from the pools' T: the sentinel
-    # mass multiplier must follow the host contract on every path.
-    host = _mk_host(rng, page_tokens=2 * T)
+    # One validated page_tokens per launch: the host sentinels must declare
+    # the pools' page size (a mismatch raises — see test_class_major.py).
+    host = _mk_host(rng, page_tokens=T)
     q, rk, rv, rlen = _inputs(rng)
     ops.use_fused(True)
     _, hot = ops.tiered_decode_attention(q, pools, rk, rv, rlen,

@@ -62,12 +62,14 @@ def logical_content(cache: TieredKVCache):
         loc = int(cache.physical[rid])
         layer, _, _ = cache.rid_coords(rid)
         ps = int(cache._pool_slot[rid])
-        if loc == WARM:
-            item = (st.warm_k[layer, ps], st.warm_k_scales[layer, ps],
-                    st.warm_v[layer, ps], st.warm_v_scales[layer, ps])
-        elif loc == COLD:
-            item = (st.cold_k[layer, ps], st.cold_k_scales[layer, ps],
-                    st.cold_v[layer, ps], st.cold_v_scales[layer, ps])
+        if loc in (WARM, COLD):
+            # Payloads live in the shared codec-class buffers; slots are
+            # global class rows.
+            cls = cache._cls["warm" if loc == WARM else "cold"]
+            item = (getattr(st, f"{cls}_k")[layer, ps],
+                    getattr(st, f"{cls}_k_scales")[layer, ps],
+                    getattr(st, f"{cls}_v")[layer, ps],
+                    getattr(st, f"{cls}_v_scales")[layer, ps])
         else:
             item = cache.host_pages[rid]
         out[rid] = (loc, tuple(np.asarray(x) for x in item))
