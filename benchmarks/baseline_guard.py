@@ -22,6 +22,15 @@ Check semantics per guard:
     no-prefetch oracle, decode-visible swap-in stalls must be reduced, at
     least one page must be prefetched, and the hit rate must stay >= 0.5
     and within ``HIT_RATE_BAND`` of the baseline.
+  capacity_frontier — the planner sweep is pure seeded numpy, so the
+    contract is threefold: the sweep must be bit-reproducible (two passes
+    emit identical frontier JSON), the Pareto frontier must stay monotone
+    (savings strictly rise, fleet dollars never rise, as the latency proxy
+    grows), and the frontier must keep dominating the 2-tier production
+    baseline on the skew-flip mix by at least the paper's margin
+    (``DOMINANCE_MARGIN_FLOOR_PCT`` savings points at no-worse latency).
+    Frontier structure (config names + server counts + savings) is compared
+    exactly against the committed baseline.
   decode_fused — launch structure and operand assembly are deterministic,
     so the comparison is exact: the fused megakernel must issue EXACTLY one
     Pallas launch per decode step at every tier count, class-major operand
@@ -46,6 +55,9 @@ from benchmarks.common import Csv
 
 EFFICIENCY_BAND = 0.25
 HIT_RATE_BAND = 0.15
+# The paper's low-end headline: multiple software-defined tiers buy >= 22
+# points of memory-TCO savings at performance parity (§1).
+DOMINANCE_MARGIN_FLOOR_PCT = 22.0
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +140,49 @@ def check_decode_fused(current: dict, baseline: dict) -> List[str]:
     return errors
 
 
+def check_capacity_frontier(current: dict, baseline: dict) -> List[str]:
+    errors = []
+    if not current.get("reproducible", False):
+        errors.append(
+            "planner sweep is not bit-reproducible (two passes on the same "
+            "seed emitted different frontier JSON)"
+        )
+    if not current.get("monotone", False):
+        errors.append(
+            "frontier is not monotone (savings must strictly rise and fleet "
+            "dollars never rise as the latency proxy grows)"
+        )
+    if not current.get("dominates_2t", False):
+        errors.append("frontier no longer dominates the 2-tier baseline")
+    margin = current.get("dominance_margin_pct")
+    if margin is None or margin < DOMINANCE_MARGIN_FLOOR_PCT:
+        errors.append(
+            f"2-tier dominance margin {margin} is below the paper's floor "
+            f"({DOMINANCE_MARGIN_FLOOR_PCT} savings points)"
+        )
+    cur_front = current.get("frontier", [])
+    base_front = baseline.get("frontier", [])
+    if [p["config"] for p in cur_front] != [p["config"] for p in base_front]:
+        errors.append(
+            f"frontier configs changed: "
+            f"{[p['config'] for p in base_front]} -> "
+            f"{[p['config'] for p in cur_front]}"
+        )
+    else:
+        for cur, base in zip(cur_front, base_front):
+            if cur["servers"] != base["servers"]:
+                errors.append(
+                    f"{cur['config']}: servers changed "
+                    f"{base['servers']} -> {cur['servers']}"
+                )
+            if abs(cur["savings_pct"] - base["savings_pct"]) > 1e-6:
+                errors.append(
+                    f"{cur['config']}: savings changed "
+                    f"{base['savings_pct']} -> {cur['savings_pct']}"
+                )
+    return errors
+
+
 def check_prefetch(current: dict, baseline: dict) -> List[str]:
     errors = []
     cur = current.get("prefetch")
@@ -180,6 +235,12 @@ def _run_decode_fused(results: dict, baseline: dict) -> None:
     decode_fused.run(Csv("decode_fused"), tier_counts=tiers, results=results)
 
 
+def _run_capacity(results: dict, baseline: dict) -> None:
+    from benchmarks import capacity_frontier
+
+    capacity_frontier.run(Csv("capacity"), results)
+
+
 @dataclasses.dataclass(frozen=True)
 class Guard:
     name: str
@@ -193,6 +254,8 @@ GUARDS = (
     Guard("media_overlap", "media_overlap.json", _run_media, check_media),
     Guard("prefetch_hitrate", "prefetch_hitrate.json", _run_prefetch, check_prefetch),
     Guard("decode_fused", "decode_fused.json", _run_decode_fused, check_decode_fused),
+    Guard("capacity_frontier", "capacity_frontier.json", _run_capacity,
+          check_capacity_frontier),
 )
 
 

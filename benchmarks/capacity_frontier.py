@@ -1,0 +1,123 @@
+"""Planner-driven perf-per-dollar frontier on the skew-flip multi-tenant mix.
+
+The paper's headline metric (memory-TCO savings at performance parity, §1 /
+Eq. 9-12) priced at the fleet level: every searched tier configuration (2T
+production baseline, the 6T alpha ladder, the warm/cold codec-split family)
+runs through ``simulate_multitenant`` on the skew-flip mix, the arbiter's
+``fleet_report()`` feeds the ``CapacityPlanner``, and the planner bin-packs
+tenant footprints + decode demand onto ``v5e-base`` servers to emit servers
+needed, amortized fleet dollars, savings % vs an all-DRAM-provisioned fleet,
+and p50/p99 latency proxies.
+
+Rows: ``capacity/point-<config>`` for every searched point and
+``capacity/frontier-<config>`` for the Pareto-optimal subset; a ``-summary``
+row carries monotonicity / 2T-dominance / reproducibility. The committed
+baseline (``baselines/capacity_frontier.json``) is guarded by
+``baseline_guard.check_capacity_frontier``: the frontier must stay monotone,
+keep dominating the 2-tier baseline by the paper's margin, and the whole
+sweep must be bit-reproducible (two passes emit identical JSON).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+from benchmarks.common import Csv
+from repro.core import capacity, simulator
+from repro.core.arbiter import TenantSpec
+from repro.core.simulator import Workload
+
+N_REGIONS = 512
+ACCESSES = 200_000
+WINDOWS = 16
+WARMUP = 2
+FLIP_WINDOW = 8
+SERVER = "v5e-base"
+OPERATING_YEARS = 3.0
+FLEET_SCALE = 256
+SEED = 0
+
+
+def skewflip_workloads() -> List[Workload]:
+    """The skew-flip mix: two tenants whose hotness swaps mid-run — the
+    scenario where a static tier split is wrong half the time and the
+    arbiter + planner have to earn their keep."""
+    return [
+        simulator.skew_flip(n_regions=N_REGIONS, accesses_hot=ACCESSES,
+                            accesses_cold=ACCESSES // 10,
+                            flip_window=FLIP_WINDOW, hot_first=True,
+                            name="early"),
+        simulator.skew_flip(n_regions=N_REGIONS, accesses_hot=ACCESSES,
+                            accesses_cold=ACCESSES // 10,
+                            flip_window=FLIP_WINDOW, hot_first=False,
+                            name="late"),
+    ]
+
+
+def skewflip_specs() -> List[TenantSpec]:
+    return [TenantSpec("early", sla_weight=1.0),
+            TenantSpec("late", sla_weight=1.0)]
+
+
+def sweep(windows: int = WINDOWS, seed: int = SEED) -> dict:
+    planner = capacity.CapacityPlanner(
+        capacity.get_server(SERVER),
+        operating_period_years=OPERATING_YEARS,
+        fleet_scale=FLEET_SCALE,
+    )
+    return capacity.sweep_frontier(
+        skewflip_workloads, skewflip_specs(), planner,
+        windows=windows, warmup_windows=WARMUP, seed=seed,
+    )
+
+
+def run(csv: Csv, results: dict | None = None, windows: int = WINDOWS) -> None:
+    t0 = time.perf_counter()
+    res = sweep(windows=windows)
+    wall = (time.perf_counter() - t0) * 1e6 / max(len(res["points"]), 1)
+    # Bit-reproducibility probe: the same grid on the same seed must emit
+    # the identical frontier JSON (the CI guard's determinism contract).
+    res["reproducible"] = capacity.frontier_json(res) == capacity.frontier_json(
+        sweep(windows=windows)
+    )
+
+    frontier_configs = {p["config"] for p in res["frontier"]}
+    for p in res["points"]:
+        kind = "frontier" if p["config"] in frontier_configs else "point"
+        csv.add(
+            f"{kind}-{p['config']}",
+            wall,
+            f"servers={p['servers']};fleet_usd={p['fleet_usd']:.0f};"
+            f"savings_pct={p['savings_pct']:.2f};"
+            f"p99_penalty_s={p['p99_penalty_s']:.4f}",
+        )
+    csv.add(
+        "summary",
+        wall,
+        f"monotone={res['monotone']};dominates_2t={res.get('dominates_2t')};"
+        f"margin_pct={res.get('dominance_margin_pct'):.2f};"
+        f"reproducible={res['reproducible']}",
+    )
+    if results is not None:
+        results.update(res)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="dump metrics for CI")
+    args = ap.parse_args()
+    csv = Csv("capacity")
+    results: dict = {}
+    run(csv, results)
+    csv.emit()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

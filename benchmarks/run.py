@@ -2,7 +2,8 @@
 ``name,us_per_call,derived`` CSV rows.
 
   fig3       tier characterization (latency/ratio/cost/error x 2 datasets)
-  fig8       2T vs 6T-WF vs 6T-AM perf/TCO frontier (5 workloads)
+  fig8       2T vs 6T-WF per workload + planner-driven frontier points
+  capacity   fleet capacity planner: perf-per-dollar frontier (skew-flip mix)
   fig9_10_11 placement distributions + TCO timeline
   fig12      tail latency (mean + p99)
   fig13      daemon tax
@@ -26,6 +27,7 @@ import argparse
 
 from benchmarks.common import Csv
 from benchmarks import (
+    capacity_frontier,
     decode_fused,
     fig3_characterization,
     fig8_frontier,
@@ -43,6 +45,7 @@ from benchmarks import (
 TABLES = {
     "fig3": fig3_characterization.run,
     "fig8": fig8_frontier.run,
+    "capacity": capacity_frontier.run,
     "fig9_10_11": fig9_placement.run,
     "fig12": fig12_tail_latency.run,
     "fig13": fig13_daemon_tax.run,

@@ -4,6 +4,16 @@ and log the three roofline terms (experiments/perf/<cell>__<tag>.json).
     PYTHONPATH=src python scripts/hillclimb.py --arch qwen3_moe_235b \
         --shape train_4k --tag baseline [--accum 4] [--no-fsdp] [--kvseq] \
         [--tiered-kv] [--top-collectives]
+
+Capacity-planner mode (``--capacity``): instead of lowering a cell, sweep
+tier configurations (2T baseline, 6T alpha ladder, warm/cold codec splits)
+through ``simulate_multitenant`` on the skew-flip mix, feed each run's
+``fleet_report()`` to the ``CapacityPlanner``, and log the perf-per-dollar
+frontier to experiments/capacity/<tag>.json:
+
+    PYTHONPATH=src:. python scripts/hillclimb.py --capacity --tag sweep1 \
+        [--server v5e-base] [--operating-years 3] [--fleet-scale 256] \
+        [--windows 16] [--seed 0]
 """
 
 import os
@@ -16,11 +26,62 @@ import sys
 import time
 
 
+def run_capacity(args) -> None:
+    """Planner mode: sweep tier configurations, log the frontier JSON."""
+    from benchmarks import capacity_frontier
+    from repro.core import capacity
+
+    planner = capacity.CapacityPlanner(
+        capacity.get_server(args.server),
+        operating_period_years=args.operating_years,
+        fleet_scale=args.fleet_scale,
+    )
+    t0 = time.time()
+    res = capacity.sweep_frontier(
+        capacity_frontier.skewflip_workloads,
+        capacity_frontier.skewflip_specs(),
+        planner,
+        windows=args.windows,
+        seed=args.seed,
+    )
+    wall = time.time() - t0
+    res["tag"] = args.tag
+
+    print(f"[{args.tag}] capacity sweep: {len(res['points'])} configs, "
+          f"{len(res['frontier'])} on the frontier ({wall:.1f}s)")
+    print(f"  server={args.server} years={args.operating_years} "
+          f"fleet_scale={args.fleet_scale} windows={args.windows}")
+    for p in res["points"]:
+        star = "*" if p in res["frontier"] else " "
+        print(f"  {star} {p['config']:24s} servers={p['servers']:4d} "
+              f"fleet_usd={p['fleet_usd']:12.0f} "
+              f"savings={p['savings_pct']:6.2f}% "
+              f"p99_penalty={p['p99_penalty_s']:.4f}s "
+              f"perf/$={p['perf_per_dollar']:.1f}")
+    print(f"  monotone={res['monotone']} dominates_2t={res.get('dominates_2t')} "
+          f"margin={res.get('dominance_margin_pct')}pts")
+
+    os.makedirs("experiments/capacity", exist_ok=True)
+    out_path = f"experiments/capacity/{args.tag}.json"
+    with open(out_path, "w") as f:
+        f.write(capacity.frontier_json(res))
+    print(f"  -> {out_path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
     ap.add_argument("--tag", required=True)
+    ap.add_argument("--capacity", action="store_true",
+                    help="run the fleet capacity planner sweep instead of "
+                         "lowering a cell")
+    ap.add_argument("--server", default="v5e-base",
+                    help="ServerSpec catalog entry for --capacity")
+    ap.add_argument("--operating-years", type=float, default=3.0)
+    ap.add_argument("--fleet-scale", type=int, default=256)
+    ap.add_argument("--windows", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--accum", type=int, default=None)
     ap.add_argument("--fsdp", dest="fsdp", action="store_true", default=None)
@@ -30,6 +91,12 @@ def main():
     ap.add_argument("--tiered-kv", action="store_true", default=None)
     ap.add_argument("--top-collectives", action="store_true")
     args = ap.parse_args()
+
+    if args.capacity:
+        run_capacity(args)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required unless --capacity is given")
 
     import repro.configs as configs
     from repro.configs.base import SHAPES, ParallelConfig

@@ -1,8 +1,16 @@
 """TierScape core: multiple software-defined compressed memory tiers for
 TPU model state, with waterfall / analytical placement (paper §4-§6)."""
 
-from repro.core import analytical, arbiter, codecs, hw, pools, simulator, tco, telemetry, tiers, waterfall
+from repro.core import analytical, arbiter, capacity, codecs, hw, pools, simulator, tco, telemetry, tiers, waterfall
 from repro.core.arbiter import ArbiterWindowStats, BudgetArbiter, TenantSpec
+from repro.core.capacity import (
+    CapacityPlanner,
+    FleetReport,
+    FrontierPoint,
+    PlannerConfig,
+    ServerSpec,
+    get_server,
+)
 from repro.core.manager import ManagerConfig, MigrationPlan, TierScapeManager, make_manager
 from repro.core.tiers import (
     BASELINE_2T,
@@ -17,6 +25,13 @@ from repro.core.tiers import (
 __all__ = [
     "analytical",
     "arbiter",
+    "capacity",
+    "CapacityPlanner",
+    "FleetReport",
+    "FrontierPoint",
+    "PlannerConfig",
+    "ServerSpec",
+    "get_server",
     "codecs",
     "hw",
     "pools",

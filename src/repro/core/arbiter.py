@@ -78,6 +78,10 @@ class TenantWindowStats:
     savings_pct: float
     fast_regions: int  # regions resident in placement 0 (uncompressed)
     weighted_penalty_s: float  # sla_weight * sum(hot * Lat) of the commit
+    # Decode demand the tenant presented this window (closed-window access
+    # total, PEBS-noised if telemetry is) — the capacity planner's
+    # throughput-demand signal.
+    demand_accesses: float = 0.0
 
 
 @dataclasses.dataclass
@@ -222,6 +226,7 @@ class BudgetArbiter:
                     weighted_penalty_s=float(
                         s.sla_weight * (avg_hots[t] * lats[t][news[t]]).sum()
                     ),
+                    demand_accesses=float(np.asarray(hots[t]).sum()),
                 )
             )
         # After commit every manager's placement == news[t], so the fleet
@@ -536,3 +541,68 @@ class BudgetArbiter:
         return [
             ts for ws in self.history for ts in ws.tenants if ts.tenant == name
         ]
+
+    def fleet_report(self, last_windows: Optional[int] = None):
+        """Summarize the arbiter's recent history as the ``FleetReport`` the
+        capacity planner consumes — the live-telemetry bridge from
+        ``ArbiterWindowStats`` + per-tenant ``WindowStats`` to
+        "how many servers, which tier mix, at what dollar cost".
+
+        ``last_windows`` restricts the aggregation to the most recent N
+        windows (e.g. to drop a simulation's warmup); default is the whole
+        history. Per-tenant resident bytes are grouped by each tier's
+        backing media device from the managers' committed placement
+        histograms, so the planner's bin-packing sees the same bytes the
+        byte-level TCO model (Eq. 12) priced.
+        """
+        from repro.core.capacity import FleetReport
+
+        if not self.history:
+            raise ValueError("fleet_report needs at least one closed window")
+        hist = self.history[-last_windows:] if last_windows else self.history
+        n_w = len(hist)
+
+        bytes_by_dev: List[Dict[str, float]] = []
+        for m in self.managers:
+            mgr_hist = m.history[-n_w:]
+            acc: Dict[str, float] = {}
+            for ws in mgr_hist:
+                resident = ws.placement_hist * m._stored_bytes
+                for i, dev in enumerate(m._dev_names):
+                    acc[dev] = acc.get(dev, 0.0) + float(resident[i])
+            bytes_by_dev.append({d: b / max(len(mgr_hist), 1) for d, b in acc.items()})
+
+        media: Dict[str, float] = {}
+        for ws in hist:
+            for dev, b in ws.media_bytes_by_device.items():
+                media[dev] = media.get(dev, 0.0) + float(b)
+            for dev, b in ws.speculative_bytes_by_device.items():
+                media[dev] = media.get(dev, 0.0) + float(b)
+        media = {d: b / n_w for d, b in media.items()}
+
+        n_t = len(self.specs)
+        demand = tuple(
+            float(np.mean([ws.tenants[t].demand_accesses for ws in hist]))
+            for t in range(n_t)
+        )
+        penalty = tuple(
+            float(np.mean([ws.tenants[t].weighted_penalty_s for ws in hist]))
+            for t in range(n_t)
+        )
+        return FleetReport(
+            windows=n_w,
+            tenant_names=tuple(s.name for s in self.specs),
+            tenant_footprint_bytes=tuple(
+                float(m.n_regions) * float(m.region_bytes) for m in self.managers
+            ),
+            tenant_bytes_by_device=tuple(bytes_by_dev),
+            tenant_demand_accesses=demand,
+            tenant_penalty_s=penalty,
+            per_window_penalty_s=np.array(
+                [sum(ts.weighted_penalty_s for ts in ws.tenants) for ws in hist]
+            ),
+            fleet_tco_usd=float(np.mean([ws.fleet_tco_usd for ws in hist])),
+            fleet_savings_pct=float(np.mean([ws.fleet_savings_pct for ws in hist])),
+            media_bytes_by_device=media,
+            budget_feasible_frac=float(np.mean([ws.budget_feasible for ws in hist])),
+        )

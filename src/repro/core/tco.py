@@ -72,8 +72,14 @@ def savings_pct(
     region_bytes: int,
     measured_ratios: Optional[Sequence[float]] = None,
 ) -> float:
-    """Memory-TCO savings relative to all-DRAM, in percent (paper's metric)."""
+    """Memory-TCO savings relative to all-DRAM, in percent (paper's metric).
+
+    An empty placement (zero-region tenant) has nothing to save: 0.0, not a
+    division by zero.
+    """
     mx = tco_max(len(placement), region_bytes)
+    if mx <= 0.0:
+        return 0.0
     return 100.0 * (mx - tco_nt(tierset, placement, region_bytes, measured_ratios)) / mx
 
 
@@ -96,14 +102,24 @@ def budget(
 
 
 def fleet_tco_usd(managers: Sequence) -> float:
-    """Aggregate memory TCO across tenant managers (Eq. 12 summed)."""
-    return sum(
+    """Aggregate memory TCO across tenant managers (Eq. 12 summed).
+
+    An empty manager sequence is an empty fleet: 0.0.
+    """
+    return float(sum(
         tco_nt(m.tierset, m.placement, m.region_bytes, m.measured_ratios)
         for m in managers
-    )
+    ))
 
 
 def fleet_savings_pct(managers: Sequence) -> float:
-    """Fleet TCO savings vs all-DRAM, weighted by each tenant's footprint."""
+    """Fleet TCO savings vs all-DRAM, weighted by each tenant's footprint.
+
+    An empty fleet — no managers, or only zero-region tenants — saves
+    nothing: 0.0, not a division by zero.
+    """
+    managers = list(managers)
     mx = sum(tco_max(m.n_regions, m.region_bytes) for m in managers)
+    if mx <= 0.0:
+        return 0.0
     return 100.0 * (mx - fleet_tco_usd(managers)) / mx

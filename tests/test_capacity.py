@@ -1,0 +1,281 @@
+"""Fleet capacity planner + TCO-model edge cases.
+
+Property-based tests (seeded-numpy case sweeps, see tests/proptest.py) pin:
+  * the Eq. 9-12 ordering tco_min <= tco_nt <= tco_max over random
+    placements and measured ratios, and Eq. 2's budget monotone in alpha,
+  * the zero-region / empty-fleet degenerate cases return 0.0 savings
+    (not a division by zero),
+  * ServerSpec amortization decomposes into its cost components and the
+    bin-packer's server count stays within its load bounds,
+  * the planner sweep is deterministic: the same grid on the same seed
+    emits byte-identical frontier JSON, and the frontier is Pareto.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import capacity, tco
+from repro.core.capacity import (
+    BW,
+    DECODE,
+    GIB,
+    MEM,
+    CapacityPlanner,
+    FrontierPoint,
+    PlannerConfig,
+    ServerSpec,
+    get_server,
+)
+from repro.core.tiers import default_tierset
+
+from proptest import cases, draw_choice, draw_float, draw_int
+
+
+# ---------------------------------------------------------------------------
+# Eq. 9-12 ordering + Eq. 2 budget (property sweeps)
+# ---------------------------------------------------------------------------
+
+
+def test_tco_ordering_random_placements():
+    ts = default_tierset(2048)
+    for i, rng in cases(40):
+        n = draw_int(rng, 1, 512)
+        region_bytes = draw_int(rng, 1, 64) * 4096
+        placement = rng.integers(0, ts.n_tiers + 1, size=n)
+        ratios = None
+        if draw_int(rng, 0, 1):
+            # Measured compressibility >= 1.0: media never inflates data.
+            ratios = [draw_float(rng, 1.0, 40.0) for _ in range(ts.n_tiers)]
+        mn = tco.tco_min(ts, n, region_bytes, ratios)
+        mx = tco.tco_max(n, region_bytes)
+        nt = tco.tco_nt(ts, placement, region_bytes, ratios)
+        assert mn <= nt + 1e-9, (i, mn, nt)
+        assert nt <= mx + 1e-9, (i, nt, mx)
+        s = tco.savings_pct(ts, placement, region_bytes, ratios)
+        assert -1e-9 <= s <= 100.0 + 1e-9, (i, s)
+
+
+def test_budget_monotone_in_alpha():
+    ts = default_tierset(2048)
+    for i, rng in cases(25):
+        n = draw_int(rng, 1, 256)
+        region_bytes = draw_int(rng, 1, 64) * 4096
+        alphas = sorted(draw_float(rng, 0.0, 1.0) for _ in range(4))
+        budgets = [tco.budget(ts, n, region_bytes, a) for a in alphas]
+        assert all(b0 <= b1 + 1e-9 for b0, b1 in zip(budgets, budgets[1:])), (
+            i, alphas, budgets,
+        )
+        assert abs(budgets[0] - tco.budget(ts, n, region_bytes, alphas[0])) == 0.0
+    # Endpoints: alpha=0 -> tco_min, alpha=1 -> tco_max.
+    assert tco.budget(ts, 64, 4096, 0.0) == pytest.approx(tco.tco_min(ts, 64, 4096))
+    assert tco.budget(ts, 64, 4096, 1.0) == pytest.approx(tco.tco_max(64, 4096))
+
+
+def test_zero_region_and_empty_fleet_save_nothing():
+    ts = default_tierset(2048)
+    empty = np.zeros(0, dtype=np.int64)
+    assert tco.savings_pct(ts, empty, 4096) == 0.0
+    assert tco.fleet_tco_usd([]) == 0.0
+    assert tco.fleet_savings_pct([]) == 0.0
+    assert tco.fleet_savings_pct(iter([])) == 0.0  # generator, not just list
+
+
+# ---------------------------------------------------------------------------
+# ServerSpec cost model
+# ---------------------------------------------------------------------------
+
+
+def test_server_amortized_cost_components():
+    s = get_server("v5e-base")
+    purchase = s.purchase_usd()
+    years = 3.0
+    total = s.amortized_usd(years)
+    expected = (
+        purchase
+        + s.deployment_usd
+        + s.annual_maintenance_pct / 100.0 * purchase * years
+        + s.rack_usd_per_year * years
+        + s.power_kw * 24.0 * 365.0 * years * s.usd_per_kwh
+    )
+    assert total == pytest.approx(expected)
+    # Owning longer always costs more; purchase is a floor.
+    assert s.amortized_usd(5.0) > total > purchase
+    with pytest.raises(ValueError):
+        s.amortized_usd(0.0)
+
+
+def test_server_catalog_capacity_vectors():
+    base = get_server("v5e-base").capacity_vector()
+    assert base[MEM + "hbm"] == 16.0 * GIB
+    assert base[MEM + "host_dram_pcie"] == 512.0 * GIB
+    assert MEM + "cxl" not in base  # no CXL attach on the base spec
+    cxl = get_server("v5e-cxl").capacity_vector()
+    assert cxl[MEM + "cxl"] == 1024.0 * GIB and BW + "cxl" in cxl
+    with pytest.raises(KeyError):
+        get_server("nope")
+
+
+# ---------------------------------------------------------------------------
+# Bin-packing bounds
+# ---------------------------------------------------------------------------
+
+
+def test_pack_bounds_random_demands():
+    """FFD server count is sandwiched by the volume lower bound and the
+    one-server-per-shard upper bound, and oversized tenants are sharded."""
+    server = ServerSpec("t", hbm_gb=1.0, host_dram_gb=4.0,
+                        decode_accesses_per_window=1e6)
+    planner = CapacityPlanner(server, fleet_scale=1)
+    cap = server.capacity_vector()
+    for i, rng in cases(30):
+        demands = []
+        for _ in range(draw_int(rng, 1, 12)):
+            demands.append({
+                MEM + "hbm": draw_float(rng, 0.0, 2.5) * cap[MEM + "hbm"],
+                DECODE: draw_float(rng, 0.0, 1.5) * cap[DECODE],
+            })
+        servers = planner.pack(demands)
+        lower = max(
+            int(np.ceil(sum(d[k] for d in demands) / cap[k]))
+            for k in (MEM + "hbm", DECODE)
+        )
+        shards = sum(
+            max(int(np.ceil(max(v / cap[k] for k, v in d.items()))), 1)
+            for d in demands
+        )
+        assert lower <= servers <= shards, (i, lower, servers, shards)
+
+
+def test_pack_shards_oversized_tenant():
+    server = ServerSpec("t", hbm_gb=1.0, host_dram_gb=1.0)
+    planner = CapacityPlanner(server, fleet_scale=1)
+    # 3.5 servers' worth of HBM in one tenant -> 4 shards fit in 4 servers.
+    assert planner.pack([{MEM + "hbm": 3.5 * GIB}]) == 4
+    assert planner.pack([{MEM + "hbm": 0.25 * GIB} for _ in range(8)]) == 2
+    with pytest.raises(ValueError):
+        planner.pack([{BW + "nvme": 1.0}])  # no NVMe on this spec
+
+
+# ---------------------------------------------------------------------------
+# Frontier geometry
+# ---------------------------------------------------------------------------
+
+
+def _pt(name, savings, p99, usd=100.0):
+    return FrontierPoint(config=name, servers=1, fleet_usd=usd,
+                         memory_tco_usd=0.0, savings_pct=savings,
+                         p50_penalty_s=p99 / 2, p99_penalty_s=p99,
+                         perf_per_dollar=1.0)
+
+
+def test_pareto_frontier_properties():
+    for i, rng in cases(30):
+        pts = [
+            _pt(f"c{j}", draw_float(rng, 0.0, 80.0), draw_float(rng, 0.0, 10.0),
+                usd=draw_float(rng, 10.0, 100.0))
+            for j in range(draw_int(rng, 1, 16))
+        ]
+        front = CapacityPlanner.pareto_frontier(pts)
+        assert front, i
+        # Sorted by latency, savings strictly increasing.
+        for a, b in zip(front, front[1:]):
+            assert a.p99_penalty_s <= b.p99_penalty_s + 1e-12
+            assert b.savings_pct > a.savings_pct
+        # No dropped point dominates a frontier point.
+        for p in pts:
+            for f in front:
+                assert not (
+                    p.savings_pct > f.savings_pct + 1e-9
+                    and p.p99_penalty_s < f.p99_penalty_s - 1e-9
+                ), (i, p, f)
+
+
+def test_dominance_margin():
+    base = _pt("2t", savings=20.0, p99=1.0)
+    front = [_pt("a", 30.0, 0.5), _pt("b", 50.0, 2.0)]
+    # Only "a" is within the latency tolerance; margin is vs it.
+    m = CapacityPlanner.dominance_margin_pct(front, base)
+    assert m == pytest.approx(10.0)
+    assert CapacityPlanner.dominance_margin_pct([_pt("c", 90.0, 99.0)], base) == -np.inf
+
+
+# ---------------------------------------------------------------------------
+# End-to-end planner determinism (small sweep through the live simulator)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_sweep():
+    from repro.core import simulator
+    from repro.core.arbiter import TenantSpec
+
+    def workloads():
+        return [
+            simulator.skew_flip(n_regions=128, accesses_hot=50_000,
+                                accesses_cold=5_000, flip_window=4,
+                                hot_first=True, name="early"),
+            simulator.skew_flip(n_regions=128, accesses_hot=50_000,
+                                accesses_cold=5_000, flip_window=4,
+                                hot_first=False, name="late"),
+        ]
+
+    specs = [TenantSpec("early", sla_weight=1.0),
+             TenantSpec("late", sla_weight=1.0)]
+    planner = CapacityPlanner(get_server("v5e-base"), fleet_scale=64)
+    grid = [PlannerConfig("2t", fast_fraction=0.5),
+            PlannerConfig("6t", alpha=0.5, fast_fraction=0.5),
+            PlannerConfig("split", alpha=0.5, fast_fraction=0.5)]
+    return capacity.sweep_frontier(workloads, specs, planner, configs=grid,
+                                   windows=8, warmup_windows=2, seed=7)
+
+
+def test_planner_sweep_deterministic_and_well_formed():
+    a = _tiny_sweep()
+    b = _tiny_sweep()
+    assert capacity.frontier_json(a) == capacity.frontier_json(b)
+    assert [p["config"] for p in a["points"]] == [
+        "2t-f0.50", "6t-a0.50-f0.50", "split84-a0.50-f0.50",
+    ]
+    for p in a["points"]:
+        assert p["servers"] >= 1
+        assert p["fleet_usd"] > 0
+        assert p["p50_penalty_s"] <= p["p99_penalty_s"] + 1e-12
+    assert a["monotone"] is True
+    assert a["baseline_2t"]["config"] == "2t-f0.50"
+    # The frontier is a subset of the evaluated points.
+    names = {p["config"] for p in a["points"]}
+    assert all(p["config"] in names for p in a["frontier"])
+
+
+def test_fleet_report_consistent_with_planner_inputs():
+    cfg = PlannerConfig("6t", alpha=0.5, fast_fraction=0.5)
+    from repro.core import simulator
+    from repro.core.arbiter import TenantSpec
+
+    def workloads():
+        return [
+            simulator.skew_flip(n_regions=128, accesses_hot=50_000,
+                                accesses_cold=5_000, flip_window=4,
+                                hot_first=True, name="early"),
+            simulator.skew_flip(n_regions=128, accesses_hot=50_000,
+                                accesses_cold=5_000, flip_window=4,
+                                hot_first=False, name="late"),
+        ]
+
+    specs = [TenantSpec("early", sla_weight=1.0),
+             TenantSpec("late", sla_weight=1.0)]
+    report = capacity.simulate_and_report(cfg, workloads, specs, windows=8,
+                                          warmup_windows=2, seed=7)
+    assert report.windows == 6
+    assert report.tenant_names == ("early", "late")
+    assert report.per_window_penalty_s.shape == (6,)
+    for t in range(2):
+        assert report.tenant_footprint_bytes[t] == 128 * 2 * 1024 * 1024
+        resident = sum(report.tenant_bytes_by_device[t].values())
+        # Compressed tiers shrink bytes: resident <= uncompressed footprint.
+        assert 0 < resident <= report.tenant_footprint_bytes[t] + 1e-6
+        assert report.tenant_demand_accesses[t] > 0
+    assert 0.0 <= report.budget_feasible_frac <= 1.0
+    # The planner consumes it without error and prices a sane point.
+    planner = CapacityPlanner(get_server("v5e-base"), fleet_scale=64)
+    point = planner.evaluate(cfg.name, report)
+    assert point.servers >= 1 and 0.0 <= point.savings_pct <= 100.0
