@@ -31,6 +31,13 @@ Check semantics per guard:
     (``DOMINANCE_MARGIN_FLOOR_PCT`` savings points at no-worse latency).
     Frontier structure (config names + server counts + savings) is compared
     exactly against the committed baseline.
+  serving_slo — the frontend schedule runs in seeded virtual time, so the
+    contract is exact: two fresh runs must emit the identical summary
+    (deterministic replay), preemption-to-host-tier must actually fire
+    (>= 1 preemption AND >= 1 resume) while resumed requests re-prefill
+    EXACTLY zero tokens, interactive p99 TTFT must stay inside the SLO
+    ceiling (``serving_slo.TTFT_P99_CEILING``), and the completion /
+    refusal / preemption counts must match the committed baseline exactly.
   decode_fused — launch structure and operand assembly are deterministic,
     so the comparison is exact: the fused megakernel must issue EXACTLY one
     Pallas launch per decode step at every tier count, class-major operand
@@ -222,6 +229,50 @@ def _run_media(results: dict, baseline: dict) -> None:
     media_pipeline.run(Csv("media"), results)
 
 
+def check_serving_slo(current: dict, baseline: dict) -> List[str]:
+    errors = []
+    if not current.get("reproducible", False):
+        errors.append(
+            "frontend schedule is not deterministic (two fresh runs on the "
+            "same trace emitted different summaries)"
+        )
+    if current.get("re_prefill_tokens", -1) != 0:
+        errors.append(
+            f"resumed requests re-prefilled "
+            f"{current.get('re_prefill_tokens')} tokens (contract: resume "
+            f"restores parked host pages, never recomputes the prompt)"
+        )
+    if current.get("preemptions", 0) < 1 or current.get("resumes", 0) < 1:
+        errors.append(
+            f"preemption-to-host-tier did not fire "
+            f"(preemptions={current.get('preemptions')}, "
+            f"resumes={current.get('resumes')}) — the burst trace must "
+            f"exercise the preempt/resume path"
+        )
+    from benchmarks.serving_slo import TTFT_P99_CEILING
+
+    p99 = current.get("interactive", {}).get("ttft_p99")
+    if p99 is None or p99 > TTFT_P99_CEILING:
+        errors.append(
+            f"interactive p99 TTFT {p99} steps exceeds the SLO ceiling "
+            f"({TTFT_P99_CEILING})"
+        )
+    for key in ("completed", "refused", "preemptions", "resumes", "arrivals"):
+        if current.get(key) != baseline.get(key):
+            errors.append(
+                f"{key} changed vs baseline: "
+                f"{baseline.get(key)} -> {current.get(key)}"
+            )
+    for cls in ("batch", "interactive"):
+        cur_c = current.get(cls, {})
+        base_c = baseline.get(cls, {})
+        for key in ("completed", "ttft_p50", "ttft_p99", "tbt_p99"):
+            cv, bv = cur_c.get(key), base_c.get(key)
+            if cv is None or bv is None or abs(cv - bv) > 1e-6:
+                errors.append(f"{cls}.{key} changed vs baseline: {bv} -> {cv}")
+    return errors
+
+
 def _run_prefetch(results: dict, baseline: dict) -> None:
     from benchmarks import prefetch_hitrate
 
@@ -241,6 +292,12 @@ def _run_capacity(results: dict, baseline: dict) -> None:
     capacity_frontier.run(Csv("capacity"), results)
 
 
+def _run_serving_slo(results: dict, baseline: dict) -> None:
+    from benchmarks import serving_slo
+
+    serving_slo.run(Csv("serving_slo"), results)
+
+
 @dataclasses.dataclass(frozen=True)
 class Guard:
     name: str
@@ -256,6 +313,8 @@ GUARDS = (
     Guard("decode_fused", "decode_fused.json", _run_decode_fused, check_decode_fused),
     Guard("capacity_frontier", "capacity_frontier.json", _run_capacity,
           check_capacity_frontier),
+    Guard("serving_slo", "serving_slo.json", _run_serving_slo,
+          check_serving_slo),
 )
 
 

@@ -8,6 +8,7 @@
   fig12      tail latency (mean + p99)
   fig13      daemon tax
   serving    tiered-KV engine vs dense decode on a real model
+  serving_slo  SLA frontend: TTFT/TBT percentiles + preemption-to-host-tier
   decode_fused  single-launch fused attention vs per-pool loop (launches/step)
   migration  batched cohort executor vs per-page loop (dispatches + time)
   media      async media pipeline: decode/migration overlap + device charges
@@ -39,6 +40,7 @@ from benchmarks import (
     multitenant,
     prefetch_hitrate,
     roofline_report,
+    serving_slo,
     serving_tiered,
 )
 
@@ -50,6 +52,7 @@ TABLES = {
     "fig12": fig12_tail_latency.run,
     "fig13": fig13_daemon_tax.run,
     "serving": serving_tiered.run,
+    "serving_slo": serving_slo.run,
     "decode_fused": decode_fused.run,
     "migration": migration_batch.run,
     "media": media_pipeline.run,

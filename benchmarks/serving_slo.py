@@ -1,0 +1,139 @@
+"""Serving-frontend SLO benchmark: skew-flip + burst arrivals through the
+``ContinuousScheduler`` over two tiered-engine replicas.
+
+The trace is the placement benchmarks' skew-flip pattern expressed as
+arrival skew (tenant mix flips mid-trace) plus periodic interactive bursts
+pinned to the tight-TTFT class — the trigger for preemption-to-host-tier.
+Reports per-class TTFT/TBT p50/p99, queue delay, preemption rate and the
+zero-re-prefill contract.
+
+Rows: ``serving_slo/<class>`` per SLA class and a ``summary`` row. The
+committed baseline (``baselines/serving_slo.json``) is guarded by
+``baseline_guard.check_serving_slo``: the schedule must replay
+deterministically (two fresh runs emit the identical summary), resumed
+requests must re-prefill ZERO tokens while preemption actually fires, and
+interactive p99 TTFT must stay inside the SLO ceiling.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import Csv
+
+# Virtual-time knobs (one unit = one decode step).
+N_REPLICAS = 2
+BATCH_SLOTS = 2
+PAGE_TOKENS = 8
+MAX_SEQ = 96
+RECENT = 16
+WINDOW_STEPS = 16
+PREFILL_CHUNK = 8
+TRACE_STEPS = 60
+SEED = 3
+MAX_STEPS = 600
+# Interactive p99 TTFT ceiling in steps (the "p99 TTFT bounded" guard): 3x
+# the class SLO target — burst arrivals may queue one generation's worth.
+TTFT_P99_CEILING = 72.0
+
+
+def _engines():
+    import jax
+
+    from repro.configs import qwen1_5_4b
+    from repro.configs.base import TierScapeRunConfig
+    from repro.models.transformer import Model
+    from repro.serving.engine import TieredEngine
+
+    cfg = qwen1_5_4b.SMOKE
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engines = []
+    for _ in range(N_REPLICAS):
+        ts = TierScapeRunConfig(
+            enabled=True, policy="analytical", window_steps=WINDOW_STEPS
+        )
+        engines.append(TieredEngine(
+            model, params, batch_slots=BATCH_SLOTS, page_tokens=PAGE_TOKENS,
+            max_seq_len=MAX_SEQ, recent_window=RECENT, ts=ts,
+        ))
+    return cfg, engines
+
+
+def trace_config():
+    from repro.frontend import TraceConfig
+
+    return TraceConfig(
+        kind="burst", steps=TRACE_STEPS, rate=0.10, seed=SEED,
+        sla_mix=(0.85, 0.15), burst_every=24, burst_len=4, burst_mult=8.0,
+        burst_sla=1, prompt_len=(10, 18), new_tokens=(8, 14),
+        n_tenants=2, tenant_mix=(0.8, 0.2), tenant_flip_step=TRACE_STEPS // 2,
+    )
+
+
+def simulate() -> dict:
+    """One full frontend run; returns the canonical summary dict."""
+    from repro.frontend import ContinuousScheduler, generate
+
+    cfg, engines = _engines()
+    events = generate(trace_config())
+    sched = ContinuousScheduler(
+        engines, events, cfg.vocab_size, prefill_chunk_tokens=PREFILL_CHUNK
+    )
+    stats = sched.run(max_steps=MAX_STEPS)
+    summary = stats.summary()
+    summary["arrivals"] = len(events)
+    summary["demand_windows"] = len(stats.demand_windows)
+    return summary
+
+
+def run(csv: Csv, results: dict | None = None) -> None:
+    t0 = time.perf_counter()
+    cur = simulate()
+    # Deterministic-replay probe: a second fresh run (new engines, new
+    # scheduler, same trace config) must emit the identical summary.
+    rep = simulate()
+    wall = (time.perf_counter() - t0) * 1e6 / 2
+    cur["reproducible"] = (
+        json.dumps(cur, sort_keys=True) == json.dumps(rep, sort_keys=True)
+    )
+
+    for name in ("batch", "interactive"):
+        c = cur[name]
+        csv.add(
+            name,
+            wall,
+            f"completed={c['completed']};ttft_p50={c['ttft_p50']};"
+            f"ttft_p99={c['ttft_p99']};tbt_p99={c['tbt_p99']};"
+            f"slo_hit={c['ttft_slo_hit_rate']}",
+        )
+    csv.add(
+        "summary",
+        wall,
+        f"completed={cur['completed']};refused={cur['refused']};"
+        f"preemptions={cur['preemptions']};resumes={cur['resumes']};"
+        f"re_prefill_tokens={cur['re_prefill_tokens']};"
+        f"reproducible={cur['reproducible']}",
+    )
+    if results is not None:
+        results.update(cur)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="dump metrics for CI")
+    args = ap.parse_args()
+    csv = Csv("serving_slo")
+    results: dict = {}
+    run(csv, results)
+    csv.emit()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -14,6 +14,14 @@ frontier to experiments/capacity/<tag>.json:
     PYTHONPATH=src:. python scripts/hillclimb.py --capacity --tag sweep1 \
         [--server v5e-base] [--operating-years 3] [--fleet-scale 256] \
         [--windows 16] [--seed 0]
+
+Serving-frontend mode (``--serve``): sweep admission budget thresholds x
+SLA-class mixes through the ``ContinuousScheduler`` on the serving_slo
+burst trace (two tiered-engine replicas each run), print the
+TTFT/preemption table, and log the sweep to experiments/serve/<tag>.json:
+
+    PYTHONPATH=src:. python scripts/hillclimb.py --serve --tag sweep1 \
+        [--seed 3]
 """
 
 import os
@@ -68,6 +76,76 @@ def run_capacity(args) -> None:
     print(f"  -> {out_path}")
 
 
+def run_serve(args) -> None:
+    """Frontend mode: sweep admission thresholds x SLA mixes, log JSON."""
+    import dataclasses as dc
+
+    from benchmarks import serving_slo
+    from repro.frontend import (
+        AdmissionController, ContinuousScheduler, DEFAULT_CLASSES, generate,
+    )
+
+    budget_fracs = (0.6, 0.75, 0.9)       # batch-class admission share
+    interactive_shares = (0.15, 0.4)      # sla_mix tilt toward tight TTFT
+    rows = []
+    t0 = time.time()
+    for frac in budget_fracs:
+        classes = tuple(
+            dc.replace(c, budget_frac=frac) if c.name == "batch" else c
+            for c in DEFAULT_CLASSES
+        )
+        for share in interactive_shares:
+            tc = dc.replace(
+                serving_slo.trace_config(),
+                sla_mix=(1.0 - share, share), seed=args.seed,
+            )
+            cfg, engines = serving_slo._engines()
+            sched = ContinuousScheduler(
+                engines, generate(tc), cfg.vocab_size,
+                classes=classes,
+                admission=AdmissionController(classes),
+                prefill_chunk_tokens=serving_slo.PREFILL_CHUNK,
+            )
+            s = sched.run(max_steps=serving_slo.MAX_STEPS).summary()
+            rows.append({
+                "batch_budget_frac": frac,
+                "interactive_share": share,
+                "completed": s["completed"],
+                "refused": s["refused"],
+                "preemptions": s["preemptions"],
+                "re_prefill_tokens": s["re_prefill_tokens"],
+                "batch_ttft_p99": s["batch"]["ttft_p99"],
+                "interactive_ttft_p99": s["interactive"]["ttft_p99"],
+                "interactive_slo_hit": s["interactive"]["ttft_slo_hit_rate"],
+                "steps": s["steps"],
+            })
+    wall = time.time() - t0
+
+    print(f"[{args.tag}] serve sweep: {len(rows)} points ({wall:.1f}s)")
+    print("  budget_frac int_share done refus preempt int_ttft_p99 int_slo_hit")
+    for r in rows:
+        print(f"  {r['batch_budget_frac']:11.2f} {r['interactive_share']:9.2f} "
+              f"{r['completed']:4d} {r['refused']:5d} {r['preemptions']:7d} "
+              f"{r['interactive_ttft_p99']:12.2f} {r['interactive_slo_hit']:11.3f}")
+
+    res = {
+        "tag": args.tag,
+        "seed": args.seed,
+        "trace": "serving_slo burst",
+        "sweep": {
+            "batch_budget_frac": list(budget_fracs),
+            "interactive_share": list(interactive_shares),
+        },
+        "points": rows,
+    }
+    os.makedirs("experiments/serve", exist_ok=True)
+    out_path = f"experiments/serve/{args.tag}.json"
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"  -> {out_path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -76,6 +154,9 @@ def main():
     ap.add_argument("--capacity", action="store_true",
                     help="run the fleet capacity planner sweep instead of "
                          "lowering a cell")
+    ap.add_argument("--serve", action="store_true",
+                    help="sweep serving-frontend admission thresholds x SLA "
+                         "mixes instead of lowering a cell")
     ap.add_argument("--server", default="v5e-base",
                     help="ServerSpec catalog entry for --capacity")
     ap.add_argument("--operating-years", type=float, default=3.0)
@@ -95,8 +176,12 @@ def main():
     if args.capacity:
         run_capacity(args)
         return
+    if args.serve:
+        run_serve(args)
+        return
     if not args.arch or not args.shape:
-        ap.error("--arch and --shape are required unless --capacity is given")
+        ap.error("--arch and --shape are required unless --capacity or "
+                 "--serve is given")
 
     import repro.configs as configs
     from repro.configs.base import SHAPES, ParallelConfig

@@ -144,6 +144,21 @@ class BudgetArbiter:
         self.history: List[ArbiterWindowStats] = []
         self._window = 0
         self._spec_bytes: Dict[str, float] = {}
+        # Scheduler-measured decode demand (tokens decoded per tenant per
+        # frontend scheduling window). When any records exist they REPLACE
+        # the telemetry access sums as ``fleet_report``'s demand signal.
+        self._sched_demand: List[Dict[str, float]] = []
+
+    def record_scheduled_demand(self, demand: Dict[str, float]) -> None:
+        """Record one frontend scheduling window's measured decode demand
+        (tenant name -> tokens decoded). The capacity planner then prices
+        fleets against what the scheduler actually served, not a synthetic
+        per-window constant."""
+        known = {s.name for s in self.specs}
+        unknown = set(demand) - known
+        if unknown:
+            raise KeyError(f"unknown tenant(s) in scheduled demand: {sorted(unknown)}")
+        self._sched_demand.append({k: float(v) for k, v in demand.items()})
 
     def record_speculative_bytes(self, bytes_by_device: Dict[str, float]) -> None:
         """Bill mid-window speculative prefetch traffic against the shared
@@ -581,10 +596,23 @@ class BudgetArbiter:
         media = {d: b / n_w for d, b in media.items()}
 
         n_t = len(self.specs)
-        demand = tuple(
-            float(np.mean([ws.tenants[t].demand_accesses for ws in hist]))
-            for t in range(n_t)
-        )
+        if self._sched_demand:
+            # Scheduler-measured decode demand wins over the telemetry sum:
+            # mean tokens/window per tenant across the recorded frontend
+            # windows (same ``last_windows`` trim as the history).
+            sched = (
+                self._sched_demand[-last_windows:]
+                if last_windows else self._sched_demand
+            )
+            demand = tuple(
+                float(np.mean([w.get(s.name, 0.0) for w in sched]))
+                for s in self.specs
+            )
+        else:
+            demand = tuple(
+                float(np.mean([ws.tenants[t].demand_accesses for ws in hist]))
+                for t in range(n_t)
+            )
         penalty = tuple(
             float(np.mean([ws.tenants[t].weighted_penalty_s for ws in hist]))
             for t in range(n_t)

@@ -1,0 +1,40 @@
+"""Serving frontend: SLA-aware continuous batching over engine replicas.
+
+``traces`` generates deterministic virtual-time arrivals, ``admission``
+holds the SLA classes + token-budget controller, ``router`` load-balances
+replicas, and ``scheduler`` runs the lifecycle — including
+preemption-to-host-tier and zero-re-prefill resume.
+"""
+
+from repro.frontend.admission import (
+    ADMIT,
+    DEFAULT_CLASSES,
+    QUEUE,
+    REFUSE,
+    AdmissionController,
+    SLAClass,
+)
+from repro.frontend.router import ReplicaRouter
+from repro.frontend.scheduler import (
+    ContinuousScheduler,
+    FrontendStats,
+    RequestRecord,
+)
+from repro.frontend.traces import ArrivalEvent, TraceConfig, digest, generate
+
+__all__ = [
+    "ADMIT",
+    "QUEUE",
+    "REFUSE",
+    "AdmissionController",
+    "ArrivalEvent",
+    "ContinuousScheduler",
+    "DEFAULT_CLASSES",
+    "FrontendStats",
+    "ReplicaRouter",
+    "RequestRecord",
+    "SLAClass",
+    "TraceConfig",
+    "digest",
+    "generate",
+]

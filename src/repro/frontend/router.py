@@ -1,0 +1,49 @@
+"""Replica router: least-outstanding-tokens with session affinity.
+
+Sessions stick to the replica serving their live requests (their earlier
+turns' KV pages and prefetch history live there); otherwise the arrival
+lands on the replica with the fewest outstanding tokens, ties broken by the
+lowest replica index so routing is fully deterministic.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+from repro.frontend.traces import ArrivalEvent
+
+
+class ReplicaRouter:
+    def __init__(self, n_replicas: int, affinity: bool = True):
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.n = n_replicas
+        self.affinity = affinity
+        self._session_replica: Dict[int, int] = {}
+        self._session_live: Dict[int, int] = {}
+
+    def route(self, event: ArrivalEvent, outstanding: Sequence[int]) -> int:
+        """Pick the replica for one arrival given per-replica outstanding
+        token counts (binds the session; pair with ``note_done``)."""
+        if len(outstanding) != self.n:
+            raise ValueError("one outstanding count per replica")
+        s = event.session
+        if (
+            self.affinity
+            and s in self._session_replica
+            and self._session_live.get(s, 0) > 0
+        ):
+            r = self._session_replica[s]
+        else:
+            best = min(outstanding)
+            r = next(i for i, o in enumerate(outstanding) if o == best)
+            self._session_replica[s] = r
+        self._session_live[s] = self._session_live.get(s, 0) + 1
+        return r
+
+    def note_done(self, event: ArrivalEvent) -> None:
+        """A routed request finished (or was refused after routing): release
+        its affinity hold. The sticky binding survives until the session has
+        no live requests, then least-outstanding takes over again."""
+        s = event.session
+        self._session_live[s] = max(self._session_live.get(s, 0) - 1, 0)

@@ -1,4 +1,10 @@
-from repro.serving.engine import Request, TieredEngine
-from repro.serving.kv_cache import TieredKVCache
+from repro.serving.engine import PreemptedRequest, Request, TieredEngine
+from repro.serving.kv_cache import ParkedSlot, TieredKVCache
 
-__all__ = ["TieredEngine", "TieredKVCache", "Request"]
+__all__ = [
+    "TieredEngine",
+    "TieredKVCache",
+    "Request",
+    "PreemptedRequest",
+    "ParkedSlot",
+]

@@ -22,7 +22,14 @@ from repro.configs.base import ModelConfig, ParallelConfig, TierScapeRunConfig
 from repro.core.manager import ManagerConfig
 from repro.models.transformer import Model, _attn_layer_count
 from repro.runtime import serve as serve_rt
-from repro.serving.kv_cache import COLD, HOST4, HOST8, WARM, TieredKVCache
+from repro.serving.kv_cache import (
+    COLD,
+    HOST4,
+    HOST8,
+    WARM,
+    ParkedSlot,
+    TieredKVCache,
+)
 
 
 @dataclasses.dataclass
@@ -36,11 +43,32 @@ class Request:
 
 
 @dataclasses.dataclass
+class PreemptedRequest:
+    """A request evicted from its batch slot with its KV parked on the host
+    tier (plus SSM side-state for hybrid archs). ``TieredEngine.resume_into``
+    swaps it back in with zero re-prefilled tokens."""
+
+    request: Request
+    parked: ParkedSlot
+    ssm_conv: Optional[np.ndarray] = None
+    ssm_state: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
 class EngineStats:
     steps: int = 0
     windows: int = 0
     migrations: int = 0
     completed: int = 0
+    # Frontend preemption-to-host-tier accounting: slots vacated for a
+    # higher-SLA arrival, requests swapped back in from parked host pages,
+    # pages restored by those swap-ins, and prompt tokens re-prefilled for
+    # an already-started request (the frontend contract keeps this at 0 —
+    # resume restores pages instead of recomputing them).
+    preemptions: int = 0
+    resumes: int = 0
+    resumed_pages: int = 0
+    re_prefill_tokens: int = 0
     # Decode steps retired while a migration cohort was in flight (async
     # media pipeline) — the numerator of overlap efficiency.
     overlapped_steps: int = 0
@@ -137,26 +165,93 @@ class TieredEngine:
         self.queue: List[Request] = []
         self.stats = EngineStats()
         self._steps_in_window = 0
+        # Monotonic request-id source: rids must stay unique for the whole
+        # engine lifetime (frontend bookkeeping keys on them), so they can
+        # never derive from the queue length.
+        self._next_rid = 0
 
     # ----------------------------------------------------------------- API
+    def make_request(self, prompt: np.ndarray, max_new_tokens: int,
+                     tenant: int = 0) -> Request:
+        """Mint a request with a unique monotonic rid WITHOUT enqueueing it
+        (the frontend scheduler owns its own queue + slot placement)."""
+        req = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, tenant=tenant)
+        self._next_rid += 1
+        return req
+
     def submit(self, prompt: np.ndarray, max_new_tokens: int, tenant: int = 0) -> Request:
         # recent_len/total_len are per-slot vectors in the tiered state, so
         # slots hold unequal prompt lengths and decode at their own
         # positions.
-        req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens, tenant=tenant)
+        req = self.make_request(prompt, max_new_tokens, tenant)
         self.queue.append(req)
         return req
 
+    def try_submit(self, prompt: np.ndarray, max_new_tokens: int,
+                   tenant: int = 0, budget_frac: float = 1.0) -> Optional[Request]:
+        """Token-budget admission: enqueue only if the projected footprint
+        (prompt + full generation) fits inside ``budget_frac`` of the device
+        pools' token capacity alongside everything already outstanding.
+        Returns None (refused) instead of overcommitting toward OOM."""
+        projected = int(len(prompt)) + int(max_new_tokens)
+        if self.outstanding_tokens() + projected > budget_frac * self.token_capacity():
+            return None
+        return self.submit(prompt, max_new_tokens, tenant)
+
+    # ------------------------------------------------- headroom accounting
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def token_capacity(self) -> int:
+        """Sequence-token capacity of the device pools plus the dense recent
+        windows (a class row stores one page of ONE layer, so pool rows
+        divide by the attention layer count)."""
+        rows = self._alloc_capacity("warm") + self._alloc_capacity("cold")
+        return (rows // self.la) * self.pt + self.bs * self.recent_window
+
+    def _alloc_capacity(self, pool: str) -> int:
+        return int(self.cache._alloc[pool].capacity)
+
+    def device_headroom_tokens(self) -> int:
+        """Live device-tier headroom in sequence tokens (free class rows
+        across both pools, layer-divided) — the admission controller's
+        immediate-placement signal."""
+        free = len(self.cache._free_warm) + len(self.cache._free_cold)
+        return (free // self.la) * self.pt
+
+    def outstanding_tokens(self) -> int:
+        """Tokens the engine is already committed to: resident context plus
+        the ungenerated remainder of active requests, plus full projected
+        footprints of everything still queued."""
+        out = 0
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                out += int(self.slot_len[i])
+                out += max(req.max_new_tokens - len(req.out_tokens), 0)
+        for req in self.queue:
+            out += len(req.prompt) + req.max_new_tokens
+        return out
+
+    # ------------------------------------------------------------ stepping
     def run(self, max_steps: int = 10_000) -> EngineStats:
         while (any(s is not None for s in self.slots) or self.queue) and self.stats.steps < max_steps:
             self._fill_slots()
-            self._decode_step()
-            self._steps_in_window += 1
-            if self._steps_in_window >= self.ts.window_steps:
-                self._end_window()
-        # Traffic ended with cohorts still in flight: finish them (already
-        # counted in stats.migrations when their window queued them).
+            self.step()
+        return self.finish()
+
+    def step(self) -> None:
+        """One externally-drivable engine step: decode every active slot,
+        then advance the profile window. The frontend scheduler calls this
+        directly, interleaving placement/preemption between steps."""
+        self._decode_step()
+        self._steps_in_window += 1
+        if self._steps_in_window >= self.ts.window_steps:
+            self._end_window()
+
+    def finish(self) -> EngineStats:
+        """Drain in-flight cohorts and finalize the stats snapshot (idempotent
+        — callable again after more stepping)."""
         t0 = time.perf_counter()
         self.cache.drain_migrations()
         self.stats.daemon_s += time.perf_counter() - t0
@@ -170,20 +265,73 @@ class TieredEngine:
         self.stats.attn_launches = self.cache.attn_launches
         return self.stats
 
+    # ----------------------------------------------- frontend slot control
+    def start_request(self, slot: int, req: Request) -> None:
+        """Place ``req`` into a specific FREE slot and prefill it — the
+        frontend's admission-controlled alternative to the internal queue
+        (``_fill_slots``) path."""
+        if self.slots[slot] is not None:
+            raise ValueError(f"start_request: slot {slot} is occupied")
+        self.cache.set_slot_tenant(slot, req.tenant)
+        self._prefill(slot, req)
+        self.slots[slot] = req
+
+    def preempt_slot(self, slot: int) -> PreemptedRequest:
+        """Preemption-to-host-tier: demote the victim slot's device pages to
+        their same-codec host tiers through the media pipeline (billed like
+        normal demotions), park the payloads + recent window, and vacate the
+        slot. The request keeps its pages — ``resume_into`` restores them
+        with zero re-prefilled tokens."""
+        req = self.slots[slot]
+        if req is None or req.done:
+            raise ValueError(f"preempt_slot: slot {slot} has no active request")
+        levels = self.cache.demote_slot_to_host(slot)
+        parked = self.cache.park_slot(slot, restore_levels=levels)
+        pre = PreemptedRequest(request=req, parked=parked)
+        if self.cfg.family == "hybrid":
+            conv, sst = self.ssm_state
+            pre.ssm_conv = np.asarray(conv[:, slot])
+            pre.ssm_state = np.asarray(sst[:, slot])
+        self.slots[slot] = None
+        self.slot_len[slot] = 0
+        self.stats.preemptions += 1
+        return pre
+
+    def resume_into(self, slot: int, pre: PreemptedRequest) -> Request:
+        """Swap a preempted request back into a free slot: parked host pages
+        re-register and the previously device-resident ones ride swap-in
+        cohorts home. No prompt token is ever recomputed."""
+        if self.slots[slot] is not None:
+            raise ValueError(f"resume_into: slot {slot} is occupied")
+        restored = self.cache.restore_slot(slot, pre.parked)
+        if self.cfg.family == "hybrid" and pre.ssm_conv is not None:
+            conv, sst = self.ssm_state
+            self.ssm_state = (
+                conv.at[:, slot].set(jnp.asarray(pre.ssm_conv).astype(conv.dtype)),
+                sst.at[:, slot].set(jnp.asarray(pre.ssm_state).astype(sst.dtype)),
+            )
+        self.slots[slot] = pre.request
+        self.slot_len[slot] = pre.parked.total_len
+        self.stats.resumes += 1
+        self.stats.resumed_pages += restored
+        return pre.request
+
     # ------------------------------------------------------------ internals
     def _fill_slots(self):
         for i in range(self.bs):
             if self.slots[i] is None and self.queue:
                 req = self.queue.pop(0)
-                self.cache.set_slot_tenant(i, req.tenant)
-                self._prefill(i, req)
-                self.slots[i] = req
+                self.start_request(i, req)
 
     def _prefill(self, slot: int, req: Request):
         """Dense prefill, then page the prompt KV into the warm tier
         (batched: one quant dispatch for all layers x pages)."""
         cfg = self.cfg
         s = len(req.prompt)
+        if req.out_tokens:
+            # An already-started request is being prefilled again — the
+            # wasted recompute the preemption path exists to avoid.
+            self.stats.re_prefill_tokens += s
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         state = self.model.init_cache(1, max(s + 1, self.pt))
         logits, state = self.model.prefill(self.params, batch, state)

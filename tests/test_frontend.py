@@ -1,0 +1,379 @@
+"""Serving frontend: traces, admission, routing, continuous scheduling, and
+the preemption-to-host-tier contract.
+
+The two headline invariants (ISSUE acceptance criteria):
+
+  * a preempted-then-resumed request produces BIT-IDENTICAL output tokens
+    to an uninterrupted run, with zero re-prefilled tokens — parked pages
+    demote to their same-codec host tier (raw media copy, no transcode) and
+    swap back in bit-exactly, even into a DIFFERENT batch slot;
+  * the preemption demotion bills through exactly the same media-queue /
+    kernel-dispatch accounting as a plain demotion cohort of the same pages.
+
+Plus: scheduler-measured decode demand flows through
+``BudgetArbiter.record_scheduled_demand`` into ``fleet_report()`` and the
+``CapacityPlanner`` prices against it (not the synthetic telemetry sum).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.configs as configs
+from repro.configs.base import TierScapeRunConfig
+from repro.frontend import (
+    ADMIT,
+    QUEUE,
+    REFUSE,
+    AdmissionController,
+    ContinuousScheduler,
+    DEFAULT_CLASSES,
+    ReplicaRouter,
+    TraceConfig,
+    digest,
+    generate,
+)
+from repro.frontend.traces import ArrivalEvent, check as trace_check
+from repro.models import Model
+from repro.serving import TieredEngine
+from repro.serving.kv_cache import HOST4, HOST8, WARM, COLD
+
+
+# ---------------------------------------------------------------------------
+# Traces (pure numpy)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_determinism_all_kinds():
+    assert trace_check(seeds=(0, 5)) == 0
+
+
+def test_trace_burst_pins_sla_and_raises_rate():
+    cfg = TraceConfig(kind="burst", steps=96, rate=0.2, seed=1,
+                      burst_every=32, burst_len=8, burst_mult=10.0, burst_sla=1)
+    ev = generate(cfg)
+    in_burst = [e for e in ev if (e.step % 32) < 8]
+    out_burst = [e for e in ev if (e.step % 32) >= 8]
+    assert len(in_burst) > len(out_burst)  # 10x rate over 1/4 of the steps
+    assert all(e.sla == 1 for e in in_burst)
+
+
+def test_trace_tenant_skew_flip():
+    cfg = TraceConfig(kind="poisson", steps=200, rate=1.0, seed=2,
+                      tenant_mix=(0.9, 0.1), tenant_flip_step=100)
+    ev = generate(cfg)
+    early = [e.tenant for e in ev if e.step < 100]
+    late = [e.tenant for e in ev if e.step >= 100]
+    assert np.mean(early) < 0.3 and np.mean(late) > 0.7
+
+
+def test_trace_prompt_materialization_is_stable():
+    cfg = TraceConfig(steps=16, rate=1.0, seed=4)
+    a, b = generate(cfg), generate(cfg)
+    assert digest(a) == digest(b)
+    for x, y in zip(a[:5], b[:5]):
+        assert np.array_equal(x.prompt(256), y.prompt(256))
+        assert x.prompt(256).min() >= 1 and x.prompt(256).max() < 256
+
+
+# ---------------------------------------------------------------------------
+# Admission + router (pure)
+# ---------------------------------------------------------------------------
+
+
+def _event(sla=0, session=0, prompt=16, gen=8, seq=0):
+    return ArrivalEvent(step=0, seq=seq, tenant=0, sla=sla, session=session,
+                        prompt_len=prompt, max_new_tokens=gen, prompt_seed=1)
+
+
+def test_admission_budget_and_queue_caps():
+    ctl = AdmissionController(DEFAULT_CLASSES)
+    kw = dict(capacity_tokens=1000, outstanding_tokens=0,
+              headroom_tokens=1000, free_slot=True, queued_of_class=0)
+    assert ctl.decide(_event(sla=0), **kw) == ADMIT
+    # Over the batch class's 0.75 budget share -> refuse (load shed).
+    assert ctl.decide(
+        _event(sla=0), **{**kw, "outstanding_tokens": 740}) == REFUSE
+    # Interactive (budget_frac=1.0) still admits at the same fill.
+    assert ctl.decide(
+        _event(sla=1), **{**kw, "outstanding_tokens": 740}) == ADMIT
+    # Queue cap refuses regardless of budget.
+    assert ctl.decide(
+        _event(sla=1), **{**kw, "queued_of_class": 16}) == REFUSE
+    # Under budget but no slot / no device headroom -> queue (backpressure).
+    assert ctl.decide(_event(sla=0), **{**kw, "free_slot": False}) == QUEUE
+    assert ctl.decide(_event(sla=0), **{**kw, "headroom_tokens": 3}) == QUEUE
+
+
+def test_router_least_outstanding_with_session_affinity():
+    r = ReplicaRouter(3)
+    assert r.route(_event(session=7), [100, 40, 60]) == 1
+    # Same session while live -> sticky, even though replica 2 is lighter.
+    assert r.route(_event(session=7), [100, 90, 10]) == 1
+    # Different session -> least outstanding; ties break to lowest index.
+    assert r.route(_event(session=8), [50, 90, 50]) == 0
+    # Session 7 drains fully -> affinity releases.
+    r.note_done(_event(session=7))
+    r.note_done(_event(session=7))
+    assert r.route(_event(session=7), [100, 90, 10]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine hooks (smoke model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.get_smoke("qwen1_5_4b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(smoke_model, batch_slots=2, window_steps=10_000, **kw):
+    cfg, model, params = smoke_model
+    ts = TierScapeRunConfig(enabled=True, policy="analytical",
+                            window_steps=window_steps)
+    return TieredEngine(model, params, batch_slots=batch_slots, page_tokens=8,
+                        max_seq_len=128, recent_window=16, ts=ts, **kw)
+
+
+def test_request_rids_are_monotonic_across_queue_churn(smoke_model):
+    """The satellite fix: rid=len(queue) collided once requests left the
+    queue; rids must be unique for the engine's lifetime."""
+    eng = _engine(smoke_model)
+    rng = np.random.default_rng(0)
+    p = rng.integers(1, 256, 8).astype(np.int32)
+    a = eng.submit(p, 4)
+    b = eng.submit(p, 4)
+    eng.queue.clear()  # requests left the queue (as slot placement does)
+    c = eng.submit(p, 4)
+    d = eng.make_request(p, 4)
+    rids = [a.rid, b.rid, c.rid, d.rid]
+    assert rids == [0, 1, 2, 3]
+    assert len(set(rids)) == 4
+
+
+def test_preempt_resume_bit_identical_zero_reprefill(smoke_model):
+    """Preempted-then-resumed (into a DIFFERENT slot, with another request
+    churning the pools in between) == uninterrupted run, token for token;
+    zero re-prefilled tokens; pages restored from the host tier."""
+    cfg, _, _ = smoke_model
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, cfg.vocab_size, 24).astype(np.int32)
+    other_prompt = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+
+    ea = _engine(smoke_model)
+    ra = ea.make_request(prompt, 20)
+    ea.start_request(0, ra)
+    while not ra.done:
+        ea.step()
+
+    eb = _engine(smoke_model)
+    rb = eb.make_request(prompt, 20)
+    eb.start_request(0, rb)
+    for _ in range(5):
+        eb.step()
+    pre = eb.preempt_slot(0)
+    # Parked pages live on host tiers only, with device restore targets.
+    assert len(pre.parked.pages) > 0
+    assert all(pg.host_level in (HOST8, HOST4) for pg in pre.parked.pages)
+    assert any(pg.restore_level in (WARM, COLD) for pg in pre.parked.pages)
+    # Churn the pools while parked: another request uses the vacated slot.
+    other = eb.make_request(other_prompt, 6)
+    eb.start_request(0, other)
+    while not other.done:
+        eb.step()
+    eb.resume_into(1, pre)  # cross-slot restore
+    while not rb.done:
+        eb.step()
+    stats = eb.finish()
+
+    assert rb.out_tokens == ra.out_tokens
+    assert stats.re_prefill_tokens == 0
+    assert stats.preemptions == 1 and stats.resumes == 1
+    assert stats.resumed_pages == len(pre.parked.pages)
+
+
+def test_preemption_bills_like_plain_demotion(smoke_model):
+    """``demote_slot_to_host`` must charge the media queues and the kernel
+    dispatch counter exactly like a plain pipeline demotion of the same
+    pages to the same destinations."""
+    cfg, _, _ = smoke_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, cfg.vocab_size, 32).astype(np.int32)
+
+    def billing(cache):
+        return {
+            name: (q.bytes_total, q.ops, round(q.busy_s, 12))
+            for name, q in cache.media_queues.items()
+        }
+
+    engines, snaps = [], []
+    for mode in ("plain", "preempt"):
+        eng = _engine(smoke_model)
+        req = eng.make_request(prompt, 4)
+        eng.start_request(0, req)
+        cache = eng.cache
+        before = billing(cache)
+        disp_before = cache.kernel_dispatches
+        if mode == "plain":
+            rids = cache.slot_rids(0)
+            dev = rids[np.isin(cache.physical[rids], (WARM, COLD))]
+            bits = np.array([cache._bits[int(s)] for s in cache.physical[dev]])
+            dsts = np.where(bits == 8, HOST8, HOST4).astype(np.int64)
+            cache.pipeline.submit(cache.plan_cohorts(dev, dsts))
+            cache.pipeline.drain()
+        else:
+            levels = eng.cache.demote_slot_to_host(0)
+            assert levels and all(v in (WARM, COLD) for v in levels.values())
+        after = billing(cache)
+        delta = {
+            n: tuple(np.subtract(after[n], before[n])) for n in after
+        }
+        snaps.append((delta, cache.kernel_dispatches - disp_before))
+        engines.append(eng)
+
+    assert snaps[0] == snaps[1]
+    # Same-codec demotion: raw copy, real bytes on the host swap device.
+    moved_bytes = snaps[1][0]["host_dram_pcie"][0]
+    assert moved_bytes > 0
+    # Pages ended up host-resident in both runs, identically placed.
+    a, b = engines[0].cache, engines[1].cache
+    assert np.array_equal(a.physical, b.physical)
+    assert bool(np.isin(a.physical[a.slot_rids(0)], (HOST8, HOST4)).all())
+
+
+def test_park_restore_table_invariants(smoke_model):
+    """After park the slot is empty everywhere (tables, allocators, host
+    store); after restore the placements equal the pre-preemption state."""
+    cfg, _, _ = smoke_model
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab_size, 40).astype(np.int32)
+    eng = _engine(smoke_model)
+    req = eng.make_request(prompt, 4)
+    eng.start_request(0, req)
+    cache = eng.cache
+    rids_before = cache.slot_rids(0)
+    phys_before = cache.physical[rids_before].copy()
+    assert rids_before.size > 0
+
+    pre = eng.preempt_slot(0)
+    assert cache.slot_rids(0).size == 0
+    assert not any(
+        int(r) in cache.host_pages for r in rids_before
+    )
+    st = cache.state
+    assert int(np.asarray(st.warm_n)[:, 0].sum()) == 0
+    assert int(np.asarray(st.cold_n)[:, 0].sum()) == 0
+    assert int(np.asarray(st.host_n)[:, 0].sum()) == 0
+    assert int(st.recent_len[0]) == 0 and int(st.total_len[0]) == 0
+
+    eng.resume_into(0, pre)
+    rids_after = cache.slot_rids(0)
+    assert np.array_equal(rids_after, rids_before)
+    assert np.array_equal(cache.physical[rids_after], phys_before)
+    st = cache.state
+    assert int(st.total_len[0]) == int(eng.slot_len[0])
+
+
+def test_try_submit_refuses_over_budget(smoke_model):
+    eng = _engine(smoke_model)
+    cap = eng.token_capacity()
+    assert cap > 0
+    ok = eng.try_submit(np.ones(8, np.int32), 8)
+    assert ok is not None
+    huge = eng.try_submit(np.ones(16, np.int32), cap)
+    assert huge is None
+    # The refused request never entered the queue.
+    assert len(eng.queue) == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_burst_preempts_and_resumes(smoke_model):
+    cfg, _, _ = smoke_model
+    tc = TraceConfig(kind="burst", steps=60, rate=0.10, seed=3,
+                     sla_mix=(0.85, 0.15), burst_every=24, burst_len=4,
+                     burst_mult=8.0, burst_sla=1, prompt_len=(10, 18),
+                     new_tokens=(8, 14), n_tenants=2, tenant_mix=(0.8, 0.2),
+                     tenant_flip_step=30)
+    events = generate(tc)
+    engines = [_engine(smoke_model, window_steps=16) for _ in range(2)]
+    sched = ContinuousScheduler(engines, events, cfg.vocab_size,
+                                prefill_chunk_tokens=8)
+    stats = sched.run(max_steps=600)
+
+    assert stats.preemptions >= 1 and stats.resumes >= 1
+    assert stats.re_prefill_tokens == 0
+    assert stats.resumed_pages >= 1
+    assert len(stats.done()) + stats.refused == len(events)
+    # Every completed request got exactly its requested tokens, one per
+    # virtual step (TBT >= 1; preemption gaps stretch but never duplicate).
+    for rec in stats.done():
+        assert len(rec.token_steps) == rec.event.max_new_tokens
+        assert (rec.tbt() >= 1).all()
+        # Chunked prefill: first token lands exactly chunks-1 steps after
+        # placement (one chunk per step, interleaved with decode).
+        chunks = max(math.ceil(rec.event.prompt_len / 8), 1)
+        assert rec.first_token_step - rec.place_step == chunks - 1
+    # Demand windows account for every decoded token.
+    assert sum(sum(w.values()) for w in stats.demand_windows) == stats.decoded_tokens
+    s = stats.summary()
+    assert s["interactive"]["completed"] >= 1
+    assert s["batch"]["completed"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduled demand -> arbiter -> planner
+# ---------------------------------------------------------------------------
+
+
+def test_scheduled_demand_flows_to_fleet_report_and_planner():
+    from repro.core import capacity, simulator
+    from repro.core.arbiter import TenantSpec
+    from repro.frontend.scheduler import FrontendStats
+
+    def workloads():
+        return [
+            simulator.skew_flip(n_regions=128, accesses_hot=50_000,
+                                accesses_cold=5_000, flip_window=4,
+                                hot_first=True, name="early"),
+            simulator.skew_flip(n_regions=128, accesses_hot=50_000,
+                                accesses_cold=5_000, flip_window=4,
+                                hot_first=False, name="late"),
+        ]
+
+    specs = [TenantSpec("early", sla_weight=1.0),
+             TenantSpec("late", sla_weight=1.0)]
+    cfg = capacity.PlannerConfig("6t", alpha=0.5, fast_fraction=0.5)
+    arb = capacity.build_arbiter(cfg, specs, 128)
+    simulator.simulate_multitenant(workloads(), arb, windows=8,
+                                   warmup_windows=2, seed=7, prefetch=False)
+    synthetic = arb.fleet_report(last_windows=6).tenant_demand_accesses
+
+    # Scheduler-measured decode demand (as FrontendStats would feed it).
+    stats = FrontendStats(records=[], classes=DEFAULT_CLASSES)
+    stats.demand_windows = [{0: 120.0, 1: 30.0}, {0: 80.0, 1: 50.0},
+                            {0: 100.0}]
+    fed = stats.feed_arbiter(arb, ("early", "late"))
+    assert fed == 3
+
+    report = arb.fleet_report(last_windows=6)
+    assert report.tenant_demand_accesses == (100.0, 80.0 / 3)
+    assert report.tenant_demand_accesses != synthetic
+
+    planner = capacity.CapacityPlanner(capacity.get_server("v5e-base"),
+                                       fleet_scale=64)
+    point = planner.evaluate(cfg.name, report)
+    assert point.servers >= 1 and 0.0 <= point.savings_pct <= 100.0
+
+    with pytest.raises(KeyError):
+        arb.record_scheduled_demand({"nobody": 1.0})
