@@ -31,6 +31,14 @@ Check semantics per guard:
     (``DOMINANCE_MARGIN_FLOOR_PCT`` savings points at no-worse latency).
     Frontier structure (config names + server counts + savings) is compared
     exactly against the committed baseline.
+  cxl_frontier — the hardware-compressed CXL sweep inherits the
+    capacity_frontier determinism contract (bit-reproducible two-pass JSON,
+    monotone frontier, exact frontier structure vs the committed baseline)
+    and adds the expander's own: at least one cxl-backed point must sit on
+    the frontier AND dominate the committed PR-7 capacity frontier on >= 1
+    operating point, measured line ratios must stay data-dependent
+    (compressible > incompressible), and a cxl_hw-backed KV cache must land
+    bit-identical placements under serial and async migration.
   serving_slo — the frontend schedule runs in seeded virtual time, so the
     contract is exact: two fresh runs must emit the identical summary
     (deterministic replay), preemption-to-host-tier must actually fire
@@ -190,6 +198,36 @@ def check_capacity_frontier(current: dict, baseline: dict) -> List[str]:
     return errors
 
 
+def check_cxl_frontier(current: dict, baseline: dict) -> List[str]:
+    from benchmarks import cxl_frontier
+
+    # The benchmark's own contracts (reproducibility, monotonicity, 2T +
+    # PR-7 dominance, placement identity, ratio data-dependence)...
+    errors = cxl_frontier.check(current)
+    # ...plus exact frontier structure vs the committed baseline.
+    cur_front = current.get("frontier", [])
+    base_front = baseline.get("frontier", [])
+    if [p["config"] for p in cur_front] != [p["config"] for p in base_front]:
+        errors.append(
+            f"frontier configs changed: "
+            f"{[p['config'] for p in base_front]} -> "
+            f"{[p['config'] for p in cur_front]}"
+        )
+    else:
+        for cur, base in zip(cur_front, base_front):
+            if cur["servers"] != base["servers"]:
+                errors.append(
+                    f"{cur['config']}: servers changed "
+                    f"{base['servers']} -> {cur['servers']}"
+                )
+            if abs(cur["savings_pct"] - base["savings_pct"]) > 1e-6:
+                errors.append(
+                    f"{cur['config']}: savings changed "
+                    f"{base['savings_pct']} -> {cur['savings_pct']}"
+                )
+    return errors
+
+
 def check_prefetch(current: dict, baseline: dict) -> List[str]:
     errors = []
     cur = current.get("prefetch")
@@ -298,6 +336,12 @@ def _run_serving_slo(results: dict, baseline: dict) -> None:
     serving_slo.run(Csv("serving_slo"), results)
 
 
+def _run_cxl(results: dict, baseline: dict) -> None:
+    from benchmarks import cxl_frontier
+
+    cxl_frontier.run(Csv("cxl"), results)
+
+
 @dataclasses.dataclass(frozen=True)
 class Guard:
     name: str
@@ -313,6 +357,7 @@ GUARDS = (
     Guard("decode_fused", "decode_fused.json", _run_decode_fused, check_decode_fused),
     Guard("capacity_frontier", "capacity_frontier.json", _run_capacity,
           check_capacity_frontier),
+    Guard("cxl_frontier", "cxl_frontier.json", _run_cxl, check_cxl_frontier),
     Guard("serving_slo", "serving_slo.json", _run_serving_slo,
           check_serving_slo),
 )

@@ -4,6 +4,7 @@
   fig3       tier characterization (latency/ratio/cost/error x 2 datasets)
   fig8       2T vs 6T-WF per workload + planner-driven frontier points
   capacity   fleet capacity planner: perf-per-dollar frontier (skew-flip mix)
+  cxl        hardware-compressed CXL tier frontier (compressible vs not mix)
   fig9_10_11 placement distributions + TCO timeline
   fig12      tail latency (mean + p99)
   fig13      daemon tax
@@ -29,6 +30,7 @@ import argparse
 from benchmarks.common import Csv
 from benchmarks import (
     capacity_frontier,
+    cxl_frontier,
     decode_fused,
     fig3_characterization,
     fig8_frontier,
@@ -48,6 +50,7 @@ TABLES = {
     "fig3": fig3_characterization.run,
     "fig8": fig8_frontier.run,
     "capacity": capacity_frontier.run,
+    "cxl": cxl_frontier.run,
     "fig9_10_11": fig9_placement.run,
     "fig12": fig12_tail_latency.run,
     "fig13": fig13_daemon_tax.run,

@@ -9,7 +9,6 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
 
 from repro.core import simulator, tiers
 from repro.core.manager import make_manager

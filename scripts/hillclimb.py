@@ -30,7 +30,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 import argparse
 import json
 import re
-import sys
 import time
 
 
@@ -184,7 +183,7 @@ def main():
                  "--serve is given")
 
     import repro.configs as configs
-    from repro.configs.base import SHAPES, ParallelConfig
+    from repro.configs.base import SHAPES
     from repro.launch import cells as cm
     from repro.launch.mesh import make_production_mesh
     from repro.roofline import analysis as ra

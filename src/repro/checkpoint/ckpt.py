@@ -21,7 +21,6 @@ multi-host split hooks are the `host_leaves` argument).
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

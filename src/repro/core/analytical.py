@@ -25,7 +25,7 @@ on the daemon core even for 10^5 regions.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

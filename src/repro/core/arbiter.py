@@ -402,8 +402,14 @@ class BudgetArbiter:
             names = np.array(m._dev_names)
             move_read_dev.append(names[src])
             move_write_dev.append(names[dst])
-            move_read_b.append(m._stored_bytes[src].astype(np.float64))
-            move_write_b.append(m._stored_bytes[dst].astype(np.float64))
+            # Bill *wire* bytes: devices with an inline hardware compressor
+            # move nominal/ratio bytes for this tenant's data (the same
+            # accounting the manager's _media_charges applies; the ratio
+            # moves only at window boundaries, so replay bills identically).
+            r_ratio = np.array([m.media_ratio.get(n, 1.0) for n in names[src]])
+            w_ratio = np.array([m.media_ratio.get(n, 1.0) for n in names[dst]])
+            move_read_b.append(m._stored_bytes[src].astype(np.float64) / r_ratio)
+            move_write_b.append(m._stored_bytes[dst].astype(np.float64) / w_ratio)
         if not move_t:
             return news, 0
 
@@ -584,7 +590,11 @@ class BudgetArbiter:
             for ws in mgr_hist:
                 resident = ws.placement_hist * m._stored_bytes
                 for i, dev in enumerate(m._dev_names):
-                    acc[dev] = acc.get(dev, 0.0) + float(resident[i])
+                    # Physical occupancy: inline-compressed devices hold
+                    # nominal/ratio bytes of this tenant's data, so the
+                    # planner's bin-packing sees effective capacity.
+                    ratio = m.media_ratio.get(dev, 1.0)
+                    acc[dev] = acc.get(dev, 0.0) + float(resident[i]) / ratio
             bytes_by_dev.append({d: b / max(len(mgr_hist), 1) for d, b in acc.items()})
 
         media: Dict[str, float] = {}

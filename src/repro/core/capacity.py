@@ -38,7 +38,6 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import tco
 from repro.core.manager import ManagerConfig, TierScapeManager, make_manager
 
 GIB = 1024**3
@@ -76,6 +75,12 @@ class ServerSpec:
     hbm_gb: float
     host_dram_gb: float
     cxl_gb: float = 0.0
+    # Hardware-compressed CXL expander (inline line compressor): capacity is
+    # RAW media GB — the planner packs *physical* occupancy (fleet_report
+    # already divides resident bytes by the observed line ratio), so the
+    # compressor's effective-capacity multiplier shows up on the demand
+    # side, not as a fudge here.
+    cxl_hw_gb: float = 0.0
     nvme_gb: float = 0.0
     # Decode throughput one server sustains (accesses per profile window —
     # the simulator's demand unit).
@@ -87,6 +92,7 @@ class ServerSpec:
     pcie_window_bytes: float = 25e9
     hbm_window_bytes: float = 100e9
     cxl_window_bytes: float = 48e9
+    cxl_hw_window_bytes: float = 48e9
     nvme_window_bytes: float = 5e9
     # Dollars (relative units, hw.CostSpec scale).
     base_usd: float = 1900.0  # chassis + CPU + accelerator, memory excluded
@@ -107,6 +113,10 @@ class ServerSpec:
             # CXL-attached and NVMe capacity at published relative $/GB
             # points below host DRAM (the ZeroPoint CXL pricing direction).
             + self.cxl_gb * hw.COSTS.usd_per_gb_host * 0.75
+            # Hardware-compressed expander media is cheaper per raw GB
+            # (hw.CostSpec's cxl point); the controller silicon rides in
+            # base_usd of the server configs that carry it.
+            + self.cxl_hw_gb * hw.COSTS.usd_per_gb_cxl
             + self.nvme_gb * 0.08
         )
 
@@ -136,6 +146,9 @@ class ServerSpec:
         if self.cxl_gb > 0:
             cap[MEM + "cxl"] = self.cxl_gb * GIB
             cap[BW + "cxl"] = self.cxl_window_bytes
+        if self.cxl_hw_gb > 0:
+            cap[MEM + "cxl_hw"] = self.cxl_hw_gb * GIB
+            cap[BW + "cxl_hw"] = self.cxl_hw_window_bytes
         if self.nvme_gb > 0:
             cap[MEM + "nvme"] = self.nvme_gb * GIB
             cap[BW + "nvme"] = self.nvme_window_bytes
@@ -153,6 +166,8 @@ SERVERS: Dict[str, ServerSpec] = {
                    base_usd=2100.0, power_kw=0.7),
         ServerSpec("v5e-cxl", hbm_gb=16.0, host_dram_gb=512.0, cxl_gb=1024.0,
                    base_usd=2200.0, power_kw=0.75),
+        ServerSpec("v5e-cxlhw", hbm_gb=16.0, host_dram_gb=512.0,
+                   cxl_hw_gb=1024.0, base_usd=2250.0, power_kw=0.75),
     )
 }
 
@@ -211,14 +226,16 @@ class PlannerConfig:
     """One searched tier configuration.
 
     ``family`` picks the tierset: ``2t`` is the production 2-tier baseline
-    (threshold policy), ``6t`` the paper's 5-tier analytical config, and
+    (threshold policy), ``6t`` the paper's 5-tier analytical config,
     ``split`` the serving KV tierset with a ``warm_bits``/``cold_bits``
-    codec split (the class-major deployment axis). ``fast_fraction`` caps
-    the shared fast tier (placement 0) at that fraction of fleet regions;
-    ``alpha`` is the arbiter/analytical perf-vs-TCO knob.
+    codec split (the class-major deployment axis), and ``cxl`` the 6-tier
+    set that inserts the hardware-compressed CXL expander tier (X1) into
+    the characterized ladder. ``fast_fraction`` caps the shared fast tier
+    (placement 0) at that fraction of fleet regions; ``alpha`` is the
+    arbiter/analytical perf-vs-TCO knob.
     """
 
-    family: str  # "2t" | "6t" | "split"
+    family: str  # "2t" | "6t" | "split" | "cxl"
     alpha: float = 0.5
     fast_fraction: float = 0.5
     warm_bits: int = 8
@@ -233,6 +250,8 @@ class PlannerConfig:
                 f"split{self.warm_bits}{self.cold_bits}"
                 f"-a{self.alpha:.2f}-f{self.fast_fraction:.2f}"
             )
+        if self.family == "cxl":
+            return f"cxl-a{self.alpha:.2f}-f{self.fast_fraction:.2f}"
         return f"6t-a{self.alpha:.2f}-f{self.fast_fraction:.2f}"
 
 
@@ -248,6 +267,18 @@ def default_search_grid() -> List[PlannerConfig]:
             PlannerConfig("split", alpha=0.5, fast_fraction=0.5,
                           warm_bits=wb, cold_bits=cb)
         )
+    return grid
+
+
+def cxl_search_grid() -> List[PlannerConfig]:
+    """The CXL-expanded sweep: the default grid plus the ``cxl`` family's
+    alpha ladder — the configurations only a ``cxl_hw``-equipped server can
+    realize. Additive: the shared prefix keeps the 2T/6T/split points
+    byte-comparable with the default-grid baselines."""
+    grid = default_search_grid()
+    for alpha in (0.9, 0.5, 0.1):
+        for frac in (0.5, 0.25):
+            grid.append(PlannerConfig("cxl", alpha=alpha, fast_fraction=frac))
     return grid
 
 
@@ -280,6 +311,12 @@ def build_arbiter(
                 ts, n_regions, region_bytes,
                 ManagerConfig(policy="analytical", alpha=cfg.alpha), seed=t,
             )
+            for t in range(n_t)
+        ]
+    elif cfg.family == "cxl":
+        managers = [
+            make_manager(f"7T-CX-{cfg.alpha}", n_regions,
+                         region_bytes=region_bytes, seed=t)
             for t in range(n_t)
         ]
     else:

@@ -54,12 +54,20 @@ class CostSpec:
 
     usd_per_gb_hbm: float = 10.0
     usd_per_gb_host: float = 10.0 / 3.0
+    # CXL-attached expander DRAM: commodity DIMMs behind a CXL controller,
+    # priced below the host tier (no per-chip PCIe lane budget, denser
+    # modules). The ZeroPoint-style inline compressor multiplies *effective*
+    # $/byte down further via the tier's measured ratio — that part lives in
+    # the TCO model, not here.
+    usd_per_gb_cxl: float = 10.0 / 4.0
 
     def usd_per_byte(self, media: str) -> float:
         if media == "hbm":
             return self.usd_per_gb_hbm / 1024**3
         if media == "host":
             return self.usd_per_gb_host / 1024**3
+        if media == "cxl":
+            return self.usd_per_gb_cxl / 1024**3
         raise ValueError(f"unknown media {media!r}")
 
 
@@ -73,13 +81,16 @@ FAULT_FIXED_US: float = 1.0
 
 # Pool-manager overhead per access operation (µs). ``slab`` mirrors zbud
 # (simple O(1) slot addressing); ``packed`` mirrors zsmalloc (dense packing,
-# extra index indirection + unaligned gather).
-POOL_ACCESS_US = {"slab": 0.2, "packed": 0.8}
+# extra index indirection + unaligned gather); ``line`` is the
+# hardware-managed layout behind an inline CXL compressor — the controller
+# owns line addressing, so the software pool manager charges nothing.
+POOL_ACCESS_US = {"slab": 0.2, "packed": 0.8, "line": 0.0}
 
 # Fixed media-access setup cost per access operation (µs): HBM reads issue
 # directly; host reads pay PCIe DMA setup + link round-trip (the Optane
-# media-latency analogue of paper §4.1.1).
-MEDIA_FIXED_US = {"hbm": 0.0, "host": 2.0}
+# media-latency analogue of paper §4.1.1); CXL.mem loads are cache-line
+# transactions, cheaper to set up than a PCIe DMA descriptor.
+MEDIA_FIXED_US = {"hbm": 0.0, "host": 2.0, "cxl": 0.6}
 
 # zbud-analogue pair-fill inefficiency: two variable-fit objects per slab
 # page achieve < 100% slot utilization in practice (paper: zbud saving
@@ -89,9 +100,35 @@ SLAB_UTILIZATION = 0.85
 
 # Per-element decode cost in VPU element-ops for each codec (unpack, shift,
 # scale-multiply, cast chains). Mirrors lz4 < lzo < deflate decode cost.
-CODEC_DECODE_OPS = {"none": 0.0, "fp8": 1.0, "int8": 2.0, "int4": 4.0, "int2": 6.0}
-# Encode cost (abs-max reduce + divide + round + pack).
-CODEC_ENCODE_OPS = {"none": 0.0, "fp8": 1.5, "int8": 3.0, "int4": 5.0, "int2": 7.0}
+# ``cxl_hw`` decompresses inline in the memory controller (ZeroPoint-style):
+# the VPU only pays a residual scale-apply, near-zero ops/elem.
+CODEC_DECODE_OPS = {
+    "none": 0.0, "fp8": 1.0, "int8": 2.0, "int4": 4.0, "int2": 6.0,
+    "cxl_hw": 0.1,
+}
+# Encode cost (abs-max reduce + divide + round + pack). The hardware codec's
+# line packing happens in the controller; software only quantizes.
+CODEC_ENCODE_OPS = {
+    "none": 0.0, "fp8": 1.5, "int8": 3.0, "int4": 5.0, "int2": 7.0,
+    "cxl_hw": 0.2,
+}
+
+# --------------------------------------------------------------------------
+# Media-device link specs shared by the MediaDevice presets
+# (``media/devices.py``) and anything else that prices far-memory traffic.
+# One definition per number — the presets must never fork these.
+# --------------------------------------------------------------------------
+# CXL 2.0 x8 expander: asymmetric effective read/write, cache-line
+# transaction setup, controller-level parallelism.
+CXL_LINK_READ_BW: float = 64e9
+CXL_LINK_WRITE_BW: float = 48e9
+CXL_FIXED_LATENCY_S: float = MEDIA_FIXED_US["cxl"] * 1e-6
+CXL_QUEUE_DEPTH: int = 8
+# Datacenter NVMe (PCIe Gen4 drive).
+NVME_READ_BW: float = 7e9
+NVME_WRITE_BW: float = 5e9
+NVME_FIXED_LATENCY_S: float = 10e-6
+NVME_QUEUE_DEPTH: int = 32
 
 
 def media_bw(media: str, chip: ChipSpec = V5E) -> float:
@@ -100,4 +137,6 @@ def media_bw(media: str, chip: ChipSpec = V5E) -> float:
         return chip.hbm_bw
     if media == "host":
         return chip.host_link_bw
+    if media == "cxl":
+        return CXL_LINK_READ_BW
     raise ValueError(f"unknown media {media!r}")

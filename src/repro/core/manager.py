@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import analytical, tco
 from repro.core.telemetry import PEBSNoise, RegionTelemetry
-from repro.core.tiers import TierSet, baseline_2t_tierset, default_tierset
+from repro.core.tiers import TierSet, baseline_2t_tierset, cxl_tierset, default_tierset
 from repro.core.waterfall import WaterfallConfig, waterfall_step
 
 
@@ -139,6 +139,14 @@ class TierScapeManager:
         self._dev_write_bw = np.array([d.write_bw for d in self._devices])
         self._dev_fixed_s = np.array([d.fixed_latency_s for d in self._devices])
         self.media_pressure: Dict[str, float] = {}
+        # Per-device wire ratio for THIS tenant's data on compressed media
+        # (inline hardware compression: nominal stored bytes / bytes actually
+        # moved or resident). 1.0 everywhere until ``note_media_ratio`` feeds
+        # observed line compression at a window boundary. Distinct from the
+        # shared AdaptiveMediaDevice EWMA, which tracks the byte-weighted
+        # tenant *mix* and governs service times; this dict governs how many
+        # wire bytes this tenant's plans are billed for.
+        self.media_ratio: Dict[str, float] = {}
         self._window = 0
         # In-engine would-have-touched mass for host-resident regions (the
         # fused decode kernel's sentinel telemetry). Accumulates within the
@@ -273,6 +281,14 @@ class TierScapeManager:
             self.media_pressure[name] = (
                 (1 - ema) * self.media_pressure.get(name, 0.0) + ema * rho
             )
+
+    def note_media_ratio(self, device: str, ratio: float, ema: float = 0.25) -> None:
+        """Feed back this tenant's observed wire-compression ratio on one
+        backing device (>= 1.0). Window-boundary only — callers must never
+        fold observations mid-window, or replay determinism breaks."""
+        r = max(float(ratio), 1.0)
+        prev = self.media_ratio.get(device, r)
+        self.media_ratio[device] = (1 - ema) * prev + ema * r
 
     def contended_latencies_s(self) -> np.ndarray:
         """Per-placement-index planning latency with queueing inflation.
@@ -430,7 +446,12 @@ class TierScapeManager:
         read op on its source device and a write op on its destination
         device (fixed setup + bytes/bandwidth). Indexes sharing a physical
         device (e.g. both host tiers behind one PCIe link) aggregate — that
-        aggregation is the shared-bandwidth contention the arbiter sees."""
+        aggregation is the shared-bandwidth contention the arbiter sees.
+
+        Devices with an observed wire ratio (``media_ratio``, inline
+        hardware compression) are billed *wire* bytes: nominal stored bytes
+        divided by the tenant's committed ratio. The ratio only moves at
+        window boundaries, so identical plans bill identically on replay."""
         media_bytes: Dict[str, int] = {}
         media_s: Dict[str, float] = {}
         for idx in range(len(self._devices)):
@@ -440,8 +461,9 @@ class TierScapeManager:
             n_ops = int(r_mask.sum()) + int(w_mask.sum())
             if n_ops == 0:
                 continue
-            rb = int(read_b[r_mask].sum())
-            wb = int(write_b[w_mask].sum())
+            ratio = self.media_ratio.get(name, 1.0)
+            rb = int(int(read_b[r_mask].sum()) / ratio)
+            wb = int(int(write_b[w_mask].sum()) / ratio)
             t = (
                 n_ops * float(self._dev_fixed_s[idx])
                 + rb / float(self._dev_read_bw[idx])
@@ -500,8 +522,9 @@ def make_manager(
 
     Names: ``2T-C|2T-M|2T-A`` (DRAM + Google-production single tier),
     ``6T-WF-C|M|A`` (waterfall on DRAM+5 tiers), ``6T-AM-0.9|0.5|0.1``
-    (analytical). Thresholds dict maps C/M/A -> absolute H_th (workload
-    specific, like the paper's Memcached 50/100/250).
+    (analytical), ``7T-CX-0.9|0.5|0.1`` (analytical over DRAM + 5 tiers +
+    the hardware-compressed CXL expander). Thresholds dict maps C/M/A ->
+    absolute H_th (workload specific, like the paper's Memcached 50/100/250).
     """
     thresholds = thresholds or {"C": 50.0, "M": 100.0, "A": 250.0}
     name = config_name.upper()
@@ -520,6 +543,10 @@ def make_manager(
     elif name.startswith("6T-AM-"):
         alpha = float(name.split("AM-")[1])
         ts = default_tierset()
+        cfg = ManagerConfig(policy="analytical", alpha=alpha, window_steps=window_steps)
+    elif name.startswith("7T-CX-"):
+        alpha = float(name.split("CX-")[1])
+        ts = cxl_tierset()
         cfg = ManagerConfig(policy="analytical", alpha=alpha, window_steps=window_steps)
     else:
         raise ValueError(f"unknown config {config_name!r}")

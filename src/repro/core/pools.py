@@ -30,7 +30,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codecs import CODECS
 from repro.core.tiers import TierSpec
 
 

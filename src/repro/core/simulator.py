@@ -26,11 +26,10 @@ time — matching the paper's "perf w.r.t. all-DRAM" axis in Fig. 8.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Callable, Dict, List
 
 import numpy as np
 
-from repro.core import hw
 from repro.core.manager import TierScapeManager
 
 if TYPE_CHECKING:  # runtime import is deferred: repro.media imports
@@ -50,6 +49,13 @@ class Workload:
     # percentages land in a realistic range, like the paper's benchmarks).
     compute_s_per_window: float
     sampler: Callable[[int, np.random.Generator], np.ndarray]
+    # Observed line-compression ratio of this tenant's data on
+    # inline-compressed media (nominal bytes / wire bytes, in [1, 2] for the
+    # cxl_hw line codec). 1.0 = incompressible. Benchmarks measure this from
+    # real encoded payloads (codecs.cxl_line_ratio) and bake it into the
+    # workload; the simulator feeds it to the adaptive devices and managers
+    # at window boundaries only.
+    line_ratio: float = 1.0
 
     def sample_window(self, w: int, rng: np.random.Generator) -> np.ndarray:
         counts = self.sampler(w, rng)
@@ -254,6 +260,41 @@ def replay_plan_media(
         manager.note_media_charges(ws.media_s_by_device, window_s)
 
 
+def _feed_adaptive_media(managers, workloads, media_queues) -> None:
+    """Window-boundary compressibility feedback for adaptive media devices.
+
+    For every inline-compressed device in the shared queue set: observe each
+    tenant's resident nominal-vs-wire bytes (weighted by what is actually
+    placed there), fold the shared device EWMA once (``commit_window`` — the
+    only point the effective bandwidth may move), and update each manager's
+    own wire-ratio view plus the measured ratio of its tiers backed by that
+    device (effective-capacity pricing in Eq. 9-12). Called strictly at
+    window boundaries so in-window service times are replay-deterministic.
+    """
+    from repro.media.devices import adaptive_devices
+
+    adaptive = adaptive_devices(media_queues)
+    if not adaptive:
+        return
+    for m, wl in zip(managers, workloads):
+        ratio = max(float(getattr(wl, "line_ratio", 1.0)), 1.0)
+        nominal_ratios = m.tierset.ratios()
+        for i, dev in enumerate(m._dev_names):
+            if dev not in adaptive:
+                continue
+            if m.history:
+                resident = float(m.history[-1].placement_hist[i]) * float(
+                    m._stored_bytes[i]
+                )
+                if resident > 0:
+                    adaptive[dev].observe(resident, resident / ratio)
+            m.note_media_ratio(dev, ratio)
+            if i >= 1:
+                m.update_measured_ratio(i, nominal_ratios[i] * ratio)
+    for dev in adaptive.values():
+        dev.commit_window()
+
+
 def _prefetch_consume(staged: np.ndarray, counts: np.ndarray):
     """Window start: resolve last window's speculative staging against the
     ground-truth accesses. Clears ``staged`` and returns (free_mask for
@@ -371,6 +412,7 @@ def simulate(
             manager, media_queues, now_s=w * base_s,
             price_contention=price_media_contention, window_s=base_s,
         )
+        _feed_adaptive_media([manager], [workload], media_queues)
         if w >= warmup_windows:
             slowdowns.append(100.0 * fault_overhead_s / base_s)
             savings.append(manager.history[-1].savings_pct)
@@ -533,6 +575,7 @@ def simulate_multitenant(
         arbiter.end_window()
         for m in managers:
             replay_plan_media(m, media_queues, now_s=float(w))
+        _feed_adaptive_media(managers, workloads, media_queues)
         ws = arbiter.history[-1]
         if w >= warmup_windows:
             fleet_save.append(ws.fleet_savings_pct)

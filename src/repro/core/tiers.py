@@ -11,8 +11,13 @@ Mirrors paper §4/§4.1/Table 1-2. A tier is a point in the
                ``packed`` — zsmalloc analogue: dense byte packing (rounded to
                             128B) + index indirection, best density but
                             higher per-access management cost,
-  * media  — ``hbm`` (on-chip, fast, expensive) or ``host`` (host DRAM behind
-             PCIe, 1/3 the $/GB — the paper's DRAM-vs-Optane cost ratio).
+               ``line``   — hardware-managed cache-line layout behind an
+                            inline CXL compressor: 64B-aligned lines, no
+                            software index, zero pool-management cost,
+  * media  — ``hbm`` (on-chip, fast, expensive), ``host`` (host DRAM behind
+             PCIe, 1/3 the $/GB — the paper's DRAM-vs-Optane cost ratio), or
+             ``cxl`` (expander DRAM behind an inline hardware compressor,
+             1/4 the $/GB before the observed line-compression multiplier).
 
 Access latency per block is the sum of media read, pool management, dequant
 compute and a fixed fault overhead; these are the ``Lat_T`` terms of Eq. 8.
@@ -21,13 +26,14 @@ compute and a fixed fault overhead; these are the ``Lat_T`` terms of Eq. 8.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 from repro.core import hw
 from repro.core.codecs import CODECS, Codec
 
 PACKED_ALIGN = 128  # packed pool rounds blocks up to 128B
 PACKED_INDEX_BYTES = 8  # per-block index entry (offset + tier metadata)
+LINE_ALIGN = 64  # hardware line pool stores 64B cache lines
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +79,13 @@ class TierSpec:
         if self.pool == "packed":
             aligned = -(-(payload + scales) // PACKED_ALIGN) * PACKED_ALIGN
             return aligned + PACKED_INDEX_BYTES
+        if self.pool == "line":
+            # Hardware-managed layout: line-aligned payload + scales, no
+            # software index (the controller owns line addressing). This is
+            # the *nominal* footprint; the inline compressor's observed line
+            # narrowing shows up as a measured-ratio override in the TCO
+            # model, not here.
+            return -(-(payload + scales) // LINE_ALIGN) * LINE_ALIGN
         raise ValueError(f"unknown pool {self.pool!r}")
 
     def effective_ratio(self, n_elem: int, src_bytes_per_elem: int = 2) -> float:
@@ -132,7 +145,18 @@ CHARACTERIZED: List[TierSpec] = [
     _T("C11", "PK-I2-HB", "packed", "int2", "hbm"),
     _T("C12", "PK-I2-HO", "packed", "int2", "host"),
 ]
-_BY_ID = {t.tid: t for t in CHARACTERIZED}
+
+# Extension tiers beyond the paper's characterized 12 (registered in the
+# id lookup but kept out of ``characterized()`` so the paper tables stay the
+# paper's). X1 is the hardware-compressed CXL expander (ZeroPoint-style):
+# line pool + inline hw codec on cxl media. It sits between C1 (fast,
+# expensive HBM) and C2 (cheap but PCIe-latency host) on the latency axis,
+# and below both on $/GB once the observed line ratio multiplies effective
+# capacity.
+EXTENSION: List[TierSpec] = [
+    _T("X1", "LN-HW-CX", "line", "cxl_hw", "cxl", media_device="cxl_hw"),
+]
+_BY_ID = {t.tid: t for t in CHARACTERIZED + EXTENSION}
 
 
 def characterized() -> List[TierSpec]:
@@ -208,3 +232,16 @@ def default_tierset(block_elems: int = 2048) -> TierSet:
 def baseline_2t_tierset(block_elems: int = 2048) -> TierSet:
     """DRAM + single compressed tier (Google production config [36])."""
     return TierSet(tiers=(BASELINE_2T,), block_elems=block_elems)
+
+
+# 6T + the hardware-compressed CXL expander, ordered low-latency ->
+# high-TCO-savings: X1 slots in right after C1 (its inline decode makes it
+# faster than every host tier despite the expander hop).
+CXL_SELECTED_IDS = ("C1", "X1", "C2", "C4", "C9", "C12")
+
+
+def cxl_tierset(block_elems: int = 2048) -> TierSet:
+    """DRAM + the 5 selected tiers + the cxl_hw tier (7T evaluation config)."""
+    return TierSet(
+        tiers=tuple(_BY_ID[i] for i in CXL_SELECTED_IDS), block_elems=block_elems
+    )

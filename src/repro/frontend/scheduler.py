@@ -32,9 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.frontend.admission import (
-    ADMIT,
     DEFAULT_CLASSES,
-    QUEUE,
     REFUSE,
     AdmissionController,
     SLAClass,

@@ -25,7 +25,6 @@ path too.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

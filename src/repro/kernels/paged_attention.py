@@ -40,10 +40,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.packing import unpack_int4 as _unpack_int4
+
 # jax.sharding-style API drift: CompilerParams was TPUCompilerParams in 0.4.x.
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
-
-from repro.kernels.packing import unpack_int4 as _unpack_int4
 
 NEG_INF = -1e30
 

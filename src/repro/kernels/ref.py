@@ -54,6 +54,49 @@ def dequant_kv_page(payload: Array, scales: Array, bits: int) -> Array:
     return q * scales[..., None]
 
 
+# -- cxl_hw: inline line-compressed far memory ------------------------------
+# Software quantizes a page to dense int8 (same layout as the int8 codec);
+# the expander's controller narrows each 64-codeword hardware line to 4-bit
+# storage when every value fits int4 range. The engine always reads back the
+# dense int8 view — line_bits only changes stored/wire bytes, never values.
+
+CXL_LINE_ELEMS = 64  # int8 codewords per hardware cache line
+CXL_NARROW_QMAX = 7  # |q| <= 7 -> the line is stored 4-bit
+
+
+def cxl_encode_kv_page(page: Array) -> Tuple[Array, Array, Array]:
+    """page [..., T, KV, hd] -> (payload int8, scales [..., T, KV],
+    line_bits [..., T, KV, hd // CXL_LINE_ELEMS] in {4, 8})."""
+    payload, scales = quant_kv_page(page, 8)
+    return payload, scales, cxl_page_line_bits(payload)
+
+
+def cxl_page_line_bits(payload: Array) -> Array:
+    """Stored width of each hardware line of an int8 payload."""
+    hd = payload.shape[-1]
+    assert hd % CXL_LINE_ELEMS == 0, f"hd {hd} not a multiple of line size"
+    lines = payload.astype(jnp.int32).reshape(
+        *payload.shape[:-1], hd // CXL_LINE_ELEMS, CXL_LINE_ELEMS
+    )
+    narrow = jnp.max(jnp.abs(lines), axis=-1) <= CXL_NARROW_QMAX
+    return jnp.where(narrow, 4, 8).astype(jnp.int32)
+
+
+def cxl_decode_kv_page(payload: Array, scales: Array) -> Array:
+    """Inverse of cxl_encode_kv_page (controller decompression is inline and
+    value-exact, so decode is plain int8 dequant)."""
+    return dequant_kv_page(payload, scales, 8)
+
+
+def cxl_page_line_ratio(line_bits: Array) -> float:
+    """Observed line-compression ratio over a batch of pages: nominal dense
+    payload bits / stored line bits. In [1, 2]."""
+    import numpy as np
+
+    total = int(np.asarray(line_bits, dtype=np.int64).sum())
+    return float(8 * line_bits.size) / float(max(total, 1))
+
+
 def transcode_kv_page(
     payload: Array, scales: Array, src_bits: int, dst_bits: int
 ) -> Tuple[Array, Array]:

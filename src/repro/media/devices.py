@@ -58,10 +58,10 @@ class MediaDevice:
 
 
 # ---------------------------------------------------------------------------
-# Catalog. HBM and host-DRAM-over-PCIe reuse the hw.py constants so the
-# TierSpec latency model and the device model price the same hardware the
-# same way; CXL and NVMe are published-part-class numbers for the swap
-# devices the composable-memory work targets.
+# Catalog. Every preset reuses the hw.py constants so the TierSpec latency
+# model (Eq. 8) and the device model price the same hardware the same way —
+# including the CXL and NVMe swap devices (their numbers used to be forked
+# literals here; they now have one definition in core/hw.py).
 # ---------------------------------------------------------------------------
 
 DEVICES: Dict[str, MediaDevice] = {
@@ -77,15 +77,122 @@ DEVICES: Dict[str, MediaDevice] = {
         ),
         # CXL 2.0 x8-class memory expander: near-PCIe bandwidth, lower setup
         # cost (load/store semantics, no DMA descriptor round-trip).
-        MediaDevice("cxl", 64e9, 48e9, 0.6e-6, queue_depth=8),
+        MediaDevice(
+            "cxl",
+            hw.CXL_LINK_READ_BW,
+            hw.CXL_LINK_WRITE_BW,
+            hw.CXL_FIXED_LATENCY_S,
+            queue_depth=hw.CXL_QUEUE_DEPTH,
+        ),
+        # The same expander behind a ZeroPoint-style inline line compressor:
+        # nominal link numbers here; make_queues wraps this entry in an
+        # AdaptiveMediaDevice whose *effective* bandwidth scales with the
+        # observed compression ratio of the data moving through it.
+        MediaDevice(
+            "cxl_hw",
+            hw.CXL_LINK_READ_BW,
+            hw.CXL_LINK_WRITE_BW,
+            hw.CXL_FIXED_LATENCY_S,
+            queue_depth=hw.CXL_QUEUE_DEPTH,
+        ),
         # Datacenter NVMe (Gen4 x4 class): the deepest, cheapest swap device;
         # long setup, deep queues.
-        MediaDevice("nvme", 7e9, 5e9, 10e-6, queue_depth=32),
+        MediaDevice(
+            "nvme",
+            hw.NVME_READ_BW,
+            hw.NVME_WRITE_BW,
+            hw.NVME_FIXED_LATENCY_S,
+            queue_depth=hw.NVME_QUEUE_DEPTH,
+        ),
     )
 }
 
-# Media string (TierSpec.media) -> default device binding.
-DEFAULT_FOR_MEDIA: Dict[str, str] = {"hbm": "hbm", "host": "host_dram_pcie"}
+# Media string (TierSpec.media) -> default device binding. ``cxl`` media in
+# this repo means the hardware-compressed expander tier.
+DEFAULT_FOR_MEDIA: Dict[str, str] = {
+    "hbm": "hbm",
+    "host": "host_dram_pcie",
+    "cxl": "cxl_hw",
+}
+
+# Catalog names make_queues instantiates as compressibility-adaptive.
+ADAPTIVE_DEVICES = frozenset({"cxl_hw"})
+
+
+class AdaptiveMediaDevice:
+    """A ``MediaDevice`` whose effective bandwidth tracks data compressibility.
+
+    Models an inline hardware compressor on the media link (ZeroPoint-style
+    CXL): when resident data compresses by ``ratio``, each nominal byte costs
+    ``1/ratio`` wire bytes, so effective read/write bandwidth is the base
+    link rate times the ratio.
+
+    Determinism contract: ``observe`` only *accumulates* real encoded sizes —
+    it never changes service times mid-window. ``commit_window`` folds the
+    accumulated observation into the committed ratio via an EWMA at the
+    window boundary, the only point where the estimate (and therefore any
+    service time) may move. Replay of identical submissions with identical
+    boundary commits is bit-identical.
+    """
+
+    def __init__(self, base: MediaDevice, init_ratio: float = 1.0, ema: float = 0.25):
+        if init_ratio < 1.0:
+            raise ValueError("init_ratio must be >= 1.0")
+        self.base = base
+        self.ratio = float(init_ratio)  # committed estimate (boundary-updated)
+        self.ema = float(ema)
+        self._pending_nominal = 0.0
+        self._pending_wire = 0.0
+
+    # -- MediaDevice interface (effective numbers) --------------------------
+    @property
+    def name(self) -> str:
+        return self.base.name
+
+    @property
+    def read_bw(self) -> float:
+        return self.base.read_bw * self.ratio
+
+    @property
+    def write_bw(self) -> float:
+        return self.base.write_bw * self.ratio
+
+    @property
+    def fixed_latency_s(self) -> float:
+        return self.base.fixed_latency_s
+
+    @property
+    def queue_depth(self) -> int:
+        return self.base.queue_depth
+
+    def service_time_s(self, n_bytes: int, write: bool = False) -> float:
+        bw = self.write_bw if write else self.read_bw
+        return self.fixed_latency_s + n_bytes / bw
+
+    def batch_service_time_s(
+        self, n_bytes: int, ops: int = 1, write: bool = False
+    ) -> float:
+        bw = self.write_bw if write else self.read_bw
+        return ops * self.fixed_latency_s + n_bytes / bw
+
+    # -- compressibility feedback -------------------------------------------
+    def observe(self, nominal_bytes: float, wire_bytes: float) -> None:
+        """Record real encoded sizes seen mid-window. Pure accumulation —
+        no effect on any service time until ``commit_window``."""
+        if nominal_bytes < 0 or wire_bytes < 0:
+            raise ValueError("observed byte counts must be non-negative")
+        self._pending_nominal += float(nominal_bytes)
+        self._pending_wire += float(wire_bytes)
+
+    def commit_window(self) -> float:
+        """Window-boundary EWMA fold of the pending observation into the
+        committed ratio. Returns the (possibly unchanged) committed ratio."""
+        if self._pending_wire > 0.0:
+            observed = max(self._pending_nominal / self._pending_wire, 1.0)
+            self.ratio = (1.0 - self.ema) * self.ratio + self.ema * observed
+        self._pending_nominal = 0.0
+        self._pending_wire = 0.0
+        return self.ratio
 
 
 def get(name: str) -> MediaDevice:
@@ -139,5 +246,22 @@ class MediaQueue:
 
 def make_queues(names) -> Dict[str, MediaQueue]:
     """One MediaQueue per distinct device name (shared across callers of one
-    substrate — that sharing IS the contention being modeled)."""
-    return {n: MediaQueue(get(n)) for n in dict.fromkeys(names)}
+    substrate — that sharing IS the contention being modeled). Adaptive
+    catalog entries get a *fresh* ``AdaptiveMediaDevice`` per queue set, so
+    one run's committed ratio can never leak into another run's replay."""
+    queues: Dict[str, MediaQueue] = {}
+    for n in dict.fromkeys(names):
+        dev = get(n)
+        if n in ADAPTIVE_DEVICES:
+            dev = AdaptiveMediaDevice(dev)
+        queues[n] = MediaQueue(dev)
+    return queues
+
+
+def adaptive_devices(queues: Dict[str, MediaQueue]) -> Dict[str, AdaptiveMediaDevice]:
+    """The adaptive devices of a queue set, by name (boundary-commit hook)."""
+    return {
+        n: q.device
+        for n, q in queues.items()
+        if isinstance(q.device, AdaptiveMediaDevice)
+    }

@@ -20,7 +20,7 @@ notes it is the only TierScape surface for attention-free archs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ import re
 from typing import Any, Optional, Tuple  # noqa: F401
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

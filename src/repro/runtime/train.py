@@ -9,15 +9,14 @@ in/out shardings the launcher and the dry-run lower it with.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ParallelConfig
 from repro.models.transformer import Model
 from repro.optim import adamw, tiered_adam
 from repro.optim.adamw import AdamWConfig

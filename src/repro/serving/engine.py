@@ -18,15 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, ParallelConfig, TierScapeRunConfig
+from repro.configs.base import ParallelConfig, TierScapeRunConfig
 from repro.core.manager import ManagerConfig
 from repro.models.transformer import Model, _attn_layer_count
 from repro.runtime import serve as serve_rt
 from repro.serving.kv_cache import (
-    COLD,
-    HOST4,
-    HOST8,
-    WARM,
     ParkedSlot,
     TieredKVCache,
 )

@@ -62,7 +62,7 @@ from repro.core.pools import ClassPartition, SlotAllocator, exchange_slots
 from repro.core.tiers import TierSet, get as get_tier
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.media.devices import make_queues
+from repro.media.devices import adaptive_devices, make_queues
 from repro.media.pipeline import MigrationPipeline
 from repro.media.ringbuf import PinnedRing
 from repro.runtime.serve import TieredKVState, init_tiered_kv_state
@@ -91,18 +91,32 @@ _DEVICE_TIER_IDS = {
 INFLIGHT = -1
 
 
-def kv_tierset(page_elems: int, warm_bits: int = 8, cold_bits: int = 4) -> TierSet:
+def kv_tierset(
+    page_elems: int,
+    warm_bits: int = 8,
+    cold_bits: int = 4,
+    host_device: str = "",
+) -> TierSet:
     """TierSet for a device-pool codec split. Defaults reproduce
     ``KV_TIER_IDS``; same-width splits (e.g. warm_bits=cold_bits=8) pick the
     matching characterized tiers so byte/latency accounting follows the
-    deployed codecs."""
+    deployed codecs. ``host_device`` rebinds the two host tiers onto another
+    media device from the catalog (e.g. ``"cxl_hw"`` for the
+    hardware-compressed CXL expander) without changing their codec/pool
+    identity — payload layout and migration semantics stay byte-identical;
+    only media billing and service times move."""
     ids = (
         _DEVICE_TIER_IDS[("warm", int(warm_bits))],
         _DEVICE_TIER_IDS[("cold", int(cold_bits))],
         "C7",
         "C10",
     )
-    return TierSet(tiers=tuple(get_tier(t) for t in ids), block_elems=page_elems)
+    ts = tuple(get_tier(t) for t in ids)
+    if host_device:
+        ts = ts[:2] + tuple(
+            dataclasses.replace(t, media_device=host_device) for t in ts[2:]
+        )
+    return TierSet(tiers=ts, block_elems=page_elems)
 
 
 @dataclasses.dataclass
@@ -203,6 +217,7 @@ class TieredKVCache:
         prefetch: bool = False,
         prefetch_max_pages: int = 8,
         pool_bits: Optional[Dict[str, int]] = None,
+        host_media_device: str = "",
     ):
         """``tenant_quota`` maps pool name ("warm"/"cold") -> {tenant id ->
         max concurrently held slots}. When a pool carries a quota, every
@@ -218,7 +233,11 @@ class TieredKVCache:
         maps pool name -> codec width (8 or 4) for the device pools,
         default ``{"warm": 8, "cold": 4}``; pools of the same width share
         one codec-class buffer and same-class migrations move no payload
-        bytes."""
+        bytes. ``host_media_device`` rebinds the two host tiers onto a
+        different media-catalog device (e.g. ``"cxl_hw"``): payload layout
+        is untouched, but host-page traffic is billed/serviced on that
+        device, and adaptive devices get fed real encoded sizes at every
+        window boundary."""
         self.cfg = cfg
         self.la = n_attn_layers
         self.bs = batch_slots
@@ -266,8 +285,9 @@ class TieredKVCache:
 
         # Region space: (layer, slot, page) flattened.
         self.n_regions = total_pages
+        self.host_media_device = str(host_media_device)
         self.manager = TierScapeManager(
-            kv_tierset(self.page_elems, wb, cb),
+            kv_tierset(self.page_elems, wb, cb, host_device=self.host_media_device),
             self.n_regions,
             region_bytes=self.page_elems * 2,
             cfg=manager_cfg,
@@ -1583,6 +1603,73 @@ class TieredKVCache:
                             counts[rid] += mass[layer, slot, j]
         return counts
 
+    def _observe_adaptive_media(self) -> None:
+        """Feed compressibility-adaptive media devices real encoded sizes.
+
+        Runs at the window boundary only, after the pipeline has drained —
+        both the serial oracle and the async path reach this point with
+        byte-identical ``host_pages``, so the observations (and therefore
+        the device's post-commit effective bandwidth and the manager's
+        measured ratios) are mode-independent by construction. Mid-window
+        decode steps never call this, honoring the ``AdaptiveMediaDevice``
+        contract that in-window service times are fixed.
+
+        The observation is the real line-compressibility of resident host
+        payloads. The inline compressor is codec-agnostic — it sees byte
+        streams, and narrows any 64-byte hardware line whose bytes (as
+        two's-complement codewords) fit int4 range — so int8 and packed
+        int4 payloads both narrow exactly when their content does (e.g.
+        zero pad-tail pages halve; dense full-range pages don't). Scales
+        ride uncompressed."""
+        adaptive = adaptive_devices(self.media_queues)
+        if not adaptive:
+            return
+        for name, dev in adaptive.items():
+            levels = [
+                lvl for lvl in (HOST8, HOST4) if self._dev_names[lvl] == name
+            ]
+            if not levels:
+                dev.commit_window()
+                continue
+            nominal = 0
+            wire = 0
+            for lvl in levels:
+                rids = np.nonzero((self.physical == lvl) & self._page_exists)[0]
+                for rid in rids:
+                    kp, ks, vp, vs = self.host_pages[int(rid)]
+                    for pay in (kp, vp):
+                        b = int(pay.size) * int(pay.dtype.itemsize)
+                        nominal += b
+                        q = np.ascontiguousarray(pay).reshape(-1).view(np.int8)
+                        n_lines = q.size // kref.CXL_LINE_ELEMS
+                        head = q[: n_lines * kref.CXL_LINE_ELEMS]
+                        if n_lines:
+                            lines = head.reshape(-1, kref.CXL_LINE_ELEMS)
+                            narrow = (
+                                np.abs(lines.astype(np.int32)).max(axis=1)
+                                <= kref.CXL_NARROW_QMAX
+                            )
+                            n_narrow = int(narrow.sum())
+                            wire += (
+                                n_narrow * (kref.CXL_LINE_ELEMS // 2)
+                                + (n_lines - n_narrow) * kref.CXL_LINE_ELEMS
+                            )
+                        wire += q.size - n_lines * kref.CXL_LINE_ELEMS
+                    for sc in (ks, vs):
+                        b = int(sc.size) * int(sc.dtype.itemsize)
+                        nominal += b
+                        wire += b
+            if nominal > 0:
+                dev.observe(float(nominal), float(wire))
+                ratio = float(nominal) / float(max(wire, 1))
+                self.manager.note_media_ratio(name, ratio)
+                nominal_ratios = self.manager.tierset.ratios()
+                for lvl in levels:
+                    self.manager.update_measured_ratio(
+                        lvl, nominal_ratios[lvl] * ratio
+                    )
+            dev.commit_window()
+
     # --------------------------------------------------------- window logic
     def end_window(self):
         """Run the placement model over existing pages and execute the plan.
@@ -1602,6 +1689,7 @@ class TieredKVCache:
             # Speculation meets reality: finish staged speculative cohorts
             # into the held store before the plan is computed.
             self.pipeline.finish_speculative()
+        self._observe_adaptive_media()
         plan = self.manager.end_window()
         self._prefetch_window_emitted = False
         if plan.regions.size == 0:

@@ -5,7 +5,6 @@ with the parallel forward."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 import repro.configs as configs

@@ -28,7 +28,7 @@ from repro.core.capacity import (
 )
 from repro.core.tiers import default_tierset
 
-from proptest import cases, draw_choice, draw_float, draw_int
+from proptest import cases, draw_float, draw_int
 
 
 # ---------------------------------------------------------------------------

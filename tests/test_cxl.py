@@ -1,0 +1,340 @@
+"""Hardware-compressed CXL tier: codec/kernel parity, the X1 tier spec,
+compressibility-adaptive media (EWMA boundary-update contract), seeded
+queue-replay determinism for every device preset, and async-vs-serial
+kv-cache equivalence with the cxl_hw device bound to the host tiers."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import capacity, codecs, hw
+from repro.core.codecs import CODECS
+from repro.core.manager import ManagerConfig
+from repro.core.tiers import (
+    CXL_SELECTED_IDS,
+    LINE_ALIGN,
+    characterized,
+    cxl_tierset,
+    get as get_tier,
+)
+from repro.kernels import ref as kref
+from repro.kernels.cxl_line import cxl_decode_pages, cxl_encode_pages
+from repro.media.devices import (
+    ADAPTIVE_DEVICES,
+    DEFAULT_FOR_MEDIA,
+    DEVICES,
+    AdaptiveMediaDevice,
+    adaptive_devices,
+    get as get_device,
+    make_queues,
+)
+from repro.serving.kv_cache import COLD, HOST4, HOST8, WARM, TieredKVCache
+
+from proptest import cases, draw_choice, draw_int
+from test_migration import CFG, assert_same_state, fill_cache
+
+
+# ---------------------------------------------------------------------------
+# tier spec + codec point
+# ---------------------------------------------------------------------------
+
+
+def test_x1_tier_spec_and_cxl_tierset():
+    x1 = get_tier("X1")
+    assert (x1.pool, x1.codec_name, x1.media) == ("line", "cxl_hw", "cxl")
+    assert x1.device.name == "cxl_hw"
+    # Extension tiers never leak into the paper's characterized table.
+    assert all(t.tid != "X1" for t in characterized())
+    assert len(characterized()) == 12
+    # Line pool: nominal footprint is line-aligned, no software index.
+    sb = x1.stored_bytes(2048)
+    assert sb % LINE_ALIGN == 0
+    assert 1.0 < x1.effective_ratio(2048) <= 2.0
+    # 7T evaluation set: DRAM + 6 tiers, X1 ordered right after C1.
+    ts = cxl_tierset(2048)
+    assert tuple(t.tid for t in ts.tiers) == CXL_SELECTED_IDS
+    assert ts.media_devices()[2].name == "cxl_hw"
+    lats, ratios = ts.latencies_s(), ts.ratios()
+    assert lats[0] == 0.0 and all(v > 0 for v in lats[1:])
+    # Inline decode makes X1 faster than every host-media tier.
+    host_lats = [
+        lats[i + 1] for i, t in enumerate(ts.tiers) if t.media == "host"
+    ]
+    assert lats[2] < min(host_lats)
+    assert all(r >= 1.0 for r in ratios)
+
+
+def test_cxl_codec_roundtrip_and_line_ratio():
+    codec = CODECS["cxl_hw"]
+    assert codec.bits_per_elem == 8.0
+    assert codec.group == codecs.GROUP["cxl_hw"] == 512
+    # Near-zero decode cost is the hardware tier's defining property.
+    assert codec.decode_ops_per_elem < CODECS["int8"].decode_ops_per_elem
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, 4 * codec.group).astype(np.float32)
+    enc = codec.encode(jnp.asarray(x, jnp.bfloat16))
+    dec = np.asarray(codec.decode(enc, x.shape, jnp.float32))
+    # int8 quant: error bounded by half a codeword step per scale group.
+    step = np.abs(x).reshape(-1, codec.group).max(axis=1) / 127.0
+    err = np.abs(dec - np.asarray(jnp.asarray(x, jnp.bfloat16), np.float32))
+    assert (err.reshape(-1, codec.group).max(axis=1) <= step + 1e-6).all()
+    # Line ratio is data-dependent: unit gaussian saturates int8 codewords
+    # (ratio ~1), small-magnitude data narrows every line (ratio = 2).
+    assert codecs.cxl_line_ratio(enc.payload) == pytest.approx(1.0, abs=0.05)
+    small = x * 1e-3
+    small[:: codec.group] = 1.0  # pin each scale group's amax
+    enc_s = codec.encode(jnp.asarray(small, jnp.bfloat16))
+    assert codecs.cxl_line_ratio(enc_s.payload) > 1.5
+    wire = codecs.cxl_wire_bytes(enc_s.payload, enc_s.scales)
+    nominal = codec.compressed_bytes(small.size)
+    assert wire < nominal
+
+
+def test_cxl_kernel_parity_vs_ref_oracle():
+    rng = np.random.default_rng(1)
+    p, t, kv, hd = 3, 4, 2, 2 * kref.CXL_LINE_ELEMS
+    pages = rng.normal(0, 1, (p, t, kv, hd)).astype(np.float32)
+    # Page 0's second hardware line is tiny relative to the row amax, so its
+    # codewords fit int4 range and the controller narrows it; page 1's tail
+    # lines are all-zero (pad tail) and narrow too.
+    pages[0, :, :, kref.CXL_LINE_ELEMS:] *= 1e-3
+    pages[1, :, :, kref.CXL_LINE_ELEMS:] = 0.0
+    x = jnp.asarray(pages, jnp.bfloat16)
+    payload, scales, bits = cxl_encode_pages(x, interpret=True)
+    rp, rs, rb = kref.cxl_encode_kv_page(x)
+    np.testing.assert_array_equal(np.asarray(payload), np.asarray(rp))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(rs), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(rb))
+    assert set(np.unique(np.asarray(bits))) <= {4, 8}
+    nb = np.asarray(bits)
+    assert (nb[0, :, :, 1] == 4).all() and (nb[0, :, :, 0] == 8).all()
+    assert (nb[1, :, :, 1] == 4).all()
+    dec = cxl_decode_pages(payload, scales, interpret=True)
+    ref_dec = kref.cxl_decode_kv_page(rp, rs)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref_dec), rtol=1e-6)
+    # Controller narrowing changes stored bytes only, never values: the
+    # observed ratio over these pages exceeds 1 while decode stays exact.
+    assert kref.cxl_page_line_ratio(bits) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# media presets: hw.py constants + seeded replay determinism (every preset)
+# ---------------------------------------------------------------------------
+
+
+def test_presets_share_hw_constants():
+    cxl = DEVICES["cxl"]
+    assert cxl.read_bw == hw.CXL_LINK_READ_BW
+    assert cxl.write_bw == hw.CXL_LINK_WRITE_BW
+    assert cxl.fixed_latency_s == hw.CXL_FIXED_LATENCY_S
+    assert cxl.queue_depth == hw.CXL_QUEUE_DEPTH
+    # The hardware-compressed expander shares the same physical link.
+    hwd = DEVICES["cxl_hw"]
+    assert (hwd.read_bw, hwd.write_bw, hwd.fixed_latency_s, hwd.queue_depth) == (
+        cxl.read_bw, cxl.write_bw, cxl.fixed_latency_s, cxl.queue_depth
+    )
+    nvme = DEVICES["nvme"]
+    assert nvme.read_bw == hw.NVME_READ_BW
+    assert nvme.write_bw == hw.NVME_WRITE_BW
+    assert nvme.fixed_latency_s == hw.NVME_FIXED_LATENCY_S
+    assert nvme.queue_depth == hw.NVME_QUEUE_DEPTH
+    host = DEVICES["host_dram_pcie"]
+    assert host.read_bw == hw.V5E.host_link_bw
+    assert host.fixed_latency_s == hw.MEDIA_FIXED_US["host"] * 1e-6
+    assert DEVICES["hbm"].read_bw == hw.V5E.hbm_bw
+    assert DEFAULT_FOR_MEDIA["cxl"] == "cxl_hw"
+    assert ADAPTIVE_DEVICES <= set(DEVICES)
+
+
+def test_queue_replay_byte_identical_every_preset():
+    """Seeded property: for every catalog preset — including the adaptive
+    cxl_hw device with mid-window observes and boundary commits interleaved
+    — two fresh queue sets replaying the same submission sequence produce
+    byte-identical (start, done) schedules and cumulative accounting."""
+    names = sorted(DEVICES)
+    for i, rng in cases(24):
+        name = draw_choice(rng, names)
+        n_ops = draw_int(rng, 4, 24)
+        seq = []
+        now = 0.0
+        for _ in range(n_ops):
+            now += draw_int(rng, 0, 100) * 1e-6
+            seq.append((
+                draw_int(rng, 1, 1 << 22),  # bytes
+                now,
+                draw_int(rng, 0, 1) == 1,  # write
+                draw_int(rng, 1, 4),  # ops
+                draw_int(rng, 0, 3),  # adaptive action selector
+            ))
+
+        def run():
+            q = make_queues([name])[name]
+            out = []
+            for n_bytes, t, write, ops, action in seq:
+                out.append(q.submit(n_bytes, now=t, write=write, ops=ops))
+                if isinstance(q.device, AdaptiveMediaDevice):
+                    if action == 1:
+                        q.device.observe(2.0 * n_bytes, float(n_bytes))
+                    elif action == 2:
+                        q.device.observe(2.0 * n_bytes, float(n_bytes))
+                        q.device.commit_window()
+            return out, (q.busy_s, q.queue_wait_s, q.bytes_total, q.ops)
+
+        a, b = run(), run()
+        assert a == b  # exact float equality: replay is bit-identical
+
+
+# ---------------------------------------------------------------------------
+# adaptive device: EWMA boundary-update contract
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_device_validation():
+    base = get_device("cxl_hw")
+    with pytest.raises(ValueError):
+        AdaptiveMediaDevice(base, init_ratio=0.5)
+    dev = AdaptiveMediaDevice(base)
+    with pytest.raises(ValueError):
+        dev.observe(-1.0, 0.0)
+    # make_queues wraps adaptive entries fresh each call — committed state
+    # never leaks between runs.
+    q1 = make_queues(["cxl_hw", "nvme"])
+    q2 = make_queues(["cxl_hw"])
+    assert isinstance(q1["cxl_hw"].device, AdaptiveMediaDevice)
+    assert q1["cxl_hw"].device is not q2["cxl_hw"].device
+    assert not isinstance(q1["nvme"].device, AdaptiveMediaDevice)
+    assert set(adaptive_devices(q1)) == {"cxl_hw"}
+
+
+def test_observe_is_pure_until_commit_window():
+    """Mid-window observes must not move any service time; the EWMA folds
+    exactly once, at the boundary."""
+    dev = adaptive_devices(make_queues(["cxl_hw"]))["cxl_hw"]
+    n = 1 << 20
+    before = (dev.service_time_s(n), dev.service_time_s(n, write=True),
+              dev.batch_service_time_s(n, ops=3), dev.read_bw, dev.ratio)
+    for _ in range(5):
+        dev.observe(2e6, 1e6)  # ratio-2 data, five mid-window observations
+    after = (dev.service_time_s(n), dev.service_time_s(n, write=True),
+             dev.batch_service_time_s(n, ops=3), dev.read_bw, dev.ratio)
+    assert before == after  # bit-identical: observation is pure accumulation
+    committed = dev.commit_window()
+    # EWMA fold: 0.75 * 1.0 + 0.25 * 2.0.
+    assert committed == pytest.approx(1.25)
+    assert dev.read_bw == pytest.approx(get_device("cxl_hw").read_bw * 1.25)
+    assert dev.service_time_s(n) < before[0]
+    # An empty window leaves the committed ratio untouched.
+    assert dev.commit_window() == committed
+    # Incompressible observations can only pull the ratio back toward 1,
+    # never below it.
+    for _ in range(50):
+        dev.observe(1e6, 4e6)
+        dev.commit_window()
+    assert dev.ratio >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# async == serial with cxl_hw host tiers, at 2/3/4-tier migration spans
+# ---------------------------------------------------------------------------
+
+
+def make_cxl_cache(async_migration=False):
+    return TieredKVCache(
+        CFG, 2, 2, 8, 64, recent_window=16,
+        manager_cfg=ManagerConfig(policy="analytical", alpha=0.5, window_steps=4),
+        warm_frac=0.5, async_migration=async_migration, ring_slots=8,
+        host_media_device="cxl_hw",
+    )
+
+
+def test_async_matches_serial_oracle_with_cxl_tiers():
+    """With the adaptive cxl_hw device bound to the host tiers, the async
+    pipeline must stay bit-identical to the serial oracle across migration
+    spans of 2, 3 and 4 tiers — the ratio-EWMA contract (observe mid-window
+    is pure; commits happen after the drain at the boundary in both modes)
+    is exactly what makes this hold."""
+    spans = {2: (HOST8, HOST4), 3: (COLD, HOST8, HOST4),
+             4: (WARM, COLD, HOST8, HOST4)}
+    for i, rng in cases(6):
+        tiers = spans[draw_choice(rng, sorted(spans))]
+        serial, asyn = make_cxl_cache(), make_cxl_cache(async_migration=True)
+        n_pages = draw_int(rng, 6, serial.n_regions)
+        fill_seed = draw_int(rng, 0, 2**31 - 1)
+        fill_cache(serial, np.random.default_rng(fill_seed), n_pages)
+        fill_cache(asyn, np.random.default_rng(fill_seed), n_pages)
+        for _ in range(draw_int(rng, 1, 3)):
+            live = np.where(serial._page_exists)[0]
+            m = draw_int(rng, 1, len(live))
+            rids = rng.choice(live, size=m, replace=False)
+            dsts = np.array(
+                [rng.choice([t for t in tiers if t != serial.physical[r]]
+                            or [tiers[0]]) for r in rids], np.int64)
+            serial.migrate_batch(rids, dsts)
+            queued = asyn.pipeline.submit(asyn.plan_cohorts(rids, dsts))
+            ticks = 0
+            while asyn.pipeline.busy:
+                asyn.pipeline.tick()
+                ticks += 1
+                assert ticks < 10 * queued + 50, "pipeline wedged"
+            assert_same_state(serial, asyn)
+
+
+def test_window_boundary_ratio_updates_mode_independent():
+    """Full end_window path: adaptive-ratio observations are fed after the
+    drain in both modes, so placements, measured ratios and the committed
+    device ratio all match between serial and async runs."""
+
+    def run(async_migration):
+        cache = make_cxl_cache(async_migration=async_migration)
+        rng = np.random.default_rng(7)
+        coords = [(la, sl, pg) for la in range(cache.la)
+                  for sl in range(cache.bs) for pg in range(cache.max_pages)][:20]
+        kv, hd = CFG.n_kv_heads, CFG.head_dim_()
+        k = rng.normal(0, 1, (len(coords), cache.pt, kv, hd)).astype(np.float32)
+        k[10:] = 0.0  # pad-tail pages: the compressible half
+        cache.append_pages(coords, jnp.asarray(k), jnp.asarray(k.copy()))
+        for w in range(4):
+            counts = np.zeros(cache.n_regions)
+            counts[: 6 + 2 * w] = np.linspace(9.0, 1.0, 6 + 2 * w)
+            cache.manager.record_access_counts(counts)
+            cache.end_window()
+            while cache.pipeline.busy:
+                cache.pipeline.tick()
+        dev = adaptive_devices(cache.media_queues)["cxl_hw"]
+        return (cache.physical.copy(), dev.ratio,
+                dict(cache.manager.media_ratio),
+                cache.manager.measured_ratios.copy())
+
+    ph_s, ratio_s, mr_s, meas_s = run(False)
+    ph_a, ratio_a, mr_a, meas_a = run(True)
+    np.testing.assert_array_equal(ph_s, ph_a)
+    assert ratio_s == ratio_a  # bit-identical EWMA trajectory
+    assert mr_s == mr_a
+    np.testing.assert_array_equal(meas_s, meas_a)
+    # The KV pages are real data, so the device actually learned something.
+    assert ratio_s > 1.0
+
+
+# ---------------------------------------------------------------------------
+# capacity planner: cxl family + server spec
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_cxl_server_and_search_grid():
+    spec = capacity.get_server("v5e-cxlhw")
+    assert spec.cxl_hw_gb > 0
+    base = capacity.get_server("v5e-base")
+    # Raw expander media is priced at the CXL $/GB, on top of the base BOM.
+    assert spec.purchase_usd() > base.purchase_usd()
+    cap = spec.capacity_vector()
+    assert "mem:cxl_hw" in cap and "bw:cxl_hw" in cap
+    assert "mem:cxl_hw" not in base.capacity_vector()
+    grid = capacity.cxl_search_grid()
+    names = [c.name for c in grid]
+    assert names[: len(capacity.default_search_grid())] == [
+        c.name for c in capacity.default_search_grid()
+    ]
+    cxl_cfgs = [c for c in grid if c.family == "cxl"]
+    assert len(cxl_cfgs) == 6
+    assert all(c.name.startswith("cxl-a") for c in cxl_cfgs)

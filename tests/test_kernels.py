@@ -8,7 +8,6 @@ attention partials are compared at f32 accumulation tolerance.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref

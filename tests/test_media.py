@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, TierScapeRunConfig
 from repro.core.arbiter import BudgetArbiter, TenantSpec
 from repro.core.manager import ManagerConfig, make_manager
-from repro.media.devices import DEVICES, MediaQueue, get as get_device, make_queues
+from repro.media.devices import DEVICES, MediaQueue, get as get_device
 from repro.media.ringbuf import PinnedRing
 from repro.serving.kv_cache import COLD, HOST4, HOST8, WARM, TieredKVCache
 

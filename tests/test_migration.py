@@ -231,7 +231,6 @@ def test_end_window_reconciles_physical_with_plan():
 
 
 def test_batched_dispatches_at_least_5x_fewer_at_256_pages():
-    rng = np.random.default_rng(3)
     a = make_cache(layers=4, slots=4, page_tokens=8, max_seq=128, warm_frac=1.0)
     b = make_cache(layers=4, slots=4, page_tokens=8, max_seq=128, warm_frac=1.0)
     assert a.n_regions == 256

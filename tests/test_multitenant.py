@@ -15,7 +15,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import simulator, tco
+from repro.core import simulator
 from repro.core.arbiter import BudgetArbiter, TenantSpec
 from repro.core.manager import ManagerConfig, make_manager
 from repro.core.pools import SlotAllocator, TenantLedger

@@ -36,7 +36,6 @@ def test_adamw_descends():
 
 
 def test_adamw_grad_clip():
-    params = {"w": jnp.zeros((8,))}
     grads = {"w": jnp.full((8,), 1e6)}
     clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
     assert float(adamw.global_norm(clipped)) <= 1.0 + 1e-5

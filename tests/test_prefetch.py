@@ -8,14 +8,13 @@ async_migration default flip."""
 import numpy as np
 import pytest
 
-import jax.numpy as jnp
 
 from repro.configs.base import TierScapeRunConfig
 from repro.core import simulator
 from repro.core.arbiter import BudgetArbiter, TenantSpec
 from repro.core.manager import ManagerConfig, make_manager
 from repro.media.ringbuf import PinnedRing
-from repro.serving.kv_cache import COLD, HOST4, HOST8, WARM, TieredKVCache
+from repro.serving.kv_cache import HOST4, TieredKVCache
 
 from test_migration import CFG, assert_same_state, check_table_invariants, fill_cache
 

@@ -12,7 +12,7 @@ import repro.configs as configs
 from repro.configs.base import ParallelConfig
 from repro.launch.mesh import make_abstract_mesh, make_mesh
 from repro.models import Model
-from repro.models.inputs import make_train_batch, train_batch_spec
+from repro.models.inputs import make_train_batch
 from repro.optim import adamw
 from repro.roofline import hlo_stats
 from repro.runtime import sharding as shr

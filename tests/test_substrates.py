@@ -6,7 +6,6 @@ import time
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
